@@ -1,0 +1,66 @@
+//! End-to-end driver (experiment E7): train a byte-level transformer LM —
+//! whose attention runs through the SparkAttention fused kernels, forward
+//! *and* backward — on a synthetic structured corpus, and log the loss
+//! curve.  All compute is the AOT `train_step` HLO; Python is not involved.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example train_encoder -- [steps]
+//! ```
+//!
+//! The run recorded in EXPERIMENTS.md §E7 used the default 300 steps.
+
+use anyhow::{Context, Result};
+use sparkattention::config::TrainConfig;
+use sparkattention::coordinator::Trainer;
+use sparkattention::runtime::Engine;
+
+fn main() -> Result<()> {
+    sparkattention::logging::init();
+    let steps: usize = std::env::args().nth(1)
+        .map(|s| s.parse().expect("steps must be an integer"))
+        .unwrap_or(300);
+    let dir = std::env::var("SPARK_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".into());
+
+    let engine = Engine::new(&dir).context("run `make artifacts` first")?;
+    let meta = engine.manifest().get("train_step")?;
+    println!("model: {} params, {} layers, d_model {}, seq {}, batch {}",
+             meta.attr_i64("param_count").unwrap_or(0),
+             meta.attr_i64("num_layers").unwrap_or(0),
+             meta.attr_i64("d_model").unwrap_or(0),
+             meta.attr_i64("seq").unwrap_or(0),
+             meta.attr_i64("batch").unwrap_or(0));
+
+    let cfg = TrainConfig {
+        artifact_dir: dir,
+        steps,
+        seed: 42,
+        log_every: 10,
+        checkpoint_every: 100,
+        checkpoint_dir: "checkpoints".into(),
+        corpus_tokens: 1 << 19,
+        ..TrainConfig::default()
+    };
+    let mut trainer = Trainer::new(&engine, cfg);
+    let out = trainer.run()?;
+
+    // Loss curve, decimated to ≤30 lines for the log.
+    println!("\nloss curve (step, loss):");
+    let stride = (out.losses.len() / 30).max(1);
+    for (i, l) in out.losses.iter().enumerate() {
+        if i % stride == 0 || i == out.losses.len() - 1 {
+            let bar_len = ((l / 6.0) * 60.0) as usize;
+            println!("  {i:4}  {l:7.4}  {}", "#".repeat(bar_len.min(70)));
+        }
+    }
+    println!("\nuniform-byte entropy ln(256) = {:.3}", (256f64).ln());
+    println!("loss {:.4} → {:.4} (tail-10 mean {:.4}) over {} steps",
+             out.first_loss(), out.last_loss(), out.tail_mean(10),
+             out.steps);
+    println!("throughput: {:.0} tokens/s ({:.2} s/step)",
+             out.tokens_per_step as f64 / out.mean_step_seconds,
+             out.mean_step_seconds);
+    anyhow::ensure!(out.tail_mean(10) < out.first_loss(),
+                    "loss did not improve — training is broken");
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time compile path: JAX model + Pallas kernels, AOT-lowered to HLO.
+
+Nothing in this package runs at serving/training time — `aot.py` lowers the
+artifact matrix once (``make artifacts``) and the Rust coordinator executes
+the resulting HLO text via PJRT.
+"""

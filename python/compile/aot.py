@@ -1,0 +1,488 @@
+"""AOT export: lower the artifact matrix to HLO text + manifest.json.
+
+``make artifacts`` runs this once at build time; the Rust coordinator then
+executes the artifacts through PJRT with **no Python on the request path**.
+
+Interchange format is HLO *text*, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifact kinds
+  mha_fwd        (seed, q, k, v)                  → (o, lse)      fused
+  mha_fwd_unf    (q, k, v, seed)                  → (o,)          baseline
+  mha_bwd        (seed, q, k, v, o, lse, do)      → (dq, dk, dv)  fused
+  mha_fwdbwd_unf (q, k, v, do, seed)              → (dq, dk, dv)  baseline
+  encoder_fwd    (params…, x, seed)               → (y,)
+  lm_init        ()                               → params ∥ opt leaves
+  train_step     (params…, m…, v…, step, tokens, seed)
+                                                  → (params'…, m'…, v'…, loss)
+
+Profiles: ``standard`` (CPU-scale perf grid), ``accuracy`` (§4.2.3 shapes,
+dropout 0), ``train`` (lm_init + train_step), ``e2e`` (Fig 12 encoder
+variants), ``paper`` (paper-scale shapes — export only; execution is gated
+by the Rust memory budget).  Default builds standard+accuracy+train+e2e.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import json
+import os
+import re
+import sys
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+from .kernels import flash_bwd, flash_fwd, layouts, naive, ref
+
+DTYPE_NAMES = {
+    jnp.dtype("bfloat16"): "bf16",
+    jnp.dtype("float32"): "f32",
+    jnp.dtype("float64"): "f64",
+    jnp.dtype("int32"): "s32",
+    jnp.dtype("uint32"): "u32",
+    jnp.dtype("bool"): "pred",
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+@dataclasses.dataclass
+class Artifact:
+    """One HLO entry point plus the metadata the Rust side needs."""
+
+    name: str
+    kind: str
+    fn: Callable                       # positional-arg function of arrays
+    args: list[jax.ShapeDtypeStruct]   # flat example inputs, in call order
+    input_names: list[str]
+    attrs: dict                        # static scalars (n, d, bh, causal, …)
+
+    def lower(self) -> tuple[str, list[dict], list[dict]]:
+        # keep_unused: a dropout-0 variant still takes its seed parameter so
+        # every artifact of a kind shares one calling convention in Rust.
+        lowered = jax.jit(self.fn, keep_unused=True).lower(*self.args)
+        text = to_hlo_text(lowered)
+        ins = [
+            {"name": nm, "shape": list(a.shape), "dtype": DTYPE_NAMES[a.dtype]}
+            for nm, a in zip(self.input_names, self.args)
+        ]
+        out_avals = jax.eval_shape(self.fn, *self.args)
+        leaves = jax.tree_util.tree_leaves(out_avals)
+        outs = [
+            {"name": f"out{i}", "shape": list(a.shape),
+             "dtype": DTYPE_NAMES[jnp.dtype(a.dtype)]}
+            for i, a in enumerate(leaves)
+        ]
+        return text, ins, outs
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _mha_attrs(bh, n, d, causal, dropout, acc, fused, backward=False):
+    blk = layouts.choose_blocks(n, d)
+    return {
+        "bh": bh, "n": n, "d": d, "causal": causal, "dropout": dropout,
+        "acc": acc, "fused": fused,
+        "block_q": blk.block_q, "block_k": blk.block_k,
+        "vmem_bytes": blk.vmem_bytes,
+        "mxu_utilization": round(blk.mxu_utilization, 4),
+        "flops": ref.attention_flops(bh, n, d, causal=causal,
+                                     backward=backward),
+        "hbm_bytes_fused": layouts.hbm_bytes_fused_fwd(bh, n, d),
+        "hbm_bytes_unfused": layouts.hbm_bytes_unfused_fwd(bh, n, d),
+        "peak_bytes_unfused": layouts.peak_bytes_unfused(bh, n, d),
+    }
+
+
+# --------------------------------------------------------------------------
+# Artifact builders
+# --------------------------------------------------------------------------
+
+def mha_fwd_artifact(*, bh, n, d, causal, dropout, acc,
+                     block_q=None, block_k=None, tag="") -> Artifact:
+    def fn(seed, q, k, v):
+        return flash_fwd.flash_fwd(q, k, v, seed, causal=causal,
+                                   dropout_rate=dropout, acc=acc,
+                                   block_q=block_q, block_k=block_k)
+
+    c = "c1" if causal else "c0"
+    dt = jnp.bfloat16
+    attrs = _mha_attrs(bh, n, d, causal, dropout, acc, True)
+    if block_q is not None:
+        attrs["block_q"] = block_q
+        attrs["block_k"] = block_k
+        attrs["vmem_bytes"] = layouts.vmem_footprint(block_q, block_k, d)
+        attrs["mxu_utilization"] = round(
+            layouts.mxu_utilization(block_q, block_k, d), 4)
+    return Artifact(
+        name=(f"mha_fwd_fused_{acc}_d{d}_n{n}_bh{bh}_{c}"
+              f"_p{int(dropout*100)}{tag}"),
+        kind="mha_fwd_ablation" if tag else "mha_fwd", fn=fn,
+        args=[_sds((1,), jnp.float32)] + [_sds((bh, n, d), dt)] * 3,
+        input_names=["seed", "q", "k", "v"],
+        attrs=attrs)
+
+
+def mha_fwd_unfused_artifact(*, bh, n, d, causal, dropout) -> Artifact:
+    def fn(seed, q, k, v):
+        return (naive.mha_fwd_unfused(q, k, v, seed, causal=causal,
+                                      dropout_rate=dropout),)
+
+    c = "c1" if causal else "c0"
+    dt = jnp.bfloat16
+    return Artifact(
+        name=f"mha_fwd_unfused_d{d}_n{n}_bh{bh}_{c}_p{int(dropout*100)}",
+        kind="mha_fwd_unf", fn=fn,
+        args=[_sds((1,), jnp.float32)] + [_sds((bh, n, d), dt)] * 3,
+        input_names=["seed", "q", "k", "v"],
+        attrs=_mha_attrs(bh, n, d, causal, dropout, "f32", False))
+
+
+def mha_bwd_artifact(*, bh, n, d, causal, dropout, acc) -> Artifact:
+    def fn(seed, q, k, v, o, lse, do):
+        return flash_bwd.flash_bwd(q, k, v, o, lse, do, seed, causal=causal,
+                                   dropout_rate=dropout, acc=acc)
+
+    c = "c1" if causal else "c0"
+    dt = jnp.bfloat16
+    t = _sds((bh, n, d), dt)
+    return Artifact(
+        name=f"mha_bwd_fused_{acc}_d{d}_n{n}_bh{bh}_{c}_p{int(dropout*100)}",
+        kind="mha_bwd", fn=fn,
+        args=[_sds((1,), jnp.float32), t, t, t, t,
+              _sds((bh, n), jnp.float32), t],
+        input_names=["seed", "q", "k", "v", "o", "lse", "do"],
+        attrs=_mha_attrs(bh, n, d, causal, dropout, acc, True,
+                         backward=True))
+
+
+def mha_fwdbwd_unfused_artifact(*, bh, n, d, causal, dropout) -> Artifact:
+    def fn(seed, q, k, v, do):
+        return naive.mha_bwd_unfused(q, k, v, do, seed, causal=causal,
+                                     dropout_rate=dropout)
+
+    c = "c1" if causal else "c0"
+    dt = jnp.bfloat16
+    t = _sds((bh, n, d), dt)
+    return Artifact(
+        name=f"mha_fwdbwd_unfused_d{d}_n{n}_bh{bh}_{c}_p{int(dropout*100)}",
+        kind="mha_fwdbwd_unf", fn=fn,
+        args=[_sds((1,), jnp.float32), t, t, t, t],
+        input_names=["seed", "q", "k", "v", "do"],
+        attrs=_mha_attrs(bh, n, d, causal, dropout, "f32", False,
+                         backward=True))
+
+
+def encoder_artifact(*, impl, batch, n, d_model, num_heads,
+                     dropout=0.0) -> Artifact:
+    cfg = model_mod.ModelConfig(
+        d_model=d_model, num_heads=num_heads, d_ff=4 * d_model, num_layers=1,
+        seq=n, batch=batch, causal=False, dropout_rate=dropout,
+        attn_impl=impl)
+    params_shape = jax.eval_shape(
+        lambda: model_mod.init_params(cfg, jax.random.PRNGKey(0)))
+    layer_leaves, layer_tree = jax.tree_util.tree_flatten(
+        params_shape["layers"])
+    lnames = model_mod.param_names(
+        jax.tree_util.tree_unflatten(layer_tree, layer_leaves))
+
+    def fn(seed, x, *layer_params):
+        layers = jax.tree_util.tree_unflatten(layer_tree, list(layer_params))
+        return (model_mod.encoder_forward({"layers": layers}, x, seed,
+                                          cfg=cfg),)
+
+    d_head = d_model // num_heads
+    return Artifact(
+        name=(f"encoder_{impl}_dm{d_model}_h{num_heads}_n{n}_b{batch}"
+              f"_p{int(dropout * 100)}"),
+        kind="encoder_fwd", fn=fn,
+        args=[_sds((1,), jnp.float32),
+              _sds((batch, n, d_model), jnp.bfloat16)]
+        + [_sds(l.shape, l.dtype) for l in layer_leaves],
+        input_names=["seed", "x"] + lnames,
+        attrs={
+            "impl": impl, "batch": batch, "n": n, "d_model": d_model,
+            "dropout": dropout,
+            "num_heads": num_heads, "d_head": d_head, "d_ff": 4 * d_model,
+            "flops_attn": ref.attention_flops(batch * num_heads, n, d_head,
+                                              causal=False),
+            "peak_bytes_unfused": layouts.peak_bytes_unfused(
+                batch * num_heads, n, d_head),
+        })
+
+
+def lm_init_artifact(cfg: model_mod.ModelConfig) -> Artifact:
+    def fn(seed):
+        params = model_mod.init_params(
+            cfg, jax.random.PRNGKey(seed.reshape(())))
+        opt = model_mod.init_opt_state(params)
+        return (jax.tree_util.tree_leaves(params)
+                + jax.tree_util.tree_leaves(opt["m"])
+                + jax.tree_util.tree_leaves(opt["v"]))
+
+    return Artifact(
+        name="lm_init", kind="lm_init", fn=fn,
+        args=[_sds((1,), jnp.uint32)], input_names=["seed"],
+        attrs=_lm_attrs(cfg))
+
+
+def _lm_attrs(cfg: model_mod.ModelConfig) -> dict:
+    params_shape = jax.eval_shape(
+        lambda: model_mod.init_params(cfg, jax.random.PRNGKey(0)))
+    names = model_mod.param_names(params_shape)
+    leaves = jax.tree_util.tree_leaves(params_shape)
+    return {
+        "vocab": cfg.vocab, "d_model": cfg.d_model,
+        "num_heads": cfg.num_heads, "d_ff": cfg.d_ff,
+        "num_layers": cfg.num_layers, "seq": cfg.seq, "batch": cfg.batch,
+        "lr": cfg.lr, "dropout": cfg.dropout_rate,
+        "param_count": int(sum(
+            functools.reduce(lambda a, b: a * b, l.shape, 1)
+            for l in leaves)),
+        "param_names": names,
+    }
+
+
+def train_step_artifact(cfg: model_mod.ModelConfig) -> Artifact:
+    params_shape = jax.eval_shape(
+        lambda: model_mod.init_params(cfg, jax.random.PRNGKey(0)))
+    leaves, treedef = jax.tree_util.tree_flatten(params_shape)
+    nleaves = len(leaves)
+    names = model_mod.param_names(params_shape)
+
+    def fn(*flat):
+        p = jax.tree_util.tree_unflatten(treedef, list(flat[:nleaves]))
+        m = jax.tree_util.tree_unflatten(
+            treedef, list(flat[nleaves:2 * nleaves]))
+        v = jax.tree_util.tree_unflatten(
+            treedef, list(flat[2 * nleaves:3 * nleaves]))
+        step, tokens, seed = flat[3 * nleaves:]
+        p2, opt2, loss = model_mod.train_step(p, {"m": m, "v": v}, step[0],
+                                              tokens, seed, cfg=cfg)
+        return (jax.tree_util.tree_leaves(p2)
+                + jax.tree_util.tree_leaves(opt2["m"])
+                + jax.tree_util.tree_leaves(opt2["v"]) + [loss])
+
+    f32 = jnp.float32
+    args = ([_sds(l.shape, l.dtype) for l in leaves]
+            + [_sds(l.shape, f32) for l in leaves] * 2
+            + [_sds((1,), f32),
+               _sds((cfg.batch, cfg.seq + 1), jnp.int32),
+               _sds((1,), f32)])
+    input_names = ([f"p/{n}" for n in names] + [f"m/{n}" for n in names]
+                   + [f"v/{n}" for n in names] + ["step", "tokens", "seed"])
+    return Artifact(name="train_step", kind="train_step", fn=fn, args=args,
+                    input_names=input_names, attrs=_lm_attrs(cfg))
+
+
+# --------------------------------------------------------------------------
+# Profiles
+# --------------------------------------------------------------------------
+
+STANDARD_SEQS = (256, 512, 1024, 2048)
+PAPER_SEQS = (512, 1024, 2048, 4096, 16384)
+DROPOUT = 0.1
+
+
+def standard_profile() -> list[Artifact]:
+    """CPU-scale Fig 10/11 grid: bh=4, dropout 0.1 (paper hyperparams)."""
+    arts = []
+    for d in (64, 128):
+        for n in STANDARD_SEQS:
+            for causal in (False, True):
+                for acc in ("f32", "bf16"):
+                    arts.append(mha_fwd_artifact(
+                        bh=4, n=n, d=d, causal=causal, dropout=DROPOUT,
+                        acc=acc))
+                arts.append(mha_fwd_unfused_artifact(
+                    bh=4, n=n, d=d, causal=causal, dropout=DROPOUT))
+                arts.append(mha_bwd_artifact(
+                    bh=4, n=n, d=d, causal=causal, dropout=DROPOUT,
+                    acc="bf16"))
+                arts.append(mha_fwdbwd_unfused_artifact(
+                    bh=4, n=n, d=d, causal=causal, dropout=DROPOUT))
+    return arts
+
+
+def accuracy_profile() -> list[Artifact]:
+    """§4.2.3 shapes, dropout 0 so all implementations are comparable."""
+    arts = []
+    for d in (64, 128):
+        for causal in (False, True):
+            for acc in ("f32", "bf16"):
+                arts.append(mha_fwd_artifact(
+                    bh=2, n=256, d=d, causal=causal, dropout=0.0, acc=acc))
+                arts.append(mha_bwd_artifact(
+                    bh=2, n=256, d=d, causal=causal, dropout=0.0, acc=acc))
+            arts.append(mha_fwd_unfused_artifact(
+                bh=2, n=256, d=d, causal=causal, dropout=0.0))
+            arts.append(mha_fwdbwd_unfused_artifact(
+                bh=2, n=256, d=d, causal=causal, dropout=0.0))
+    return arts
+
+
+def e2e_profile() -> list[Artifact]:
+    """Fig 12: single encoder layer, head-dim {64,128}, sequence sweep.
+
+    Benchmarked at dropout 0.1 (the paper's §4.1 hyperparameter); a
+    dropout-0 copy of each point is exported for cross-implementation
+    numerical-agreement tests (masks differ across impls at p > 0).
+    """
+    arts = []
+    for num_heads, d_model in ((8, 512), (4, 512)):  # d_head 64 / 128
+        for n in (128, 256, 512, 1024):
+            for impl in ("unfused", "fused", "fully_fused"):
+                for dropout in (DROPOUT, 0.0):
+                    arts.append(encoder_artifact(
+                        impl=impl, batch=1, n=n, d_model=d_model,
+                        num_heads=num_heads, dropout=dropout))
+    return arts
+
+
+def train_profile() -> list[Artifact]:
+    cfg = model_mod.ModelConfig()
+    return [lm_init_artifact(cfg), train_step_artifact(cfg)]
+
+
+def paper_profile() -> list[Artifact]:
+    """Paper-scale shapes (batch = 16384/n, heads = 2048/d).  Export-only:
+    the Rust harness gates execution on the host memory budget."""
+    arts = []
+    for d in (64, 128):
+        heads = 2048 // d
+        for n in PAPER_SEQS:
+            batch = max(1, 16384 // n)
+            bh = min(batch * heads, 64)  # cap bh: CPU host, not a V100 fleet
+            for causal in (False, True):
+                arts.append(mha_fwd_artifact(
+                    bh=bh, n=n, d=d, causal=causal, dropout=DROPOUT,
+                    acc="f32"))
+    return arts
+
+
+def ablation_profile() -> list[Artifact]:
+    """Block-size ablation (DESIGN.md §8): same problem, tile sweep."""
+    arts = []
+    for b in (32, 64, 128, 256):
+        arts.append(mha_fwd_artifact(
+            bh=4, n=1024, d=64, causal=False, dropout=0.0, acc="f32",
+            block_q=b, block_k=b, tag=f"_bq{b}_bk{b}"))
+    # asymmetric tiles: stream more K per resident Q and vice versa
+    for bq, bk in ((256, 64), (64, 256)):
+        arts.append(mha_fwd_artifact(
+            bh=4, n=1024, d=64, causal=False, dropout=0.0, acc="f32",
+            block_q=bq, block_k=bk, tag=f"_bq{bq}_bk{bk}"))
+    return arts
+
+
+def longseq_profile() -> list[Artifact]:
+    """Long-sequence feasibility points (bh=1; the example's showpiece)."""
+    arts = []
+    for n in (4096, 8192):
+        arts.append(mha_fwd_artifact(
+            bh=1, n=n, d=64, causal=False, dropout=0.0, acc="f32"))
+    arts.append(mha_fwd_unfused_artifact(
+        bh=1, n=4096, d=64, causal=False, dropout=0.0))
+    return arts
+
+
+PROFILES = {
+    "standard": standard_profile,
+    "accuracy": accuracy_profile,
+    "e2e": e2e_profile,
+    "train": train_profile,
+    "paper": paper_profile,
+    "ablation": ablation_profile,
+    "longseq": longseq_profile,
+}
+DEFAULT_PROFILES = ("standard", "accuracy", "e2e", "train", "ablation",
+                    "longseq")
+
+
+# --------------------------------------------------------------------------
+# Driver
+# --------------------------------------------------------------------------
+
+def build(out_dir: str, profiles: list[str], only: str | None = None,
+          force: bool = False) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    manifest = {"version": 1, "artifacts": []}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+    known = {a["name"]: a for a in manifest["artifacts"]}
+
+    arts: list[Artifact] = []
+    for p in profiles:
+        arts.extend(PROFILES[p]())
+    if only:
+        pat = re.compile(only)
+        arts = [a for a in arts if pat.search(a.name)]
+
+    built = 0
+    for art in arts:
+        fname = f"{art.name}.hlo.txt"
+        fpath = os.path.join(out_dir, fname)
+        if not force and art.name in known and os.path.exists(fpath):
+            continue
+        t0 = time.time()
+        text, ins, outs = art.lower()
+        with open(fpath, "w") as f:
+            f.write(text)
+        entry = {"name": art.name, "file": fname, "kind": art.kind,
+                 "attrs": art.attrs, "inputs": ins, "outputs": outs}
+        known[art.name] = entry
+        built += 1
+        print(f"  [{built}] {art.name}  ({time.time() - t0:.1f}s, "
+              f"{len(text) // 1024} KiB)")
+
+    manifest["artifacts"] = sorted(known.values(), key=lambda a: a["name"])
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts "
+          f"({built} rebuilt) → {manifest_path}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--profile", action="append", default=None,
+                    choices=sorted(PROFILES), help="repeatable; default: "
+                    + ",".join(DEFAULT_PROFILES))
+    ap.add_argument("--only", default=None,
+                    help="regex filter on artifact names")
+    ap.add_argument("--force", action="store_true",
+                    help="rebuild even if present")
+    ap.add_argument("--list", action="store_true",
+                    help="print artifact names and exit")
+    ns = ap.parse_args()
+    profiles = ns.profile or list(DEFAULT_PROFILES)
+    if ns.list:
+        for p in profiles:
+            for a in PROFILES[p]():
+                print(a.name)
+        return
+    build(ns.out_dir, profiles, only=ns.only, force=ns.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels and their pure-jnp oracle.
+
+* `flash_fwd` / `flash_bwd` — the SparkAttention fused MHA kernels
+  (online softmax, two-stage matmul fusion, recomputation backward).
+* `naive` — the unfused baseline with the paper's 5-read/3-write HBM
+  pattern (the PyTorch_FP16 analog).
+* `ref` — the correctness oracle (PyTorch_FP32 analog).
+* `rng` — deterministic tile-level dropout masks shared by all of the above.
+* `layouts` — block-shape selection and VMEM budget accounting.
+"""
+
+from . import flash_bwd, flash_fwd, layouts, naive, ref, rng  # noqa: F401

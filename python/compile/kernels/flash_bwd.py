@@ -1,0 +1,278 @@
+"""Fused MHA backward with forward recomputation — SparkAttention §3.3.
+
+The paper implements the backward as one fused CUDA kernel that recomputes
+the forward (saving only the per-row softmax statistics, its "LES" record),
+accumulates dK/dV locally per thread block, and scatters dQ with HBM atomic
+adds.  The TPU-style formulation of the *same dataflow* splits the pass into
+three kernels (atomics have no Pallas analog; re-looping replaces them —
+see DESIGN.md §3):
+
+* `_preprocess_kernel` — the paper's **dPsum**: Δ = rowsum(dO ∘ O).
+* `_dkv_kernel` — grid over K-blocks, inner loop over Q-blocks; recomputes
+  the (Sᵢⱼ − Lᵢ) exponentials and locally accumulates dK, dV, exactly the
+  per-TB accumulation of Figure 9.
+* `_dq_kernel` — grid over Q-blocks, inner loop over K-blocks; accumulates
+  dQ in VMEM scratch instead of HBM atomics.
+
+Per §3.1 the paper ships only FP16-ACC for the backward ("MHA-Backward does
+not require high precision"); we default to the bf16-ACC analog and keep
+f32-ACC available for the accuracy study.
+
+Dropout replays the forward's tile-counter masks (`rng.py`) — bit-identical,
+no mask tensor in HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import layouts, rng
+from .flash_fwd import ACC_DTYPES, NEG_INF
+
+
+def _preprocess_kernel(o_ref, do_ref, delta_ref):
+    """Δ = rowsum(dO ∘ O) — the paper's dPsum, one Q-block per step."""
+    o = o_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    delta_ref[0] = jnp.sum(o * do, axis=1)
+
+
+def _recompute_p(q, k, lse, *, scale, causal, iq, ik, block_q, block_k, acc):
+    """Recompute the normalised P tile from Q, K and the saved LSE.
+
+    ``exp(S − L)`` of Figure 9: no second softmax pass is needed because the
+    forward's log-sum-exp already normalises.
+    """
+    acc_t = ACC_DTYPES[acc]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=acc_t)
+    s = s.astype(jnp.float32) * scale
+    if causal:
+        span_q = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        span_k = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(span_q >= span_k, s, NEG_INF)
+    return jnp.exp(s - lse[:, None])
+
+
+def _dq_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+               dq_ref, dq_acc_ref, *, scale: float, causal: bool,
+               dropout_rate: float, nq: int, nk: int, block_q: int,
+               block_k: int, acc: str):
+    """dQ = Σ_k dS·K·scale, accumulated across K-blocks in VMEM scratch."""
+    b, iq, ik = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        dq_acc_ref[...] = jnp.zeros_like(dq_acc_ref)
+
+    def _step():
+        q = q_ref[0]
+        k = k_ref[0]
+        v = v_ref[0]
+        do = do_ref[0].astype(jnp.float32)
+        lse = lse_ref[0]
+        delta = delta_ref[0]
+        acc_t = ACC_DTYPES[acc]
+
+        p = _recompute_p(q, k, lse, scale=scale, causal=causal, iq=iq, ik=ik,
+                         block_q=block_q, block_k=block_k, acc=acc)
+        # dP = dO·Vᵀ; with dropout, route through the replayed mask.
+        dp = jax.lax.dot_general(do.astype(v.dtype), v,
+                                 (((1,), (1,)), ((), ())),
+                                 preferred_element_type=acc_t
+                                 ).astype(jnp.float32)
+        if dropout_rate > 0.0:
+            keep = rng.tile_keep_mask(seed_ref[0], b, iq, ik, nq, nk,
+                                      dp.shape, dropout_rate)
+            dp = jnp.where(keep, dp / (1.0 - dropout_rate), 0.0)
+        # dS = P ∘ (dP − Δ) (the dsoftmax of Equation 4).
+        ds = (p * (dp - delta[:, None]) * scale).astype(q.dtype)
+        dq_acc_ref[...] += jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())),
+            preferred_element_type=acc_t).astype(dq_acc_ref.dtype)
+
+    if causal:
+        pl.when(ik * block_k <= iq * block_q + block_q - 1)(_step)
+    else:
+        _step()
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        dq_ref[0] = dq_acc_ref[...].astype(dq_ref.dtype)
+
+
+def _dkv_kernel(seed_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                dk_ref, dv_ref, dk_acc_ref, dv_acc_ref, *, scale: float,
+                causal: bool, dropout_rate: float, nq: int, nk: int,
+                block_q: int, block_k: int, acc: str):
+    """dK, dV accumulated per K-block over an inner sweep of Q-blocks.
+
+    This is the paper's per-thread-block dK/dV accumulation (Figure 9): one
+    grid row owns one K-block and sees every Q-block stream past it.
+    """
+    b, ik, iq = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(iq == 0)
+    def _init():
+        dk_acc_ref[...] = jnp.zeros_like(dk_acc_ref)
+        dv_acc_ref[...] = jnp.zeros_like(dv_acc_ref)
+
+    def _step():
+        q = q_ref[0]
+        k = k_ref[0]
+        v = v_ref[0]
+        do = do_ref[0].astype(jnp.float32)
+        lse = lse_ref[0]
+        delta = delta_ref[0]
+        acc_t = ACC_DTYPES[acc]
+
+        p = _recompute_p(q, k, lse, scale=scale, causal=causal, iq=iq, ik=ik,
+                         block_q=block_q, block_k=block_k, acc=acc)
+        if dropout_rate > 0.0:
+            keep = rng.tile_keep_mask(seed_ref[0], b, iq, ik, nq, nk,
+                                      p.shape, dropout_rate)
+            p_drop = jnp.where(keep, p / (1.0 - dropout_rate), 0.0)
+        else:
+            keep = None
+            p_drop = p
+        # dV += P_dropᵀ·dO  (Equation 4, first line).
+        dv_acc_ref[...] += jax.lax.dot_general(
+            p_drop.astype(do.dtype), do, (((0,), (0,)), ((), ())),
+            preferred_element_type=acc_t).astype(dv_acc_ref.dtype)
+        dp = jax.lax.dot_general(do.astype(v.dtype), v,
+                                 (((1,), (1,)), ((), ())),
+                                 preferred_element_type=acc_t
+                                 ).astype(jnp.float32)
+        if keep is not None:
+            dp = jnp.where(keep, dp / (1.0 - dropout_rate), 0.0)
+        ds = (p * (dp - delta[:, None]) * scale).astype(q.dtype)
+        # dK += dSᵀ·Q (Equation 4, last line).
+        dk_acc_ref[...] += jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())),
+            preferred_element_type=acc_t).astype(dk_acc_ref.dtype)
+
+    if causal:
+        pl.when(ik * block_k <= iq * block_q + block_q - 1)(_step)
+    else:
+        _step()
+
+    @pl.when(iq == nq - 1)
+    def _finalize():
+        dk_ref[0] = dk_acc_ref[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_acc_ref[...].astype(dv_ref.dtype)
+
+
+def _resolve_blocks(n: int, d: int, block_q: int | None,
+                    block_k: int | None) -> tuple[int, int]:
+    if block_q is None or block_k is None:
+        cfg = layouts.choose_blocks(n, d)
+        block_q = block_q or cfg.block_q
+        block_k = block_k or cfg.block_k
+    # divisibility is enforced (for explicit blocks) and repaired (for
+    # defaults, via layouts.fit_block) by the caller
+    return min(block_q, n), min(block_k, n)
+
+
+def dpsum(o: jax.Array, do: jax.Array, *, block_q: int = 128) -> jax.Array:
+    """Δ = rowsum(dO ∘ O) as a Pallas preprocess kernel (paper's dPsum)."""
+    bh, n, d = o.shape
+    bq = min(block_q, n)
+    return pl.pallas_call(
+        _preprocess_kernel,
+        grid=(bh, n // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, iq: (b, iq, 0)),
+            pl.BlockSpec((1, bq, d), lambda b, iq: (b, iq, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq), lambda b, iq: (b, iq)),
+        out_shape=jax.ShapeDtypeStruct((bh, n), jnp.float32),
+        interpret=True,
+    )(o, do)
+
+
+def flash_bwd(q: jax.Array, k: jax.Array, v: jax.Array, o: jax.Array,
+              lse: jax.Array, do: jax.Array,
+              seed: jax.Array | float = 0.0, *, causal: bool = False,
+              scale: float | None = None, dropout_rate: float = 0.0,
+              acc: str = "bf16", block_q: int | None = None,
+              block_k: int | None = None
+              ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused MHA backward: (dq, dk, dv) from the recomputation dataflow.
+
+    Args mirror `flash_fwd`; `o` and `lse` are the forward's outputs (only
+    the statistics are *required* — O enters only through dPsum — matching
+    the paper's memory-saving claim).  Default ``acc="bf16"`` per §3.1.
+    """
+    bh, n, d = q.shape
+    n_kv = k.shape[1]
+    if causal and n_kv != n:
+        raise ValueError("causal masking requires n_q == n_kv")
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    explicit_q, explicit_k = block_q is not None, block_k is not None
+    block_q, block_k = _resolve_blocks(max(n, n_kv), d, block_q, block_k)
+    if (explicit_q and n % min(block_q, n)) \
+            or (explicit_k and n_kv % min(block_k, n_kv)):
+        raise ValueError(
+            f"(n={n}, n_kv={n_kv}) not divisible by blocks "
+            f"({block_q},{block_k})")
+    block_q = layouts.fit_block(block_q, n)
+    block_k = layouts.fit_block(block_k, n_kv)
+    nq, nk = n // block_q, n_kv // block_k
+    if acc not in ACC_DTYPES:
+        raise ValueError(f"acc must be one of {sorted(ACC_DTYPES)}, got {acc}")
+    seed_arr = jnp.asarray(seed, jnp.float32).reshape(1)
+    delta = dpsum(o, do, block_q=block_q)
+    common = dict(scale=scale, causal=causal, dropout_rate=dropout_rate,
+                  nq=nq, nk=nk, block_q=block_q, block_k=block_k, acc=acc)
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, **common),
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, iq, ik: (0,)),             # seed
+            pl.BlockSpec((1, block_q, d), lambda b, iq, ik: (b, iq, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, iq, ik: (b, ik, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, iq, ik: (b, ik, 0)),
+            pl.BlockSpec((1, block_q, d), lambda b, iq, ik: (b, iq, 0)),
+            pl.BlockSpec((1, block_q), lambda b, iq, ik: (b, iq)),  # lse
+            pl.BlockSpec((1, block_q), lambda b, iq, ik: (b, iq)),  # delta
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, iq, ik: (b, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, n, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((block_q, d), jnp.float32)],
+        interpret=True,
+    )(seed_arr, q, k, v, do, lse, delta)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, **common),
+        grid=(bh, nk, nq),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, ik, iq: (0,)),             # seed
+            pl.BlockSpec((1, block_q, d), lambda b, ik, iq: (b, iq, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, ik, iq: (b, ik, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, ik, iq: (b, ik, 0)),
+            pl.BlockSpec((1, block_q, d), lambda b, ik, iq: (b, iq, 0)),
+            pl.BlockSpec((1, block_q), lambda b, ik, iq: (b, iq)),  # lse
+            pl.BlockSpec((1, block_q), lambda b, ik, iq: (b, iq)),  # delta
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_k, d), lambda b, ik, iq: (b, ik, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, ik, iq: (b, ik, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, n_kv, d), k.dtype),
+            jax.ShapeDtypeStruct((bh, n_kv, d), v.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_k, d), jnp.float32),
+            pltpu.VMEM((block_k, d), jnp.float32),
+        ],
+        interpret=True,
+    )(seed_arr, q, k, v, do, lse, delta)
+    return dq, dk, dv

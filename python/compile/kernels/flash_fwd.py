@@ -1,0 +1,188 @@
+"""Fused MHA forward — the SparkAttention kernel, TPU-style (Pallas).
+
+Maps the paper's §3.2 Volta design onto Pallas primitives:
+
+* **Thread-block grid over (batch·head, Q-blocks)** → pallas ``grid =
+  (bh, n/block_q, n/block_k)``; the innermost K-block dimension iterates
+  sequentially so VMEM scratch carries the online-softmax state across it
+  (the role the paper's per-TB SRAM plays in Figure 6).
+* **Online softmax (§3.2.1)** → running (m, l) statistics in VMEM scratch;
+  each step rescales the accumulator by ``exp(m_prev − m_cur)`` exactly as
+  Equation 3.
+* **Warp-level layout transform (§3.2.2)** → the S/P tile lives only as a
+  kernel-local value between the two ``dot``s; the second matmul consumes
+  it directly, so the fusion boundary (the pallas kernel body) *is* the
+  layout transform — no HBM round-trip for the N×N matrix, 3 HBM reads +
+  1 write per MHA.
+* **FP16-ACC vs FP32-ACC (§3.1)** → ``acc ∈ {"bf16", "f32"}``: the MMA
+  ``preferred_element_type`` and the dtype the S tile is produced in.  The
+  bf16 variant converts to f32 for the softmax (the conversion overhead the
+  paper measures); the f32 variant needs no conversion (its cost on Volta —
+  the shuffle — has no TPU analog, the reduction is free within a tile).
+* **Fused dropout** → tile-counter RNG (`rng.py`), no mask tensor in HBM.
+
+``interpret=True`` everywhere: CPU-PJRT cannot execute Mosaic custom-calls;
+structure (blocking, scratch residency, grid order) is what we optimise,
+and `layouts.py` + `rust/src/perfmodel` project real-hardware behaviour.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import layouts, rng
+
+NEG_INF = -1e30
+
+ACC_DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16}
+
+
+def _fwd_kernel(seed_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
+                m_ref, l_ref, acc_ref, *, scale: float, causal: bool,
+                dropout_rate: float, nq: int, nk: int, block_q: int,
+                block_k: int, acc: str):
+    """One (batch·head, iq, ik) grid step of the fused forward."""
+    b, iq, ik = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _step():
+        q = q_ref[0]
+        k = k_ref[0]
+        # Stage 1: S = Q·Kᵀ on the matrix unit.  FP16-ACC produces the tile
+        # in bf16 and pays an explicit conversion before the softmax, the
+        # trade-off §4.2.1 measures; FP32-ACC accumulates wide directly.
+        acc_t = ACC_DTYPES[acc]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=acc_t)
+        s = s.astype(jnp.float32) * scale
+        if causal:
+            span_q = iq * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 0)
+            span_k = ik * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 1)
+            s = jnp.where(span_q >= span_k, s, NEG_INF)
+
+        # Online softmax (Equation 3): fold this block into (m, l) and
+        # rescale the running accumulator.
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_cur = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_cur[:, None])
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_prev * alpha + p.sum(axis=1)
+        m_ref[...] = m_cur
+
+        if dropout_rate > 0.0:
+            keep = rng.tile_keep_mask(seed_ref[0], b, iq, ik, nq, nk,
+                                      p.shape, dropout_rate)
+            p = jnp.where(keep, p / (1.0 - dropout_rate), 0.0)
+
+        # Stage 2: the P tile feeds the second matmul *in place* — the
+        # layout-transform analog; it never leaves the kernel.
+        v = v_ref[0]
+        pv = jax.lax.dot_general(p.astype(v.dtype), v,
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=acc_t)
+        acc_ref[...] = acc_ref[...] * alpha[:, None].astype(acc_ref.dtype) \
+            + pv.astype(acc_ref.dtype)
+
+    if causal:
+        # K-blocks strictly above the diagonal contribute nothing; skip
+        # their matmuls (the paper's "workload reduced by half", §4.2.1).
+        pl.when(ik * block_k <= iq * block_q + block_q - 1)(_step)
+    else:
+        _step()
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0] = (acc_ref[...].astype(jnp.float32)
+                    / l[:, None]).astype(o_ref.dtype)
+        lse_ref[0] = m_ref[...] + jnp.log(l)
+
+
+def flash_fwd(q: jax.Array, k: jax.Array, v: jax.Array,
+              seed: jax.Array | float = 0.0, *, causal: bool = False,
+              scale: float | None = None, dropout_rate: float = 0.0,
+              acc: str = "f32", block_q: int | None = None,
+              block_k: int | None = None
+              ) -> tuple[jax.Array, jax.Array]:
+    """Fused MHA forward.
+
+    Args:
+      q: (bh, n, d); k, v: (bh, n_kv, d) — cross-attention (the decoder's
+        second MHA in Figure 1) is supported via n_kv ≠ n.  bf16 in
+        production, any float dtype in tests.
+      seed: f32 scalar dropout seed (see `rng.py`); ignored if
+        ``dropout_rate == 0``.
+      causal: lower-triangular masking.
+      scale: softmax temperature, default 1/sqrt(d).
+      acc: "f32" (FP32-ACC) or "bf16" (FP16-ACC analog).
+      block_q / block_k: tile shape; default from `layouts.choose_blocks`.
+
+    Returns:
+      (o, lse): o (bh, n, d) in the input dtype; lse (bh, n) f32, saved for
+      the recomputation backward.
+    """
+    bh, n, d = q.shape
+    n_kv = k.shape[1]
+    if v.shape != k.shape or k.shape[0] != bh or k.shape[2] != d:
+        raise ValueError(f"k/v shape {k.shape} incompatible with q {q.shape}")
+    if causal and n_kv != n:
+        raise ValueError("causal masking requires n_q == n_kv")
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    explicit_q, explicit_k = block_q is not None, block_k is not None
+    if block_q is None or block_k is None:
+        cfg = layouts.choose_blocks(max(n, n_kv), d)
+        block_q = block_q or cfg.block_q
+        block_k = block_k or cfg.block_k
+    if (explicit_q and n % min(block_q, n)) \
+            or (explicit_k and n_kv % min(block_k, n_kv)):
+        raise ValueError(
+            f"(n={n}, n_kv={n_kv}) not divisible by blocks "
+            f"({block_q},{block_k})")
+    block_q = layouts.fit_block(block_q, n)
+    block_k = layouts.fit_block(block_k, n_kv)
+    nq, nk = n // block_q, n_kv // block_k
+    if acc not in ACC_DTYPES:
+        raise ValueError(f"acc must be one of {sorted(ACC_DTYPES)}, got {acc}")
+
+    kern = functools.partial(
+        _fwd_kernel, scale=scale, causal=causal, dropout_rate=dropout_rate,
+        nq=nq, nk=nk, block_q=block_q, block_k=block_k, acc=acc)
+    seed_arr = jnp.asarray(seed, jnp.float32).reshape(1)
+    acc_t = ACC_DTYPES[acc]
+    return pl.pallas_call(
+        kern,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, iq, ik: (0,)),           # seed
+            pl.BlockSpec((1, block_q, d), lambda b, iq, ik: (b, iq, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, iq, ik: (b, ik, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, iq, ik: (b, ik, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, iq, ik: (b, iq, 0)),
+            pl.BlockSpec((1, block_q), lambda b, iq, ik: (b, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, n, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, n), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),   # running row max m
+            pltpu.VMEM((block_q,), jnp.float32),   # running row sum l
+            pltpu.VMEM((block_q, d), acc_t),       # output accumulator
+        ],
+        interpret=True,
+    )(seed_arr, q, k, v)

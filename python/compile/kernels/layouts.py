@@ -1,0 +1,132 @@
+"""Block-shape selection and on-chip memory budgeting.
+
+This module is the TPU analog of the paper's §3.2 layout reasoning.  On
+Volta, SparkAttention sizes its thread-block tiles so Q plus the softmax
+statistics stay resident in the 128 KB SRAM per SM while K/V stream through;
+the m8n8k4 MMA shape quantises the tile dimensions.  On a TPU-style target
+the binding constraints are instead
+
+* VMEM (~16 MB/core) must hold the Q tile, one K/V tile pair, the S/P
+  scratch tile, the f32 accumulator, and the (m, l) statistics — ×2 for
+  double buffering of the streamed operands;
+* the MXU's 128×128 systolic array quantises tile dimensions to multiples
+  of 128 (8 sublanes × 128 lanes for bf16 loads).
+
+`choose_blocks` picks (block_q, block_k) under those constraints and
+`vmem_footprint` reports the budget, which `rust/src/perfmodel` consumes to
+estimate real-hardware behaviour (interpret-mode wallclock is CPU-numpy,
+not a TPU proxy — we optimise structure, then project).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+MXU_TILE = 128
+VMEM_BYTES = 16 * 1024 * 1024
+ITEM_BYTES = {"bf16": 2, "f32": 4}
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    """Chosen tile shape plus its static VMEM budget."""
+
+    block_q: int
+    block_k: int
+    vmem_bytes: int
+    mxu_utilization: float  # fraction of the 128×128 array a step fills
+
+
+def vmem_footprint(block_q: int, block_k: int, d: int, *,
+                   in_dtype: str = "bf16", acc_dtype: str = "f32",
+                   double_buffer: bool = True) -> int:
+    """Bytes of VMEM one forward grid step needs (DESIGN.md §7).
+
+    Q tile + (K, V) tile pair (×2 when double-buffered) + S/P scratch +
+    output accumulator + m/l statistics.
+    """
+    in_b, acc_b = ITEM_BYTES[in_dtype], ITEM_BYTES[acc_dtype]
+    q_tile = block_q * d * in_b
+    kv_tiles = 2 * block_k * d * in_b
+    if double_buffer:
+        kv_tiles *= 2
+    sp_scratch = block_q * block_k * acc_b
+    acc = block_q * d * acc_b
+    stats = 2 * block_q * acc_b
+    return q_tile + kv_tiles + sp_scratch + acc + stats
+
+
+def mxu_utilization(block_q: int, block_k: int, d: int) -> float:
+    """How fully a (block_q×d)·(d×block_k) step tiles the 128×128 MXU."""
+    def frac(dim: int) -> float:
+        return min(dim, MXU_TILE) / MXU_TILE
+
+    return frac(block_q) * frac(block_k) * min(1.0, d / MXU_TILE)
+
+
+def choose_blocks(n: int, d: int, *, in_dtype: str = "bf16",
+                  acc_dtype: str = "f32",
+                  vmem_budget: int = VMEM_BYTES) -> BlockConfig:
+    """Largest MXU-aligned (block_q, block_k) that fits the VMEM budget.
+
+    Prefers square 128×128 tiles (full MXU occupancy); shrinks block_k
+    first — K/V tiles are the streamed operand, so smaller block_k costs
+    loop trips, not extra HBM traffic.
+    """
+    candidates = [t for t in (256, 128, 64, 32, 16, 8) if t <= n]
+    if not candidates:
+        candidates = [n]
+    for bq in candidates:
+        for bk in candidates:
+            fp = vmem_footprint(bq, bk, d, in_dtype=in_dtype,
+                                acc_dtype=acc_dtype)
+            if fp <= vmem_budget:
+                return BlockConfig(bq, bk, fp, mxu_utilization(bq, bk, d))
+    raise ValueError(
+        f"no (block_q, block_k) fits VMEM budget {vmem_budget} for n={n} d={d}")
+
+
+def hbm_bytes_fused_fwd(bh: int, n: int, d: int, *,
+                        in_dtype: str = "bf16") -> int:
+    """HBM traffic of the fused forward: 3 reads (Q,K,V) + 1 write (O).
+
+    This is the paper's §3.2 claim; `rust/src/iomodel` re-derives the same
+    number from a schedule simulation and the two are cross-checked in
+    tests.  LSE (f32, n per head) is also written for the backward.
+    """
+    b = ITEM_BYTES[in_dtype]
+    return bh * (4 * n * d * b + n * 4)
+
+
+def hbm_bytes_unfused_fwd(bh: int, n: int, d: int, *,
+                          in_dtype: str = "bf16") -> int:
+    """HBM traffic of the unfused forward: 5 reads + 3 writes (§2.3).
+
+    Reads: Q, K (→S), S (→P), P, V (→O); writes: S, P, O.  The N×N S and P
+    round-trips dominate at long sequence length — the paper's motivation.
+    """
+    b = ITEM_BYTES[in_dtype]
+    nn = n * n * b
+    qkv_reads = 3 * n * d * b
+    return bh * (qkv_reads + 2 * nn      # reads: Q,K,V + S + P
+                 + 2 * nn + n * d * b)   # writes: S, P, O
+
+
+def peak_bytes_unfused(bh: int, n: int, d: int, *,
+                       in_dtype: str = "bf16") -> int:
+    """Resident-memory high-water mark of the unfused forward (S and P live
+    simultaneously with QKV) — drives the Fig 12 OOM cells."""
+    b = ITEM_BYTES[in_dtype]
+    return bh * (4 * n * d * b + 2 * n * n * b)
+
+
+def fit_block(block: int, n: int) -> int:
+    """Largest tile ≤ `block` that evenly divides `n` (≥ 1).
+
+    Cross-attention memories need not be power-of-two sized; the grid
+    requires exact tiling, so shrink to the nearest divisor.
+    """
+    b = min(block, n)
+    while b > 1 and n % b:
+        b -= 1
+    return max(b, 1)

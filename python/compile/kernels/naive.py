@@ -1,0 +1,87 @@
+"""Unfused MHA baseline — the paper's PyTorch_FP16 / cuBLAS analog (§2.3).
+
+The traditional schedule the paper benchmarks against:
+
+    1. read Q, K      → S = Q·Kᵀ       → write S to HBM
+    2. read S         → P = softmax(S)  → write P to HBM
+    3. read P, V      → O = P·V        → write O to HBM
+
+i.e. **5 HBM reads + 3 writes**, with two N×N round-trips and an N×N
+resident high-water mark (the OOM driver in Fig 10/12).  To keep the
+baseline honest under XLA — which would otherwise fuse the softmax into the
+matmuls — each stage boundary carries `jax.lax.optimization_barrier`, the
+compiler-level equivalent of PyTorch dispatching three separate cuBLAS /
+elementwise kernels.  The N×N S and P tensors are therefore genuinely
+materialised, byte-for-byte like the paper's baseline.
+
+Dropout draws one full-tensor mask per call (a PyTorch-style `dropout`
+kernel over the materialised P — more HBM traffic, faithfully).  The mask
+therefore differs from the fused kernels' tile-counter masks; accuracy
+comparisons across implementations are done at ``dropout_rate = 0``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import rng
+from .ref import NEG_INF, causal_mask
+
+
+def _barrier(x: jax.Array) -> jax.Array:
+    """Stage boundary: forces XLA to materialise `x` (an HBM round-trip)."""
+    return jax.lax.optimization_barrier(x)
+
+
+def mha_fwd_unfused(q: jax.Array, k: jax.Array, v: jax.Array,
+                    seed: jax.Array | float = 0.0, *, causal: bool = False,
+                    scale: float | None = None, dropout_rate: float = 0.0,
+                    block_q: int = 128, block_k: int = 128) -> jax.Array:
+    """Three-stage unfused forward; returns O (bh, n, d) in input dtype."""
+    bh, n, d = q.shape
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+
+    # Stage 1: S = Q·Kᵀ (one cuBLAS-style batched GEMM; fp16 in/out).
+    s = jax.lax.dot_general(q, k, (((2,), (2,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32)
+    s = (s * scale).astype(q.dtype)
+    s = _barrier(s)
+
+    # Stage 2: P = softmax(S) (separate elementwise/reduction kernels).
+    sf = s.astype(jnp.float32)
+    if causal:
+        sf = jnp.where(causal_mask(n, n)[None], sf, NEG_INF)
+    p = jax.nn.softmax(sf, axis=-1)
+    if dropout_rate > 0.0:
+        keep = rng.full_tensor_keep_mask(seed, p.shape, dropout_rate)
+        p = jnp.where(keep, p / (1.0 - dropout_rate), 0.0)
+    p = p.astype(q.dtype)
+    p = _barrier(p)
+
+    # Stage 3: O = P·V (second batched GEMM).
+    o = jax.lax.dot_general(p, v, (((2,), (1,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)
+
+
+def mha_bwd_unfused(q: jax.Array, k: jax.Array, v: jax.Array, do: jax.Array,
+                    seed: jax.Array | float = 0.0, *, causal: bool = False,
+                    scale: float | None = None, dropout_rate: float = 0.0,
+                    block_q: int = 128, block_k: int = 128
+                    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Unfused backward via `jax.vjp` of the staged forward.
+
+    PyTorch autograd replays the same staged kernels in reverse, saving S
+    and P from the forward; `optimization_barrier` in the primal keeps the
+    cotangent graph staged the same way, so the N×N tensors round-trip
+    through HBM here too (the paper's 'PyTorch_FP16' backward).
+    """
+    def fwd(q, k, v):
+        return mha_fwd_unfused(q, k, v, seed, causal=causal, scale=scale,
+                               dropout_rate=dropout_rate, block_q=block_q,
+                               block_k=block_k)
+
+    _, pullback = jax.vjp(fwd, q, k, v)
+    return pullback(do)

@@ -1,0 +1,131 @@
+"""Pure-jnp oracle for multi-head attention forward and backward.
+
+This is the correctness ground truth for every fused kernel: pytest compares
+`flash_fwd`/`flash_bwd` against these functions (and these against
+`jax.vjp` of the forward), mirroring the paper's §4.2.3 accuracy protocol
+(PyTorch_FP32 as the benchmark implementation).
+
+Everything here computes in f32 (or f64 when `precise=True`), materialises
+the full N×N score matrix, and is deliberately *unoptimised* — it is an
+oracle, not a baseline.  The performance baseline with the paper's HBM
+traffic pattern lives in `naive.py`.
+
+Note on Equation 1 of the paper: it types ``P = softmax(S)/sqrt(d)``; the
+standard (and FlashAttention-2's) scaling is ``softmax(S/sqrt(d))``, which
+is what we use.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import rng
+
+NEG_INF = -1e30
+
+
+def causal_mask(n_q: int, n_k: int) -> jax.Array:
+    """Lower-triangular boolean mask (True = attend)."""
+    iq = jnp.arange(n_q)[:, None]
+    ik = jnp.arange(n_k)[None, :]
+    return iq >= ik
+
+
+def mha_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+            causal: bool = False, scale: float | None = None,
+            dropout_rate: float = 0.0, seed: jax.Array | float = 0.0,
+            block_q: int = 128, block_k: int = 128,
+            precise: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Reference MHA forward.
+
+    Args:
+      q, k, v: (bh, n, d) arrays; any float dtype (upcast internally).
+      causal: apply the lower-triangular mask.
+      scale: softmax temperature; defaults to 1/sqrt(d).
+      dropout_rate / seed / block_q / block_k: dropout replay parameters —
+        the mask is tile-derived (see `rng.py`) so block sizes must match
+        the fused kernel under test.
+      precise: compute in f64 (accuracy-table ground truth).
+
+    Returns:
+      (o, lse): o is (bh, n, d) in q's dtype; lse is (bh, n) f32 — the
+      log-sum-exp statistics the backward pass recomputes from (the paper's
+      "LES" record).
+    """
+    ctype = jnp.float64 if precise else jnp.float32
+    bh, n_q, d = q.shape
+    n_k = k.shape[1]
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    qf, kf, vf = (x.astype(ctype) for x in (q, k, v))
+    s = jnp.einsum("bnd,bmd->bnm", qf, kf) * scale
+    if causal:
+        s = jnp.where(causal_mask(n_q, n_k)[None], s, NEG_INF)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    lse = (m + jnp.log(l)).astype(jnp.float32)
+    p = p / l[..., None]
+    if dropout_rate > 0.0:
+        keep = rng.full_keep_mask(seed, bh, n_q, n_k, block_q, block_k,
+                                  dropout_rate)
+        p = jnp.where(keep, p / (1.0 - dropout_rate), 0.0)
+    o = jnp.einsum("bnm,bmd->bnd", p, vf)
+    return o.astype(q.dtype), lse
+
+
+def mha_bwd(q: jax.Array, k: jax.Array, v: jax.Array, do: jax.Array, *,
+            causal: bool = False, scale: float | None = None,
+            dropout_rate: float = 0.0, seed: jax.Array | float = 0.0,
+            block_q: int = 128, block_k: int = 128,
+            precise: bool = False) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Reference MHA backward (Equation 4 of the paper), explicit form.
+
+    Recomputes the forward internally (the paper's recomputation strategy at
+    oracle fidelity) and returns (dq, dk, dv) in the input dtype.
+    """
+    ctype = jnp.float64 if precise else jnp.float32
+    bh, n_q, d = q.shape
+    n_k = k.shape[1]
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    qf, kf, vf, dof = (x.astype(ctype) for x in (q, k, v, do))
+    s = jnp.einsum("bnd,bmd->bnm", qf, kf) * scale
+    if causal:
+        s = jnp.where(causal_mask(n_q, n_k)[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    if dropout_rate > 0.0:
+        keep = rng.full_keep_mask(seed, bh, n_q, n_k, block_q, block_k,
+                                  dropout_rate)
+        scale_keep = jnp.where(keep, 1.0 / (1.0 - dropout_rate), 0.0)
+        p_drop = p * scale_keep
+    else:
+        scale_keep = None
+        p_drop = p
+
+    # Equation 4:  dV = PᵀdO;  dP = dO Vᵀ;  dS = dsoftmax(dP);
+    #              dQ = dS·K·scale;  dK = dSᵀ·Q·scale.
+    dv = jnp.einsum("bnm,bnd->bmd", p_drop, dof)
+    dp_drop = jnp.einsum("bnd,bmd->bnm", dof, vf)
+    dp = dp_drop * scale_keep if scale_keep is not None else dp_drop
+    # dsoftmax: dS = P ∘ (dP - rowsum(P_drop ∘ dP_drop)); the rowsum term is
+    # the paper's dPsum = rowsum(dO ∘ O), computed here in expanded form.
+    dpsum = jnp.sum(p_drop * dp_drop, axis=-1, keepdims=True)
+    ds = p * (dp - dpsum)
+    dq = jnp.einsum("bnm,bmd->bnd", ds, kf) * scale
+    dk = jnp.einsum("bnm,bnd->bmd", ds, qf) * scale
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+def attention_flops(bh: int, n: int, d: int, *, causal: bool,
+                    backward: bool = False) -> int:
+    """Matmul FLOPs of one MHA, the paper's Fig 10/11 TFLOPs denominator.
+
+    Forward: 2 matmuls of 2·n²·d each; backward: 5 (Equation 4).  With the
+    causal mask the workload halves ("the computational workload is reduced
+    by half under the same configuration", §4.2.1).
+    """
+    matmuls = 5 if backward else 2
+    flops = matmuls * 2 * n * n * d * bh
+    return flops // 2 if causal else flops

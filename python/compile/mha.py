@@ -1,0 +1,132 @@
+"""Differentiable multi-head attention built on the SparkAttention kernels.
+
+`make_attention` ties `flash_fwd` and `flash_bwd` together with
+`jax.custom_vjp`, exactly mirroring the paper's training integration
+(Figure 5): the forward saves only (O, LSE); the backward recomputes the
+attention matrix from Q, K and the statistics.  `mha_layer` adds the QKV /
+output projections and head split of a full MHA block (Equation 1's
+multi-head form).
+
+The dropout seed travels as an f32 scalar so it can be a *traced* argument
+(fresh mask every training step) while keeping `custom_vjp` happy — its
+cotangent is simply zero.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import flash_bwd, flash_fwd, naive
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    """Static configuration of one attention operator instance."""
+
+    causal: bool = False
+    dropout_rate: float = 0.0
+    acc_fwd: str = "f32"    # paper's FP32-ACC default for the forward
+    acc_bwd: str = "bf16"   # paper ships FP16-ACC only for the backward
+    block_q: int | None = None
+    block_k: int | None = None
+    impl: str = "fused"     # "fused" | "unfused"
+
+
+def make_attention(cfg: AttentionConfig) -> Callable:
+    """Return `attn(q, k, v, seed) -> o` with the SparkAttention VJP.
+
+    q, k, v: (bh, n, d); seed: f32 scalar array.  For ``impl="unfused"``
+    the staged baseline (with its own staged autodiff) is returned instead —
+    same signature, so model code is implementation-agnostic.
+    """
+    kw = dict(causal=cfg.causal, dropout_rate=cfg.dropout_rate,
+              block_q=cfg.block_q, block_k=cfg.block_k)
+
+    if cfg.impl == "unfused":
+        def unfused(q, k, v, seed):
+            return naive.mha_fwd_unfused(q, k, v, seed, **kw)
+        return unfused
+    if cfg.impl != "fused":
+        raise ValueError(f"unknown attention impl {cfg.impl!r}")
+
+    @jax.custom_vjp
+    def attn(q, k, v, seed):
+        o, _ = flash_fwd.flash_fwd(q, k, v, seed, acc=cfg.acc_fwd, **kw)
+        return o
+
+    def attn_fwd(q, k, v, seed):
+        o, lse = flash_fwd.flash_fwd(q, k, v, seed, acc=cfg.acc_fwd, **kw)
+        # Residuals: inputs + (O, LSE) only — no N×N tensor is saved; the
+        # backward recomputes it (the paper's §3.3 memory-saving strategy).
+        return o, (q, k, v, o, lse, seed)
+
+    def attn_bwd(res, do):
+        q, k, v, o, lse, seed = res
+        dq, dk, dv = flash_bwd.flash_bwd(q, k, v, o, lse, do, seed,
+                                         acc=cfg.acc_bwd, **kw)
+        return dq, dk, dv, jnp.zeros_like(seed)
+
+    attn.defvjp(attn_fwd, attn_bwd)
+    return attn
+
+
+def split_heads(x: jax.Array, num_heads: int) -> jax.Array:
+    """(b, n, h·d) → (b·h, n, d) — the kernels' batch-head major layout."""
+    b, n, dm = x.shape
+    d = dm // num_heads
+    return (x.reshape(b, n, num_heads, d)
+            .transpose(0, 2, 1, 3)
+            .reshape(b * num_heads, n, d))
+
+
+def merge_heads(x: jax.Array, batch: int) -> jax.Array:
+    """(b·h, n, d) → (b, n, h·d) — inverse of `split_heads`."""
+    bh, n, d = x.shape
+    h = bh // batch
+    return (x.reshape(batch, h, n, d)
+            .transpose(0, 2, 1, 3)
+            .reshape(batch, n, h * d))
+
+
+def init_mha_params(key: jax.Array, d_model: int,
+                    dtype=jnp.bfloat16) -> dict:
+    """Xavier-ish init for the four projection matrices (+ biases)."""
+    ks = jax.random.split(key, 4)
+    s = d_model ** -0.5
+    return {
+        "wq": (jax.random.normal(ks[0], (d_model, d_model)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d_model, d_model)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d_model, d_model)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (d_model, d_model)) * s).astype(dtype),
+        "bo": jnp.zeros((d_model,), dtype),
+    }
+
+
+def mha_layer(x: jax.Array, params: dict, seed: jax.Array, *,
+              num_heads: int, attn: Callable) -> jax.Array:
+    """Full MHA block: project → split heads → attention → merge → project."""
+    b = x.shape[0]
+    q = split_heads(x @ params["wq"], num_heads)
+    k = split_heads(x @ params["wk"], num_heads)
+    v = split_heads(x @ params["wv"], num_heads)
+    o = merge_heads(attn(q, k, v, seed), b)
+    return o @ params["wo"] + params["bo"]
+
+
+def mha_layer_cross(x: jax.Array, memory: jax.Array, params: dict,
+                    seed: jax.Array, *, num_heads: int,
+                    attn: Callable) -> jax.Array:
+    """Cross-attention MHA block — the decoder's second attention of
+    Figure 1: queries from the decoder stream `x`, keys/values from the
+    encoder output `memory` (lengths may differ)."""
+    b = x.shape[0]
+    q = split_heads(x @ params["wq"], num_heads)
+    k = split_heads(memory @ params["wk"], num_heads)
+    v = split_heads(memory @ params["wv"], num_heads)
+    o = merge_heads(attn(q, k, v, seed), b)
+    return o @ params["wo"] + params["bo"]

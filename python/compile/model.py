@@ -1,0 +1,287 @@
+"""Layer-2 transformer model: encoder stack, LM head, loss, Adam train step.
+
+This is the compute graph the Rust coordinator drives at run time.  It is
+written so each piece lowers to a single HLO entry point:
+
+* `encoder_forward` — the Fig 12 end-to-end workload (one or more encoder
+  layers) in three fusion variants:
+    - ``unfused``     → staged attention (PyTorch_JIT analog),
+    - ``fused``       → SparkAttention flash MHA (ours),
+    - ``fully_fused`` → flash MHA + fused FFN kernel (FasterTransformer
+      analog; wins when non-MHA time dominates, as in the paper §4.2.4).
+* `loss_fn` / `train_step` — next-token LM training with Adam; exported as
+  one HLO so the Rust side runs a full optimizer step per `execute` call.
+
+Parameters are a nested dict; `flatten_params` fixes a deterministic
+ordering (recorded in the artifact manifest) so Rust can manage them as a
+flat buffer list.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import mha
+from .kernels import fused_ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture + training hyperparameters."""
+
+    vocab: int = 256
+    d_model: int = 128
+    num_heads: int = 4
+    d_ff: int = 512
+    num_layers: int = 2
+    seq: int = 128
+    batch: int = 8
+    causal: bool = True
+    dropout_rate: float = 0.0
+    attn_impl: str = "fused"        # "fused" | "unfused" | "fully_fused"
+    acc_fwd: str = "f32"
+    acc_bwd: str = "bf16"
+    dtype: str = "bf16"
+    # Adam
+    lr: float = 3e-3
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.num_heads
+
+    @property
+    def jdtype(self):
+        return {"bf16": jnp.bfloat16, "f32": jnp.float32}[self.dtype]
+
+    def attention(self) -> Callable:
+        impl = "unfused" if self.attn_impl == "unfused" else "fused"
+        return mha.make_attention(mha.AttentionConfig(
+            causal=self.causal, dropout_rate=self.dropout_rate,
+            acc_fwd=self.acc_fwd, acc_bwd=self.acc_bwd, impl=impl))
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    """Initialise all trainable parameters (nested dict pytree)."""
+    dt = cfg.jdtype
+    keys = jax.random.split(key, cfg.num_layers + 3)
+    s = cfg.d_model ** -0.5
+
+    def layer_params(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "attn": mha.init_mha_params(k1, cfg.d_model, dt),
+            "ln1_g": jnp.ones((cfg.d_model,), dt),
+            "ln1_b": jnp.zeros((cfg.d_model,), dt),
+            "ln2_g": jnp.ones((cfg.d_model,), dt),
+            "ln2_b": jnp.zeros((cfg.d_model,), dt),
+            "w1": (jax.random.normal(k2, (cfg.d_model, cfg.d_ff)) * s).astype(dt),
+            "b1": jnp.zeros((cfg.d_ff,), dt),
+            "w2": (jax.random.normal(k3, (cfg.d_ff, cfg.d_model))
+                   * cfg.d_ff ** -0.5).astype(dt),
+            "b2": jnp.zeros((cfg.d_model,), dt),
+        }
+
+    return {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab, cfg.d_model))
+                  * 0.02).astype(dt),
+        "pos": (jax.random.normal(keys[1], (cfg.seq, cfg.d_model))
+                * 0.02).astype(dt),
+        "layers": [layer_params(keys[2 + i]) for i in range(cfg.num_layers)],
+        "lnf_g": jnp.ones((cfg.d_model,), dt),
+        "lnf_b": jnp.zeros((cfg.d_model,), dt),
+        "head": (jax.random.normal(keys[-1], (cfg.d_model, cfg.vocab))
+                 * s).astype(dt),
+    }
+
+
+def flatten_params(params) -> tuple[list[jax.Array], object]:
+    """Deterministic flat ordering for the Rust buffer protocol."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    return leaves, treedef
+
+
+def param_names(params) -> list[str]:
+    """Stable slash-joined names aligned with `flatten_params` order."""
+    paths = jax.tree_util.tree_flatten_with_path(params)[0]
+    return ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path) for path, _ in paths]
+
+
+# --------------------------------------------------------------------------
+# Forward graph
+# --------------------------------------------------------------------------
+
+def layer_norm(x: jax.Array, g: jax.Array, b: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + 1e-5)).astype(x.dtype) * g + b
+
+
+def _gelu(x: jax.Array) -> jax.Array:
+    c = 0.7978845608028654
+    xf = x.astype(jnp.float32)
+    return (0.5 * xf * (1.0 + jnp.tanh(c * (xf + 0.044715 * xf ** 3)))
+            ).astype(x.dtype)
+
+
+def ffn(x: jax.Array, lp: dict, *, fused: bool) -> jax.Array:
+    """Position-wise FFN; optionally the fused Pallas kernel (FT analog)."""
+    if fused:
+        b, n, dm = x.shape
+        y = fused_ffn.ffn_fused(x.reshape(b * n, dm), lp["w1"], lp["b1"],
+                                lp["w2"], lp["b2"])
+        return y.reshape(b, n, dm)
+    return _gelu(x @ lp["w1"] + lp["b1"]) @ lp["w2"] + lp["b2"]
+
+
+def encoder_layer(x: jax.Array, lp: dict, seed: jax.Array, *,
+                  cfg: ModelConfig, attn: Callable) -> jax.Array:
+    """Pre-LN encoder layer: x + MHA(LN(x)); x + FFN(LN(x))."""
+    h = layer_norm(x, lp["ln1_g"], lp["ln1_b"])
+    x = x + mha.mha_layer(h, lp["attn"], seed, num_heads=cfg.num_heads,
+                          attn=attn)
+    h = layer_norm(x, lp["ln2_g"], lp["ln2_b"])
+    return x + ffn(h, lp, fused=cfg.attn_impl == "fully_fused")
+
+
+def encoder_forward(params: dict, x: jax.Array, seed: jax.Array, *,
+                    cfg: ModelConfig) -> jax.Array:
+    """Hidden-states-in → hidden-states-out encoder stack (Fig 12 workload).
+
+    `x` is (batch, seq, d_model) activations — the Fig 12 benchmark measures
+    the encoder layer itself, embedding excluded, like the baselines.
+    """
+    attn = cfg.attention()
+    for i, lp in enumerate(params["layers"]):
+        x = encoder_layer(x, lp, seed + jnp.float32(i), cfg=cfg, attn=attn)
+    return x
+
+
+def lm_forward(params: dict, tokens: jax.Array, seed: jax.Array, *,
+               cfg: ModelConfig) -> jax.Array:
+    """Token ids (batch, seq) → logits (batch, seq, vocab)."""
+    x = params["embed"][tokens] + params["pos"][None, :tokens.shape[1]]
+    x = encoder_forward(params, x, seed, cfg=cfg)
+    x = layer_norm(x, params["lnf_g"], params["lnf_b"])
+    return (x @ params["head"]).astype(jnp.float32)
+
+
+def loss_fn(params: dict, tokens: jax.Array, seed: jax.Array, *,
+            cfg: ModelConfig) -> jax.Array:
+    """Next-token cross-entropy, mean over (batch, seq−1)."""
+    logits = lm_forward(params, tokens[:, :-1], seed, cfg=cfg)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return nll.mean()
+
+
+# --------------------------------------------------------------------------
+# Adam train step (exported as a single HLO entry point)
+# --------------------------------------------------------------------------
+
+def init_opt_state(params) -> dict:
+    zeros = lambda p: jax.tree.map(lambda a: jnp.zeros_like(a, jnp.float32), p)
+    return {"m": zeros(params), "v": zeros(params)}
+
+
+def train_step(params: dict, opt: dict, step: jax.Array, tokens: jax.Array,
+               seed: jax.Array, *, cfg: ModelConfig):
+    """One fused forward + backward + Adam update.
+
+    Returns (params', opt', loss).  `step` is f32 (1-based) for the bias
+    correction; Rust increments it between calls.
+    """
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(p, tokens, seed, cfg=cfg))(params)
+
+    t = step
+    b1, b2 = cfg.beta1, cfg.beta2
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * gf * gf
+        mhat = m2 / (1 - b1 ** t)
+        vhat = v2 / (1 - b2 ** t)
+        p2 = p.astype(jnp.float32) - cfg.lr * mhat / (jnp.sqrt(vhat) + cfg.eps)
+        return p2.astype(p.dtype), m2, v2
+
+    out = jax.tree.map(upd, params, grads, opt["m"], opt["v"])
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v}, loss
+
+
+# --------------------------------------------------------------------------
+# Decoder (Figure 1's right-hand stack: masked self-attn + cross-attn + FFN)
+# --------------------------------------------------------------------------
+
+def init_decoder_layer_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    """Decoder layer = encoder layer params + a cross-attention block."""
+    k1, k2 = jax.random.split(key)
+    dt = cfg.jdtype
+    base_key, cross_key = jax.random.split(k1)
+    lp = {
+        "attn": mha.init_mha_params(base_key, cfg.d_model, dt),
+        "cross": mha.init_mha_params(cross_key, cfg.d_model, dt),
+        "ln1_g": jnp.ones((cfg.d_model,), dt),
+        "ln1_b": jnp.zeros((cfg.d_model,), dt),
+        "ln2_g": jnp.ones((cfg.d_model,), dt),
+        "ln2_b": jnp.zeros((cfg.d_model,), dt),
+        "ln3_g": jnp.ones((cfg.d_model,), dt),
+        "ln3_b": jnp.zeros((cfg.d_model,), dt),
+        "w1": (jax.random.normal(k2, (cfg.d_model, cfg.d_ff))
+               * cfg.d_model ** -0.5).astype(dt),
+        "b1": jnp.zeros((cfg.d_ff,), dt),
+        "w2": (jax.random.normal(jax.random.fold_in(k2, 1),
+                                 (cfg.d_ff, cfg.d_model))
+               * cfg.d_ff ** -0.5).astype(dt),
+        "b2": jnp.zeros((cfg.d_model,), dt),
+    }
+    return lp
+
+
+def decoder_layer(x: jax.Array, memory: jax.Array, lp: dict,
+                  seed: jax.Array, *, cfg: ModelConfig) -> jax.Array:
+    """Pre-LN decoder layer: masked self-attn → cross-attn → FFN.
+
+    Self-attention is always causal (the decoder's "masked computation");
+    cross-attention attends over the full encoder memory (no mask), with
+    possibly different source/target lengths — both run through the fused
+    SparkAttention kernels.
+    """
+    self_attn = mha.make_attention(mha.AttentionConfig(
+        causal=True, dropout_rate=cfg.dropout_rate, acc_fwd=cfg.acc_fwd,
+        acc_bwd=cfg.acc_bwd,
+        impl="unfused" if cfg.attn_impl == "unfused" else "fused"))
+    cross_attn = mha.make_attention(mha.AttentionConfig(
+        causal=False, dropout_rate=cfg.dropout_rate, acc_fwd=cfg.acc_fwd,
+        acc_bwd=cfg.acc_bwd,
+        impl="unfused" if cfg.attn_impl == "unfused" else "fused"))
+
+    h = layer_norm(x, lp["ln1_g"], lp["ln1_b"])
+    x = x + mha.mha_layer(h, lp["attn"], seed, num_heads=cfg.num_heads,
+                          attn=self_attn)
+    h = layer_norm(x, lp["ln2_g"], lp["ln2_b"])
+    x = x + mha.mha_layer_cross(h, memory, lp["cross"],
+                                seed + jnp.float32(101),
+                                num_heads=cfg.num_heads, attn=cross_attn)
+    h = layer_norm(x, lp["ln3_g"], lp["ln3_b"])
+    return x + ffn(h, lp, fused=cfg.attn_impl == "fully_fused")

@@ -1,0 +1,112 @@
+"""flash_bwd vs the oracle and vs JAX autodiff — Equation 4 correctness."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import flash_bwd, flash_fwd, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+TOL = dict(atol=3e-2, rtol=3e-2)
+
+
+def tensors(bh, n, d, seed=0, dtype=jnp.bfloat16):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    return tuple(jax.random.normal(k, (bh, n, d), dtype) for k in ks)
+
+
+def run_pair(q, k, v, do, *, causal, dropout=0.0, seed=0.0, acc="f32",
+             bq=64, bk=64):
+    o, lse = flash_fwd.flash_fwd(q, k, v, seed, causal=causal,
+                                 dropout_rate=dropout, acc="f32",
+                                 block_q=bq, block_k=bk)
+    return flash_bwd.flash_bwd(q, k, v, o, lse, do, seed, causal=causal,
+                               dropout_rate=dropout, acc=acc,
+                               block_q=bq, block_k=bk)
+
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("acc", ["f32", "bf16"])
+def test_matches_oracle(causal, acc):
+    q, k, v, do = tensors(2, 256, 64)
+    dq, dk, dv = run_pair(q, k, v, do, causal=causal, acc=acc)
+    rdq, rdk, rdv = ref.mha_bwd(q, k, v, do, causal=causal)
+    for got, want, nm in [(dq, rdq, "dq"), (dk, rdk, "dk"), (dv, rdv, "dv")]:
+        assert jnp.allclose(got.astype(jnp.float32),
+                            want.astype(jnp.float32), **TOL), nm
+
+
+@pytest.mark.parametrize("causal", [False, True])
+def test_dropout_replay_consistency(causal):
+    """Backward must regenerate the forward's exact dropout masks."""
+    q, k, v, do = tensors(2, 128, 32, seed=1)
+    dq, dk, dv = run_pair(q, k, v, do, causal=causal, dropout=0.1, seed=3.0)
+    rdq, rdk, rdv = ref.mha_bwd(q, k, v, do, causal=causal,
+                                dropout_rate=0.1, seed=3.0,
+                                block_q=64, block_k=64)
+    for got, want, nm in [(dq, rdq, "dq"), (dk, rdk, "dk"), (dv, rdv, "dv")]:
+        assert jnp.allclose(got.astype(jnp.float32),
+                            want.astype(jnp.float32), **TOL), nm
+
+
+def test_oracle_matches_autodiff():
+    """ref.mha_bwd is itself pinned to jax.grad of ref.mha_fwd (f32)."""
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 4)
+    q, k, v, do = (jax.random.normal(kk, (1, 64, 16), jnp.float32)
+                   for kk in ks)
+
+    def f(q, k, v):
+        o, _ = ref.mha_fwd(q, k, v, causal=True, dropout_rate=0.1, seed=2.0,
+                           block_q=32, block_k=32)
+        return jnp.sum(o * do)
+
+    adq, adk, adv = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    rdq, rdk, rdv = ref.mha_bwd(q, k, v, do, causal=True, dropout_rate=0.1,
+                                seed=2.0, block_q=32, block_k=32)
+    assert jnp.allclose(adq, rdq, atol=1e-4)
+    assert jnp.allclose(adk, rdk, atol=1e-4)
+    assert jnp.allclose(adv, rdv, atol=1e-4)
+
+
+def test_dpsum_kernel():
+    """The Pallas dPsum preprocess equals rowsum(dO ∘ O)."""
+    key = jax.random.PRNGKey(9)
+    o = jax.random.normal(key, (2, 128, 32), jnp.bfloat16)
+    do = jax.random.normal(jax.random.fold_in(key, 1), (2, 128, 32),
+                           jnp.bfloat16)
+    got = flash_bwd.dpsum(o, do, block_q=64)
+    want = jnp.sum(o.astype(jnp.float32) * do.astype(jnp.float32), axis=-1)
+    assert jnp.allclose(got, want, atol=1e-2, rtol=1e-2)
+
+
+def test_block_shape_invariance():
+    q, k, v, do = tensors(1, 128, 32, seed=2)
+    base = run_pair(q, k, v, do, causal=True, bq=128, bk=128)
+    for bq, bk in [(32, 32), (64, 32), (32, 64)]:
+        got = run_pair(q, k, v, do, causal=True, bq=bq, bk=bk)
+        for g, b in zip(got, base):
+            assert jnp.allclose(g.astype(jnp.float32),
+                                b.astype(jnp.float32), **TOL), (bq, bk)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    bh=st.integers(1, 2),
+    n_pow=st.integers(4, 7),
+    d=st.sampled_from([8, 16, 32]),
+    causal=st.booleans(),
+)
+def test_hypothesis_grad_sweep(bh, n_pow, d, causal):
+    n = 1 << n_pow
+    block = min(32, n)
+    q, k, v, do = tensors(bh, n, d, seed=n_pow * 17 + d)
+    dq, dk, dv = run_pair(q, k, v, do, causal=causal, bq=block, bk=block)
+    rdq, rdk, rdv = ref.mha_bwd(q, k, v, do, causal=causal)
+    for got, want in [(dq, rdq), (dk, rdk), (dv, rdv)]:
+        assert got.shape == (bh, n, d)
+        assert jnp.allclose(got.astype(jnp.float32),
+                            want.astype(jnp.float32), atol=5e-2, rtol=5e-2)

@@ -1,0 +1,126 @@
+"""flash_fwd vs the pure-jnp oracle: the core L1 correctness signal."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import flash_fwd, layouts, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def qkv(bh, n, d, seed=0, dtype=jnp.bfloat16):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    return tuple(jax.random.normal(k, (bh, n, d), dtype) for k in ks)
+
+
+TOL = dict(atol=2e-2, rtol=2e-2)
+
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("acc", ["f32", "bf16"])
+def test_matches_oracle(causal, acc):
+    q, k, v = qkv(2, 256, 64)
+    o, lse = flash_fwd.flash_fwd(q, k, v, causal=causal, acc=acc,
+                                 block_q=64, block_k=64)
+    ro, rlse = ref.mha_fwd(q, k, v, causal=causal)
+    assert jnp.allclose(o.astype(jnp.float32), ro.astype(jnp.float32), **TOL)
+    assert jnp.allclose(lse, rlse, atol=1e-3)
+
+
+@pytest.mark.parametrize("causal", [False, True])
+def test_dropout_matches_oracle_with_shared_masks(causal):
+    q, k, v = qkv(2, 128, 32, seed=1)
+    o, _ = flash_fwd.flash_fwd(q, k, v, 5.0, causal=causal,
+                               dropout_rate=0.1, block_q=64, block_k=64)
+    ro, _ = ref.mha_fwd(q, k, v, causal=causal, dropout_rate=0.1, seed=5.0,
+                        block_q=64, block_k=64)
+    assert jnp.allclose(o.astype(jnp.float32), ro.astype(jnp.float32), **TOL)
+
+
+def test_dropout_seed_changes_output():
+    q, k, v = qkv(1, 128, 32, seed=2)
+    o1, _ = flash_fwd.flash_fwd(q, k, v, 1.0, dropout_rate=0.1,
+                                block_q=64, block_k=64)
+    o2, _ = flash_fwd.flash_fwd(q, k, v, 2.0, dropout_rate=0.1,
+                                block_q=64, block_k=64)
+    assert not jnp.allclose(o1.astype(jnp.float32), o2.astype(jnp.float32),
+                            atol=1e-3)
+
+
+def test_dropout_zero_equals_no_dropout():
+    q, k, v = qkv(1, 128, 32, seed=3)
+    o1, _ = flash_fwd.flash_fwd(q, k, v, 7.0, dropout_rate=0.0,
+                                block_q=64, block_k=64)
+    o2, _ = flash_fwd.flash_fwd(q, k, v, 9.0, dropout_rate=0.0,
+                                block_q=64, block_k=64)
+    assert jnp.array_equal(o1, o2)
+
+
+def test_block_shape_invariance():
+    """Equation 3: any block partition computes the same softmax."""
+    q, k, v = qkv(2, 128, 32, seed=4)
+    base, base_lse = flash_fwd.flash_fwd(q, k, v, block_q=128, block_k=128)
+    for bq, bk in [(32, 32), (64, 32), (32, 64), (128, 32)]:
+        o, lse = flash_fwd.flash_fwd(q, k, v, block_q=bq, block_k=bk)
+        assert jnp.allclose(o.astype(jnp.float32),
+                            base.astype(jnp.float32), **TOL), (bq, bk)
+        assert jnp.allclose(lse, base_lse, atol=1e-3)
+
+
+def test_scale_parameter():
+    q, k, v = qkv(1, 64, 16, seed=5)
+    o1, _ = flash_fwd.flash_fwd(q, k, v, scale=0.5, block_q=64, block_k=64)
+    r1, _ = ref.mha_fwd(q, k, v, scale=0.5)
+    assert jnp.allclose(o1.astype(jnp.float32), r1.astype(jnp.float32),
+                        **TOL)
+
+
+def test_rejects_bad_args():
+    q, k, v = qkv(1, 64, 16)
+    with pytest.raises(ValueError, match="acc"):
+        flash_fwd.flash_fwd(q, k, v, acc="f16")
+    with pytest.raises(ValueError, match="divisible"):
+        flash_fwd.flash_fwd(q, k, v, block_q=48)
+
+
+def test_f32_inputs_supported():
+    q, k, v = qkv(1, 64, 16, dtype=jnp.float32)
+    o, _ = flash_fwd.flash_fwd(q, k, v, block_q=32, block_k=32)
+    r, _ = ref.mha_fwd(q, k, v)
+    assert o.dtype == jnp.float32
+    assert jnp.allclose(o, r, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bh=st.integers(1, 3),
+    n_pow=st.integers(4, 8),          # n ∈ {16 … 256}
+    d=st.sampled_from([8, 16, 32, 64]),
+    causal=st.booleans(),
+    acc=st.sampled_from(["f32", "bf16"]),
+    block_pow=st.integers(3, 6),      # blocks ∈ {8 … 64}
+)
+def test_hypothesis_shape_sweep(bh, n_pow, d, causal, acc, block_pow):
+    """Property: kernel ≈ oracle over random shape/block/dtype configs."""
+    n = 1 << n_pow
+    block = min(1 << block_pow, n)
+    q, k, v = qkv(bh, n, d, seed=n_pow * 31 + d)
+    o, lse = flash_fwd.flash_fwd(q, k, v, causal=causal, acc=acc,
+                                 block_q=block, block_k=block)
+    ro, rlse = ref.mha_fwd(q, k, v, causal=causal)
+    assert o.shape == (bh, n, d)
+    assert jnp.allclose(o.astype(jnp.float32), ro.astype(jnp.float32),
+                        atol=3e-2, rtol=3e-2)
+    assert jnp.allclose(lse, rlse, atol=2e-3)
+
+
+def test_default_blocks_from_layouts():
+    q, k, v = qkv(1, 256, 64, seed=6)
+    cfg = layouts.choose_blocks(256, 64)
+    o_default, _ = flash_fwd.flash_fwd(q, k, v)
+    o_explicit, _ = flash_fwd.flash_fwd(q, k, v, block_q=cfg.block_q,
+                                        block_k=cfg.block_k)
+    assert jnp.array_equal(o_default, o_explicit)

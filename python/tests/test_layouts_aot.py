@@ -1,0 +1,124 @@
+"""Block/VMEM budgeting + the AOT export contract."""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile import aot
+from compile.kernels import layouts
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# -- layouts ---------------------------------------------------------------
+
+def test_choose_blocks_default_is_mxu_square():
+    cfg = layouts.choose_blocks(2048, 128)
+    assert (cfg.block_q, cfg.block_k) == (256, 256) or \
+        (cfg.block_q, cfg.block_k) == (128, 128) or cfg.block_q >= 128
+    assert cfg.vmem_bytes <= layouts.VMEM_BYTES
+    assert cfg.mxu_utilization == 1.0
+
+
+def test_choose_blocks_small_n():
+    cfg = layouts.choose_blocks(64, 64)
+    assert cfg.block_q <= 64
+    assert cfg.vmem_bytes <= layouts.VMEM_BYTES
+
+
+def test_vmem_footprint_matches_design_doc():
+    # DESIGN.md §7: (128,128,d=128) ≈ 225 KB single-buffered
+    fp = layouts.vmem_footprint(128, 128, 128, double_buffer=False)
+    assert 200_000 < fp < 250_000, fp
+
+
+def test_tiny_vmem_budget_shrinks_blocks():
+    cfg = layouts.choose_blocks(2048, 128, vmem_budget=200_000)
+    assert cfg.block_q < 256
+    with pytest.raises(ValueError):
+        layouts.choose_blocks(2048, 128, vmem_budget=1000)
+
+
+def test_io_formulas_ordering():
+    for n in (512, 2048, 16384):
+        unf = layouts.hbm_bytes_unfused_fwd(8, n, 64)
+        fus = layouts.hbm_bytes_fused_fwd(8, n, 64)
+        assert unf > fus
+    # N² term dominates as n grows
+    r1 = layouts.hbm_bytes_unfused_fwd(8, 512, 64) / \
+        layouts.hbm_bytes_fused_fwd(8, 512, 64)
+    r2 = layouts.hbm_bytes_unfused_fwd(8, 4096, 64) / \
+        layouts.hbm_bytes_fused_fwd(8, 4096, 64)
+    assert r2 > r1 * 3
+
+
+def test_mxu_utilization_degrades_below_128():
+    assert layouts.mxu_utilization(128, 128, 128) == 1.0
+    assert layouts.mxu_utilization(64, 128, 128) == 0.5
+    assert layouts.mxu_utilization(128, 128, 64) == 0.5
+
+
+# -- aot export ------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("arts")
+    manifest = aot.build(str(out), ["accuracy"],
+                         only="d64_n256_bh2_c0")
+    return out, manifest
+
+
+def test_manifest_entries_complete(built):
+    out, manifest = built
+    arts = manifest["artifacts"]
+    assert arts, "no artifacts built"
+    for a in arts:
+        assert os.path.exists(out / a["file"]), a["name"]
+        assert a["kind"]
+        for io in ("inputs", "outputs"):
+            for t in a[io]:
+                assert t["shape"], (a["name"], t)
+                assert t["dtype"] in aot.DTYPE_NAMES.values()
+        assert "flops" in a["attrs"]
+
+
+def test_hlo_is_custom_call_free(built):
+    out, manifest = built
+    for a in manifest["artifacts"]:
+        text = open(out / a["file"]).read()
+        assert "custom-call" not in text, \
+            f"{a['name']} contains a custom-call (won't run on CPU PJRT)"
+        assert text.startswith("HloModule"), a["name"]
+
+
+def test_keep_unused_inputs_preserved(built):
+    """dropout-0 artifacts must still take their seed parameter."""
+    out, manifest = built
+    fwd = [a for a in manifest["artifacts"] if a["kind"] == "mha_fwd"]
+    assert fwd
+    for a in fwd:
+        assert a["inputs"][0]["name"] == "seed"
+        text = open(out / a["file"]).read()
+        entry = text.split("ENTRY")[1]
+        assert entry.count("parameter(") == len(a["inputs"]), a["name"]
+
+
+def test_incremental_build_skips(built):
+    out, _ = built
+    before = {f: os.path.getmtime(out / f) for f in os.listdir(out)}
+    aot.build(str(out), ["accuracy"], only="d64_n256_bh2_c0")
+    after = {f: os.path.getmtime(out / f) for f in os.listdir(out)}
+    changed = {f for f in before
+               if f != "manifest.json" and before[f] != after.get(f)}
+    assert not changed, f"incremental build rebuilt {changed}"
+
+
+def test_manifest_json_is_valid(built):
+    out, _ = built
+    with open(out / "manifest.json") as f:
+        doc = json.load(f)
+    assert doc["version"] == 1
+    names = [a["name"] for a in doc["artifacts"]]
+    assert len(names) == len(set(names)), "duplicate artifact names"

@@ -1,0 +1,110 @@
+"""Layer-2 model: encoder variants, LM loss, Adam train step."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+SMALL = M.ModelConfig(num_layers=1, d_model=64, num_heads=2, d_ff=128,
+                      seq=64, batch=4, dropout_rate=0.0)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(SMALL, jax.random.PRNGKey(0))
+
+
+def test_param_tree_and_names(params):
+    leaves, _ = M.flatten_params(params)
+    names = M.param_names(params)
+    assert len(leaves) == len(names)
+    assert "embed" in names
+    assert any(n.startswith("layers/0/attn/") for n in names)
+    # deterministic ordering
+    assert names == M.param_names(params)
+
+
+@pytest.mark.parametrize("impl", ["unfused", "fused", "fully_fused"])
+def test_encoder_variants_agree(params, impl):
+    cfg = M.ModelConfig(**{**SMALL.__dict__, "attn_impl": impl})
+    base_cfg = M.ModelConfig(**{**SMALL.__dict__, "attn_impl": "unfused"})
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 64), jnp.bfloat16)
+    seed = jnp.zeros((1,), jnp.float32)
+    y = M.encoder_forward(params, x, seed, cfg=cfg)
+    y0 = M.encoder_forward(params, x, seed, cfg=base_cfg)
+    assert y.shape == (2, 64, 64)
+    assert jnp.allclose(y.astype(jnp.float32), y0.astype(jnp.float32),
+                        atol=5e-2, rtol=5e-2)
+
+
+def test_lm_forward_logits(params):
+    toks = jax.random.randint(jax.random.PRNGKey(2), (4, 64), 0, 256)
+    logits = M.lm_forward(params, toks, jnp.zeros((1,), jnp.float32),
+                          cfg=SMALL)
+    assert logits.shape == (4, 64, 256)
+    assert logits.dtype == jnp.float32
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_initial_loss_near_uniform(params):
+    toks = jax.random.randint(jax.random.PRNGKey(3), (4, 65), 0, 256)
+    loss = M.loss_fn(params, toks, jnp.zeros((1,), jnp.float32), cfg=SMALL)
+    # fresh init ⇒ close to ln(256) ≈ 5.545
+    assert 4.5 < float(loss) < 7.0
+
+
+def test_train_step_reduces_loss(params):
+    opt = M.init_opt_state(params)
+    toks = jax.random.randint(jax.random.PRNGKey(4),
+                              (SMALL.batch, SMALL.seq + 1), 0, 256)
+    step = jax.jit(functools.partial(M.train_step, cfg=SMALL))
+    p = params
+    losses = []
+    for i in range(10):
+        p, opt, loss = step(p, opt, jnp.float32(i + 1), toks,
+                            jnp.float32(i))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.5, losses
+    assert all(jnp.isfinite(jnp.asarray(losses)))
+
+
+def test_train_step_with_fused_attention_and_dropout():
+    cfg = M.ModelConfig(num_layers=1, d_model=32, num_heads=2, d_ff=64,
+                        seq=32, batch=2, dropout_rate=0.1,
+                        attn_impl="fused")
+    p = M.init_params(cfg, jax.random.PRNGKey(5))
+    opt = M.init_opt_state(p)
+    toks = jax.random.randint(jax.random.PRNGKey(6), (2, 33), 0, 256)
+    step = jax.jit(functools.partial(M.train_step, cfg=cfg))
+    l0 = None
+    for i in range(6):
+        p, opt, loss = step(p, opt, jnp.float32(i + 1), toks,
+                            jnp.float32(i))
+        l0 = l0 or float(loss)
+    assert float(loss) < l0
+
+
+def test_layer_norm_properties():
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 8, 32), jnp.float32) \
+        * 10.0 + 3.0
+    g = jnp.ones((32,), jnp.float32)
+    b = jnp.zeros((32,), jnp.float32)
+    y = M.layer_norm(x, g, b)
+    mu = y.mean(-1)
+    sd = y.std(-1)
+    assert jnp.allclose(mu, jnp.zeros_like(mu), atol=1e-4)
+    assert jnp.allclose(sd, jnp.ones_like(sd), atol=1e-2)
+
+
+def test_ffn_fused_matches_unfused(params):
+    lp = params["layers"][0]
+    x = jax.random.normal(jax.random.PRNGKey(8), (2, 64, 64), jnp.bfloat16)
+    y_ref = M.ffn(x, lp, fused=False)
+    y_fused = M.ffn(x, lp, fused=True)
+    assert jnp.allclose(y_ref.astype(jnp.float32),
+                        y_fused.astype(jnp.float32), atol=3e-2, rtol=3e-2)

@@ -1,0 +1,54 @@
+"""The unfused baseline: numerics vs oracle + honesty of the staging."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import naive, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def qkv(bh, n, d, seed=0):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    return tuple(jax.random.normal(k, (bh, n, d), jnp.bfloat16) for k in ks)
+
+
+@pytest.mark.parametrize("causal", [False, True])
+def test_matches_oracle(causal):
+    q, k, v = qkv(2, 128, 32)
+    o = naive.mha_fwd_unfused(q, k, v, causal=causal)
+    r, _ = ref.mha_fwd(q, k, v, causal=causal)
+    assert jnp.allclose(o.astype(jnp.float32), r.astype(jnp.float32),
+                        atol=2e-2, rtol=2e-2)
+
+
+def test_backward_matches_autodiff_of_ref():
+    q, k, v = qkv(1, 64, 16, seed=1)
+    do = jax.random.normal(jax.random.PRNGKey(9), q.shape, jnp.bfloat16)
+    dq, dk, dv = naive.mha_bwd_unfused(q, k, v, do, causal=True)
+    rdq, rdk, rdv = ref.mha_bwd(q, k, v, do, causal=True)
+    for got, want in [(dq, rdq), (dk, rdk), (dv, rdv)]:
+        assert jnp.allclose(got.astype(jnp.float32),
+                            want.astype(jnp.float32), atol=3e-2, rtol=3e-2)
+
+
+def test_stage_barriers_survive_lowering():
+    """The baseline's honesty: optimization_barrier must still be in the
+    lowered HLO, so XLA cannot fuse away the N×N round-trips."""
+    q, k, v = qkv(1, 64, 16)
+
+    def fn(q, k, v):
+        return naive.mha_fwd_unfused(q, k, v)
+
+    hlo = jax.jit(fn).lower(q, k, v).compiler_ir("hlo").as_hlo_text()
+    assert hlo.count("opt-barrier") >= 2, "stage barriers were optimised out"
+
+
+def test_dropout_applies():
+    q, k, v = qkv(1, 64, 16, seed=2)
+    o_plain = naive.mha_fwd_unfused(q, k, v, 1.0, dropout_rate=0.0)
+    o_drop = naive.mha_fwd_unfused(q, k, v, 1.0, dropout_rate=0.5)
+    assert not jnp.allclose(o_plain.astype(jnp.float32),
+                            o_drop.astype(jnp.float32), atol=1e-3)

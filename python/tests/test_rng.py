@@ -1,0 +1,54 @@
+"""Dropout RNG: tile draws must be schedule-independent and replayable."""
+
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import rng
+
+
+def test_full_mask_assembles_tiles():
+    seed, bh, n, block = 7.0, 2, 64, 16
+    nq = nk = n // block
+    full = rng.full_keep_mask(seed, bh, n, n, block, block, 0.1)
+    for b in range(bh):
+        for iq in range(nq):
+            for ik in range(nk):
+                tile = rng.tile_keep_mask(
+                    seed, jnp.uint32(b), jnp.uint32(iq), jnp.uint32(ik),
+                    nq, nk, (block, block), 0.1)
+                got = full[b, iq * block:(iq + 1) * block,
+                           ik * block:(ik + 1) * block]
+                assert jnp.array_equal(tile, got), (b, iq, ik)
+
+
+def test_tiles_differ_across_indices():
+    args = dict(nq=4, nk=4, shape=(16, 16), rate=0.5)
+    t0 = rng.tile_keep_mask(1.0, jnp.uint32(0), jnp.uint32(0),
+                            jnp.uint32(0), **args)
+    t1 = rng.tile_keep_mask(1.0, jnp.uint32(0), jnp.uint32(0),
+                            jnp.uint32(1), **args)
+    t2 = rng.tile_keep_mask(1.0, jnp.uint32(1), jnp.uint32(0),
+                            jnp.uint32(0), **args)
+    assert not jnp.array_equal(t0, t1)
+    assert not jnp.array_equal(t0, t2)
+
+
+def test_zero_rate_keeps_everything():
+    m = rng.full_keep_mask(0.0, 1, 32, 32, 16, 16, 0.0)
+    assert bool(m.all())
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1 << 20), rate=st.sampled_from([0.1, 0.3, 0.5]))
+def test_keep_fraction_near_rate(seed, rate):
+    m = rng.full_keep_mask(float(seed), 2, 64, 64, 32, 32, rate)
+    keep = float(m.mean())
+    assert abs(keep - (1.0 - rate)) < 0.08, (keep, rate)
+
+
+def test_seed_determinism():
+    a = rng.full_keep_mask(3.0, 1, 32, 32, 16, 16, 0.2)
+    b = rng.full_keep_mask(3.0, 1, 32, 32, 16, 16, 0.2)
+    c = rng.full_keep_mask(4.0, 1, 32, 32, 16, 16, 0.2)
+    assert jnp.array_equal(a, b)
+    assert not jnp.array_equal(a, c)

@@ -1,0 +1,51 @@
+//! `cargo bench --bench ablation_blocks` — block-shape ablation (DESIGN.md
+//! §8): the same MHA problem (bh=4, n=1024, d=64) compiled with different
+//! (block_q, block_k) tiles.  Reports measured CPU time next to the static
+//! VMEM footprint and MXU-occupancy estimate — the two quantities that
+//! decide the tile on real hardware (interpret-mode wallclock is a
+//! structure proxy, not a TPU measurement).
+
+mod common;
+
+use sparkattention::bench::measure;
+use sparkattention::coordinator::inputs::synth_inputs;
+
+fn main() {
+    sparkattention::logging::init();
+    let Some(engine) = common::engine_or_skip() else { return };
+    let opts = common::harness_options();
+    let mut metas: Vec<_> = engine.manifest().of_kind("mha_fwd_ablation")
+        .cloned().collect();
+    if metas.is_empty() {
+        eprintln!("SKIP: ablation profile not built \
+                   (python -m compile.aot --profile ablation)");
+        return;
+    }
+    metas.sort_by_key(|m| (m.attr_i64("block_q"), m.attr_i64("block_k")));
+    println!("== Block-shape ablation (bh=4, n=1024, d=64, f32-ACC) ==");
+    println!("{:>8} {:>8} {:>12} {:>10} {:>12} {:>10}",
+             "block_q", "block_k", "vmem_KiB", "mxu_occ", "mean_ms",
+             "grid_steps");
+    for meta in &metas {
+        let ins = synth_inputs(meta, 42).expect("inputs");
+        let time = measure(opts.bench, || {
+            Ok(engine.execute_timed(&meta.name, &ins)?.1)
+        }).expect("measure");
+        let bq = meta.attr_i64("block_q").unwrap_or(0);
+        let bk = meta.attr_i64("block_k").unwrap_or(0);
+        let n = meta.attr_i64("n").unwrap_or(0);
+        let bh = meta.attr_i64("bh").unwrap_or(0);
+        let steps = bh * (n / bq.max(1)) * (n / bk.max(1));
+        println!("{:>8} {:>8} {:>12.1} {:>10.3} {:>12.3} {:>10}",
+                 bq, bk,
+                 meta.attr_i64("vmem_bytes").unwrap_or(0) as f64 / 1024.0,
+                 meta.attr_f64("mxu_utilization").unwrap_or(0.0),
+                 time.mean() * 1e3, steps);
+    }
+    println!("\nreading: VMEM grows ~quadratically with the tile while \
+              staying far under the 16 MiB budget, so the default \
+              (choose_blocks → 256×256) minimises grid steps at full MXU \
+              occupancy — the paper's m8n8k4 tile-quantisation argument \
+              at MXU scale.  Asymmetric tiles buy nothing at equal step \
+              count.");
+}

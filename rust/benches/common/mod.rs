@@ -1,0 +1,43 @@
+//! Shared scaffolding for the `cargo bench` binaries (custom harness —
+//! no criterion offline).  Each bench regenerates one paper artifact via
+//! the same `coordinator::harness` code the `spark` CLI uses, honouring:
+//!
+//! * `SPARK_ARTIFACTS`      — artifact directory (default `artifacts/`)
+//! * `SPARK_BENCH_ITERS`    — measured iterations (default 3)
+//! * `SPARK_BENCH_WARMUP`   — warmup iterations (default 1)
+//! * `SPARK_BENCH_JSON_DIR` — if set, JSON reports are written there
+
+// Each bench binary uses a subset of these helpers.
+#![allow(dead_code)]
+
+use sparkattention::bench::{Options, Report};
+use sparkattention::coordinator::harness::HarnessOptions;
+use sparkattention::runtime::Engine;
+
+pub fn engine_or_skip() -> Option<Engine> {
+    let dir = std::env::var("SPARK_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {dir}; run `make artifacts`");
+        return None;
+    }
+    Some(Engine::new(dir).expect("engine"))
+}
+
+pub fn harness_options() -> HarnessOptions {
+    let envnum = |k: &str, d: usize| std::env::var(k).ok()
+        .and_then(|v| v.parse().ok()).unwrap_or(d);
+    HarnessOptions {
+        bench: Options {
+            warmup_iters: envnum("SPARK_BENCH_WARMUP", 1),
+            iters: envnum("SPARK_BENCH_ITERS", 3),
+        },
+        mem_budget: envnum("SPARK_BENCH_MEM_GB", 8) << 30,
+    }
+}
+
+pub fn emit(report: &Report, name: &str) {
+    let json = std::env::var("SPARK_BENCH_JSON_DIR").ok()
+        .map(|d| format!("{d}/{name}.json"));
+    print!("{}", report.emit(json.as_deref()).expect("emit"));
+}

@@ -1,0 +1,35 @@
+//! `cargo bench --bench fig10_forward` — regenerates Fig 10 (E1):
+//! MHA-Forward across sequence lengths, head dims, causal settings, and
+//! accumulator variants, measured on the CPU PJRT backend, followed by the
+//! V100 projection at paper scale.
+//!
+//! Shape (who wins, how the gap scales) is measured; magnitude at paper
+//! scale comes from the projection.  See EXPERIMENTS.md §E1.
+
+mod common;
+
+use sparkattention::coordinator::{fig10_forward, projected_fig10};
+use sparkattention::perfmodel::V100;
+
+fn main() {
+    sparkattention::logging::init();
+    if let Some(engine) = common::engine_or_skip() {
+        let report = fig10_forward(&engine, common::harness_options())
+            .expect("fig10 harness");
+        common::emit(&report, "fig10_measured");
+        for acc in ["spark_f32acc", "spark_bf16acc"] {
+            if let Some((mean, max)) =
+                report.speedup_summary(acc, "pytorch_fp16") {
+                println!("measured speedup {acc}: avg {mean:.2}× \
+                          (max {max:.2}×)");
+            }
+        }
+    }
+    let proj = projected_fig10(&V100, false);
+    common::emit(&proj, "fig10_projected");
+    if let Some((mean, max)) =
+        proj.speedup_summary("spark_projected", "pytorch_projected") {
+        println!("projected V100 speedup: avg {mean:.2}× (max {max:.2}×)  \
+                  [paper: avg 4.55× (max 9.17×)]");
+    }
+}

@@ -1,0 +1,29 @@
+//! `cargo bench --bench fig11_backward` — regenerates Fig 11 (E2):
+//! MHA-Backward with recomputation vs the staged PyTorch-style backward
+//! (reported as t(fwd+bwd) − t(fwd)), plus the V100 projection.
+//! See EXPERIMENTS.md §E2.
+
+mod common;
+
+use sparkattention::coordinator::{fig11_backward, projected_fig10};
+use sparkattention::perfmodel::V100;
+
+fn main() {
+    sparkattention::logging::init();
+    if let Some(engine) = common::engine_or_skip() {
+        let report = fig11_backward(&engine, common::harness_options())
+            .expect("fig11 harness");
+        common::emit(&report, "fig11_measured");
+        if let Some((mean, max)) =
+            report.speedup_summary("spark_bf16acc", "pytorch_fp16") {
+            println!("measured speedup: avg {mean:.2}× (max {max:.2}×)");
+        }
+    }
+    let proj = projected_fig10(&V100, true);
+    common::emit(&proj, "fig11_projected");
+    if let Some((mean, max)) =
+        proj.speedup_summary("spark_projected", "pytorch_projected") {
+        println!("projected V100 speedup: avg {mean:.2}× (max {max:.2}×)  \
+                  [paper: avg 3.44× (max 7.91×)]");
+    }
+}

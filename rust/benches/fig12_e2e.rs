@@ -1,0 +1,33 @@
+//! `cargo bench --bench fig12_e2e` — regenerates Fig 12 (E4): single
+//! encoder-layer forward latency across fusion scopes (PyTorch-JIT analog,
+//! SparkAttention, FasterTransformer analog), with OOM cells from the
+//! memory budget.  See EXPERIMENTS.md §E4.
+
+mod common;
+
+use sparkattention::coordinator::{fig12_e2e, projected_fig12};
+use sparkattention::perfmodel::V100;
+
+fn main() {
+    sparkattention::logging::init();
+    let proj = projected_fig12(&V100);
+    common::emit(&proj, "fig12_projected");
+    if let Some((mean, max)) =
+        proj.speedup_summary("sparkattention", "pytorch_jit") {
+        println!("projected V100 e2e speedup: avg {mean:.2}× (max {max:.2}×)  \
+                  [paper: avg 1.80× (max 2.46×)]");
+    }
+    let Some(engine) = common::engine_or_skip() else { return };
+    let report = fig12_e2e(&engine, common::harness_options())
+        .expect("fig12 harness");
+    common::emit(&report, "fig12_measured");
+    for (v, b) in [("sparkattention", "pytorch_jit"),
+                   ("fastertransformer*", "pytorch_jit"),
+                   ("sparkattention", "fastertransformer*")] {
+        if let Some((mean, max)) = report.speedup_summary(v, b) {
+            println!("speedup {v} vs {b}: avg {mean:.2}× (max {max:.2}×)");
+        }
+    }
+    println!("[paper: SparkAttention vs PyTorch_JIT avg 1.80× \
+              (max 2.46×)]");
+}

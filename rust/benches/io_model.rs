@@ -1,0 +1,63 @@
+//! `cargo bench --bench io_model` — regenerates the §2.3 / Table-1-adjacent
+//! I/O analysis (E5): HBM traffic per schedule from both the closed-form
+//! model and the schedule simulator, plus the V100 roofline projections
+//! that turn traffic into the paper's headline speedups.
+
+use sparkattention::coordinator::io_report;
+use sparkattention::iomodel::{self, MhaShape};
+use sparkattention::perfmodel::{self, V100};
+
+fn main() {
+    sparkattention::logging::init();
+    print!("{}", io_report(&V100));
+
+    // Cross-check: simulator vs closed form across a sweep (hard assert —
+    // a bench that silently drifts from the model is worse than none).
+    for d in [64usize, 128] {
+        for n in [512usize, 2048, 16384] {
+            let s = MhaShape::new(8, n, d);
+            let (sim, overflow) =
+                iomodel::simulate_fused_fwd(s, 128, 128, 16 << 20);
+            let ana = iomodel::analytic_fused_fwd_streamed(s, 128);
+            assert_eq!(sim.read_bytes, ana.read_bytes, "n={n} d={d}");
+            assert!(!overflow, "VMEM overflow at n={n} d={d}");
+        }
+    }
+    println!("simulator ⇄ closed-form cross-check: OK");
+
+    // Where does fusion stop mattering?  Crossover scan: the fused/unfused
+    // traffic ratio as d/n varies (the paper's long-sequence emphasis).
+    println!("\ntraffic ratio (unfused ÷ fused) across shapes:");
+    print!("{:>8}", "n\\d");
+    for d in [32usize, 64, 128, 256] {
+        print!("{d:>8}");
+    }
+    println!();
+    for n in [128usize, 512, 2048, 8192] {
+        print!("{n:>8}");
+        for d in [32usize, 64, 128, 256] {
+            let s = MhaShape::new(8, n, d);
+            let r = iomodel::analytic_unfused_fwd(s).total_bytes() as f64
+                / iomodel::analytic_fused_fwd(s).total_bytes() as f64;
+            print!("{r:>8.1}");
+        }
+        println!();
+    }
+
+    // Projected end-to-end effect at paper scale.
+    println!("\nV100 projected forward time (ms) at paper scale:");
+    println!("{:>7} {:>10} {:>10} {:>8}", "n", "unfused", "fused", "ratio");
+    for n in [512usize, 1024, 2048, 4096, 16384] {
+        let s = perfmodel::paper_shape(n, 64);
+        let u = perfmodel::project_unfused_fwd(&V100, s, false);
+        let f = perfmodel::project_fused_fwd(&V100, s, false, 128);
+        if u.seconds.is_finite() {
+            println!("{n:>7} {:>10.2} {:>10.2} {:>7.2}×",
+                     u.seconds * 1e3, f.seconds * 1e3,
+                     u.seconds / f.seconds);
+        } else {
+            println!("{n:>7} {:>10} {:>10.2}     OOM→∞", "OOM",
+                     f.seconds * 1e3);
+        }
+    }
+}

@@ -1,0 +1,368 @@
+//! Pure-Rust multi-head attention: oracle + streaming (online-softmax)
+//! implementation.
+//!
+//! Two roles:
+//!
+//! 1. **Oracle** — `mha_forward` / `mha_backward` materialise the full N×N
+//!    score matrix in f32 (Equation 1 / Equation 4 of the paper) and are the
+//!    ground truth the device artifacts are verified against in the
+//!    integration tests (`rust/tests/`).
+//! 2. **Algorithm witness** — `mha_forward_streaming` re-implements the
+//!    fused kernel's *dataflow* (block-streamed K/V, running (m, l)
+//!    statistics, accumulator rescaling — Equation 3) on the host.  The
+//!    property tests in `rust/tests/proptest_attention.rs` check it against
+//!    the oracle over randomized shapes/blocks, which pins down the online
+//!    softmax algebra independently of JAX.
+//!
+//! Dropout is intentionally absent here: masks are derived from the device
+//! RNG (`python/compile/kernels/rng.py`), so cross-checking dropout paths
+//! happens in the Python test suite where both sides share the RNG.
+
+pub mod streaming_bwd;
+
+pub use streaming_bwd::mha_backward_streaming;
+
+use crate::tensor::{batch_matmul, batch_matmul_nt, batch_matmul_tn,
+                    softmax_lastdim, Tensor};
+
+/// Value used for masked-out logits (matches the kernels' `NEG_INF`).
+pub const NEG_INF: f32 = -1e30;
+
+/// Static attention parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct AttnParams {
+    pub causal: bool,
+    /// Softmax temperature; the standard choice is `1/sqrt(d)`.
+    pub scale: f32,
+}
+
+impl AttnParams {
+    pub fn new(d: usize, causal: bool) -> Self {
+        AttnParams { causal, scale: 1.0 / (d as f32).sqrt() }
+    }
+}
+
+/// Forward outputs: attention output + log-sum-exp statistics.
+#[derive(Debug, Clone)]
+pub struct ForwardResult {
+    pub output: Tensor,
+    /// (bh, n) row-wise log-sum-exp — the paper's "LES" record.
+    pub lse: Tensor,
+}
+
+/// Backward outputs (Equation 4).
+#[derive(Debug, Clone)]
+pub struct Grads {
+    pub dq: Tensor,
+    pub dk: Tensor,
+    pub dv: Tensor,
+}
+
+fn dims(q: &Tensor, k: &Tensor, v: &Tensor) -> (usize, usize, usize) {
+    let (bh, n, d) = match *q.shape() {
+        [a, b, c] => (a, b, c),
+        ref s => panic!("q must be rank-3 (bh, n, d), got {s:?}"),
+    };
+    assert_eq!(k.shape(), &[bh, n, d], "k shape mismatch");
+    assert_eq!(v.shape(), &[bh, n, d], "v shape mismatch");
+    (bh, n, d)
+}
+
+fn apply_causal_mask(s: &mut Tensor) {
+    let (bh, n, m) = match *s.shape() {
+        [a, b, c] => (a, b, c),
+        _ => unreachable!(),
+    };
+    let data = s.data_mut();
+    for bi in 0..bh {
+        for i in 0..n {
+            let row = &mut data[(bi * n + i) * m..(bi * n + i + 1) * m];
+            for (j, x) in row.iter_mut().enumerate() {
+                if j > i {
+                    *x = NEG_INF;
+                }
+            }
+        }
+    }
+}
+
+/// Oracle forward: materialises S and P (the unfused dataflow), f32 math.
+pub fn mha_forward(q: &Tensor, k: &Tensor, v: &Tensor,
+                   p: AttnParams) -> ForwardResult {
+    let (bh, n, _d) = dims(q, k, v);
+    let mut s = batch_matmul_nt(q, k).scale(p.scale);
+    if p.causal {
+        apply_causal_mask(&mut s);
+    }
+    // lse before normalisation (for parity with the fused kernel output)
+    let mut lse = Tensor::zeros(vec![bh, n]);
+    {
+        let sd = s.data();
+        let ld = lse.data_mut();
+        for (ri, row) in sd.chunks_exact(n).enumerate() {
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let sum: f32 = row.iter().map(|x| (x - m).exp()).sum();
+            ld[ri] = m + sum.ln();
+        }
+    }
+    softmax_lastdim(&mut s);
+    ForwardResult { output: batch_matmul(&s, v), lse }
+}
+
+/// Streaming forward: the fused kernel's block dataflow on the host.
+///
+/// Iterates K/V in `block_k` tiles per `block_q` row tile, carrying
+/// (m, l, acc) and rescaling by `exp(m_prev − m_cur)` — Equation 3.
+pub fn mha_forward_streaming(q: &Tensor, k: &Tensor, v: &Tensor,
+                             p: AttnParams, block_q: usize,
+                             block_k: usize) -> ForwardResult {
+    let (bh, n, d) = dims(q, k, v);
+    let bq = block_q.min(n).max(1);
+    let bk = block_k.min(n).max(1);
+    assert!(n % bq == 0 && n % bk == 0,
+            "n={n} must be divisible by blocks ({bq},{bk})");
+    let qd = q.data();
+    let kd = k.data();
+    let vd = v.data();
+    let mut out = vec![0.0f32; bh * n * d];
+    let mut lse = vec![0.0f32; bh * n];
+
+    for b in 0..bh {
+        for iq in (0..n).step_by(bq) {
+            // per-row running statistics + accumulator for this Q tile
+            let mut m = vec![f32::NEG_INFINITY; bq];
+            let mut l = vec![0.0f32; bq];
+            let mut acc = vec![0.0f32; bq * d];
+            for ik in (0..n).step_by(bk) {
+                if p.causal && ik > iq + bq - 1 {
+                    continue; // fully-masked tile: skipped, like the kernel
+                }
+                // s_tile = Q_tile · K_tileᵀ · scale  (+ causal mask)
+                for r in 0..bq {
+                    let qrow = &qd[(b * n + iq + r) * d
+                                   ..(b * n + iq + r + 1) * d];
+                    let mut srow = vec![0.0f32; bk];
+                    for (c, sv) in srow.iter_mut().enumerate() {
+                        let krow = &kd[(b * n + ik + c) * d
+                                       ..(b * n + ik + c + 1) * d];
+                        let mut dot = 0.0;
+                        for (x, y) in qrow.iter().zip(krow) {
+                            dot += x * y;
+                        }
+                        *sv = if p.causal && ik + c > iq + r {
+                            NEG_INF
+                        } else {
+                            dot * p.scale
+                        };
+                    }
+                    // online softmax update for row r
+                    let m_cur = srow.iter().cloned().fold(m[r], f32::max);
+                    let alpha = if m[r] == f32::NEG_INFINITY {
+                        0.0
+                    } else {
+                        (m[r] - m_cur).exp()
+                    };
+                    let mut psum = 0.0;
+                    let arow = &mut acc[r * d..(r + 1) * d];
+                    for x in arow.iter_mut() {
+                        *x *= alpha;
+                    }
+                    for (c, &sv) in srow.iter().enumerate() {
+                        let pv = (sv - m_cur).exp();
+                        psum += pv;
+                        if pv != 0.0 {
+                            let vrow = &vd[(b * n + ik + c) * d
+                                           ..(b * n + ik + c + 1) * d];
+                            for (a, &vv) in arow.iter_mut().zip(vrow) {
+                                *a += pv * vv;
+                            }
+                        }
+                    }
+                    l[r] = l[r] * alpha + psum;
+                    m[r] = m_cur;
+                }
+            }
+            for r in 0..bq {
+                let arow = &acc[r * d..(r + 1) * d];
+                let orow = &mut out[(b * n + iq + r) * d
+                                    ..(b * n + iq + r + 1) * d];
+                for (o, &a) in orow.iter_mut().zip(arow) {
+                    *o = a / l[r];
+                }
+                lse[b * n + iq + r] = m[r] + l[r].ln();
+            }
+        }
+    }
+    ForwardResult {
+        output: Tensor::new(vec![bh, n, d], out),
+        lse: Tensor::new(vec![bh, n], lse),
+    }
+}
+
+/// Oracle backward (Equation 4), recomputing the forward internally.
+pub fn mha_backward(q: &Tensor, k: &Tensor, v: &Tensor, dout: &Tensor,
+                    p: AttnParams) -> Grads {
+    let (_bh, _n, _d) = dims(q, k, v);
+    let mut s = batch_matmul_nt(q, k).scale(p.scale);
+    if p.causal {
+        apply_causal_mask(&mut s);
+    }
+    softmax_lastdim(&mut s);
+    let pm = s; // P
+
+    // dV = Pᵀ · dO
+    let dv = batch_matmul_tn(&pm, dout);
+    // dP = dO · Vᵀ
+    let dp = batch_matmul_nt(dout, v);
+    // dS = P ∘ (dP − rowsum(P ∘ dP))
+    let n = pm.shape()[1];
+    let mut ds = pm.clone();
+    {
+        let pd = pm.data();
+        let dpd = dp.data();
+        let dsd = ds.data_mut();
+        for ri in 0..pd.len() / n {
+            let prow = &pd[ri * n..(ri + 1) * n];
+            let dprow = &dpd[ri * n..(ri + 1) * n];
+            let dsum: f32 = prow.iter().zip(dprow).map(|(a, b)| a * b).sum();
+            let dsrow = &mut dsd[ri * n..(ri + 1) * n];
+            for ((dsv, &pv), &dpv) in dsrow.iter_mut().zip(prow).zip(dprow) {
+                *dsv = pv * (dpv - dsum);
+            }
+        }
+    }
+    // dQ = dS · K · scale;  dK = dSᵀ · Q · scale
+    let dq = batch_matmul(&ds, k).scale(p.scale);
+    let dk = batch_matmul_tn(&ds, q).scale(p.scale);
+    Grads { dq, dk, dv }
+}
+
+/// Matmul FLOPs of one MHA (Fig 10/11 TFLOPs denominator; mirrors
+/// `python/compile/kernels/ref.py::attention_flops`).
+pub fn attention_flops(bh: usize, n: usize, d: usize, causal: bool,
+                       backward: bool) -> u64 {
+    let matmuls: u64 = if backward { 5 } else { 2 };
+    let flops = matmuls * 2 * (n as u64) * (n as u64) * (d as u64)
+        * (bh as u64);
+    if causal { flops / 2 } else { flops }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn rand_qkv(bh: usize, n: usize, d: usize, seed: u64)
+                -> (Tensor, Tensor, Tensor) {
+        let mut r = Rng::new(seed);
+        (Tensor::randn(vec![bh, n, d], &mut r),
+         Tensor::randn(vec![bh, n, d], &mut r),
+         Tensor::randn(vec![bh, n, d], &mut r))
+    }
+
+    #[test]
+    fn forward_uniform_attention_averages_v() {
+        // q = 0 → uniform softmax → output = column mean of V
+        let (_, k, v) = rand_qkv(1, 8, 4, 1);
+        let q = Tensor::zeros(vec![1, 8, 4]);
+        let r = mha_forward(&q, &k, &v, AttnParams::new(4, false));
+        let vd = v.data();
+        for c in 0..4 {
+            let mean: f32 = (0..8).map(|i| vd[i * 4 + c]).sum::<f32>() / 8.0;
+            for i in 0..8 {
+                assert!((r.output.at(&[0, i, c]) - mean).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn causal_first_row_copies_v0() {
+        let (q, k, v) = rand_qkv(2, 16, 8, 2);
+        let r = mha_forward(&q, &k, &v, AttnParams::new(8, true));
+        for b in 0..2 {
+            for c in 0..8 {
+                assert!((r.output.at(&[b, 0, c]) - v.at(&[b, 0, c])).abs()
+                        < 1e-5, "row 0 must attend only to position 0");
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_matches_oracle_full() {
+        let (q, k, v) = rand_qkv(2, 32, 8, 3);
+        let p = AttnParams::new(8, false);
+        let a = mha_forward(&q, &k, &v, p);
+        for (bq, bk) in [(32, 32), (8, 8), (16, 4), (4, 16), (1, 1)] {
+            let b = mha_forward_streaming(&q, &k, &v, p, bq, bk);
+            assert!(a.output.max_abs_diff(&b.output) < 1e-4,
+                    "blocks ({bq},{bk})");
+            assert!(a.lse.max_abs_diff(&b.lse) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn streaming_matches_oracle_causal() {
+        let (q, k, v) = rand_qkv(2, 32, 8, 4);
+        let p = AttnParams::new(8, true);
+        let a = mha_forward(&q, &k, &v, p);
+        for (bq, bk) in [(8, 8), (16, 8), (8, 16)] {
+            let b = mha_forward_streaming(&q, &k, &v, p, bq, bk);
+            assert!(a.output.max_abs_diff(&b.output) < 1e-4,
+                    "blocks ({bq},{bk})");
+        }
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        let (q, k, v) = rand_qkv(1, 6, 4, 5);
+        let p = AttnParams::new(4, false);
+        let dout = Tensor::full(vec![1, 6, 4], 1.0);
+        let g = mha_backward(&q, &k, &v, &dout, p);
+        let eps = 1e-3f32;
+        let f = |q: &Tensor, k: &Tensor, v: &Tensor| -> f32 {
+            mha_forward(q, k, v, p).output.data().iter().sum()
+        };
+        // spot-check several coordinates of dq, dk, dv
+        for (which, grad) in [("q", &g.dq), ("k", &g.dk), ("v", &g.dv)] {
+            for idx in [0usize, 7, 13, 23] {
+                let (mut qp, mut kp, mut vp) =
+                    (q.clone(), k.clone(), v.clone());
+                let bump = |qp: &mut Tensor, kp: &mut Tensor,
+                            vp: &mut Tensor, delta: f32| {
+                    let t = match which {
+                        "q" => qp,
+                        "k" => kp,
+                        _ => vp,
+                    };
+                    t.data_mut()[idx] += delta;
+                };
+                bump(&mut qp, &mut kp, &mut vp, eps);
+                let up = f(&qp, &kp, &vp);
+                bump(&mut qp, &mut kp, &mut vp, -2.0 * eps);
+                let dn = f(&qp, &kp, &vp);
+                let fd = (up - dn) / (2.0 * eps);
+                let an = grad.data()[idx];
+                assert!((fd - an).abs() < 2e-2,
+                        "d{which}[{idx}]: fd={fd} analytic={an}");
+            }
+        }
+    }
+
+    #[test]
+    fn lse_is_finite() {
+        let (q, k, v) = rand_qkv(1, 16, 8, 6);
+        let r = mha_forward(&q, &k, &v, AttnParams::new(8, false));
+        for &x in r.lse.data() {
+            assert!(x.is_finite());
+        }
+    }
+
+    #[test]
+    fn flops_halve_under_causal() {
+        assert_eq!(attention_flops(4, 256, 64, true, false) * 2,
+                   attention_flops(4, 256, 64, false, false));
+        // backward = 5 matmuls vs forward 2
+        assert_eq!(attention_flops(1, 128, 64, false, true) * 2,
+                   attention_flops(1, 128, 64, false, false) * 5);
+    }
+}

@@ -1,0 +1,286 @@
+//! Criterion-style benchmark harness (no `criterion` offline): warmup +
+//! fixed-iteration measurement, exact percentiles, table/CSV/JSON emission.
+//!
+//! Every paper figure is regenerated through this harness — `cargo bench`
+//! binaries and the `spark bench-*` subcommands share it, so the numbers in
+//! EXPERIMENTS.md come from one code path.
+
+use std::time::Instant;
+
+use crate::jsonio::{self, Value};
+use crate::metrics::Series;
+
+/// Measurement policy.
+#[derive(Debug, Clone, Copy)]
+pub struct Options {
+    pub warmup_iters: usize,
+    pub iters: usize,
+}
+
+impl Default for Options {
+    fn default() -> Self {
+        Options { warmup_iters: 1, iters: 3 }
+    }
+}
+
+/// One measured configuration (a row of a paper figure).
+#[derive(Debug, Clone)]
+pub struct Row {
+    /// Grouping key, e.g. "d64/causal" (a subplot of Fig 10).
+    pub group: String,
+    /// Variant name, e.g. "fused_f32acc" / "pytorch_fp16".
+    pub variant: String,
+    /// X-axis value (sequence length).
+    pub x: usize,
+    /// Timing stats over the measured iterations (seconds).
+    pub time: Series,
+    /// Useful-work FLOPs for TFLOP/s derivation (0 = latency-only row).
+    pub flops: u64,
+    /// Status: "ok", "oom", "ns" (not supported) — Fig 12's cell states.
+    pub status: String,
+}
+
+impl Row {
+    pub fn tflops(&self) -> f64 {
+        let m = self.time.mean();
+        if m <= 0.0 || self.flops == 0 {
+            0.0
+        } else {
+            self.flops as f64 / m / 1e12
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        jsonio::obj(vec![
+            ("group", jsonio::s(self.group.clone())),
+            ("variant", jsonio::s(self.variant.clone())),
+            ("x", jsonio::num(self.x as f64)),
+            ("status", jsonio::s(self.status.clone())),
+            ("mean_s", jsonio::num(self.time.mean())),
+            ("p50_s", jsonio::num(self.time.p50())),
+            ("p95_s", jsonio::num(self.time.p95())),
+            ("tflops", jsonio::num(self.tflops())),
+            ("flops", jsonio::num(self.flops as f64)),
+        ])
+    }
+}
+
+/// Measure a closure: `warmup` unrecorded runs, then `iters` recorded runs.
+///
+/// The closure returns the *measured* seconds for one iteration (so callers
+/// can exclude input staging, e.g. `Engine::execute_timed`), or an `Err`
+/// to mark the row failed.
+pub fn measure<F>(opts: Options, mut f: F) -> anyhow::Result<Series>
+where
+    F: FnMut() -> anyhow::Result<f64>,
+{
+    for _ in 0..opts.warmup_iters {
+        f()?;
+    }
+    let mut s = Series::default();
+    for _ in 0..opts.iters {
+        s.record(f()?);
+    }
+    Ok(s)
+}
+
+/// Measure wallclock of a closure that doesn't self-time.
+pub fn measure_wallclock<F>(opts: Options, mut f: F) -> anyhow::Result<Series>
+where
+    F: FnMut() -> anyhow::Result<()>,
+{
+    measure(opts, || {
+        let t0 = Instant::now();
+        f()?;
+        Ok(t0.elapsed().as_secs_f64())
+    })
+}
+
+/// A figure/table in progress: rows + emitters.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub title: String,
+    pub rows: Vec<Row>,
+}
+
+impl Report {
+    pub fn new(title: impl Into<String>) -> Self {
+        Report { title: title.into(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, row: Row) {
+        self.rows.push(row);
+    }
+
+    /// Human-readable table, grouped like the paper's subplots.
+    pub fn table(&self) -> String {
+        let mut out = format!("== {} ==\n", self.title);
+        let mut groups: Vec<&str> =
+            self.rows.iter().map(|r| r.group.as_str()).collect();
+        groups.dedup();
+        let mut seen = std::collections::BTreeSet::new();
+        for g in groups {
+            if !seen.insert(g) {
+                continue;
+            }
+            out.push_str(&format!("-- {g} --\n"));
+            out.push_str(&format!(
+                "{:<22} {:>8} {:>12} {:>12} {:>10}  {}\n",
+                "variant", "x", "mean_ms", "p95_ms", "TFLOP/s", "status"));
+            for r in self.rows.iter().filter(|r| r.group == g) {
+                out.push_str(&format!(
+                    "{:<22} {:>8} {:>12.3} {:>12.3} {:>10.3}  {}\n",
+                    r.variant, r.x, r.time.mean() * 1e3,
+                    r.time.p95() * 1e3, r.tflops(), r.status));
+            }
+        }
+        out
+    }
+
+    /// Per-x speedup of `variant` over `baseline` within each group.
+    pub fn speedups(&self, variant: &str, baseline: &str)
+                    -> Vec<(String, usize, f64)> {
+        let mut out = Vec::new();
+        for r in self.rows.iter().filter(|r| r.variant == variant
+                                         && r.status == "ok") {
+            if let Some(b) = self.rows.iter().find(|b| {
+                b.group == r.group && b.x == r.x && b.variant == baseline
+                    && b.status == "ok"
+            }) {
+                let m = r.time.mean();
+                if m > 0.0 {
+                    out.push((r.group.clone(), r.x, b.time.mean() / m));
+                }
+            }
+        }
+        out
+    }
+
+    /// Mean/max speedup summary (the paper's "average X× (up to Y×)").
+    pub fn speedup_summary(&self, variant: &str, baseline: &str)
+                           -> Option<(f64, f64)> {
+        let sp = self.speedups(variant, baseline);
+        if sp.is_empty() {
+            return None;
+        }
+        let mean = sp.iter().map(|(_, _, s)| s).sum::<f64>() / sp.len() as f64;
+        let max = sp.iter().map(|(_, _, s)| *s).fold(0.0, f64::max);
+        Some((mean, max))
+    }
+
+    pub fn to_json(&self) -> Value {
+        jsonio::obj(vec![
+            ("title", jsonio::s(self.title.clone())),
+            ("rows", Value::Arr(self.rows.iter().map(Row::to_json)
+                                .collect())),
+        ])
+    }
+
+    pub fn csv(&self) -> String {
+        let mut out = String::from(
+            "group,variant,x,status,mean_s,p50_s,p95_s,tflops\n");
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{},{}\n",
+                r.group, r.variant, r.x, r.status, r.time.mean(),
+                r.time.p50(), r.time.p95(), r.tflops()));
+        }
+        out
+    }
+
+    /// Write JSON (and return the table) — the standard bench epilogue.
+    pub fn emit(&self, json_path: Option<&str>) -> anyhow::Result<String> {
+        if let Some(p) = json_path {
+            std::fs::write(p, jsonio::to_string(&self.to_json()))?;
+        }
+        Ok(self.table())
+    }
+}
+
+/// Convenience: a skipped row (OOM / not-supported), zero timings.
+pub fn skipped_row(group: &str, variant: &str, x: usize, status: &str)
+                   -> Row {
+    Row {
+        group: group.into(),
+        variant: variant.into(),
+        x,
+        time: Series::default(),
+        flops: 0,
+        status: status.into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(group: &str, variant: &str, x: usize, secs: f64, flops: u64)
+           -> Row {
+        let mut time = Series::default();
+        time.record(secs);
+        Row { group: group.into(), variant: variant.into(), x, time, flops,
+              status: "ok".into() }
+    }
+
+    #[test]
+    fn measure_counts_iters() {
+        let mut calls = 0;
+        let s = measure(Options { warmup_iters: 2, iters: 5 }, || {
+            calls += 1;
+            Ok(0.001)
+        }).unwrap();
+        assert_eq!(calls, 7);
+        assert_eq!(s.count(), 5);
+    }
+
+    #[test]
+    fn measure_propagates_errors() {
+        let r = measure(Options::default(), || {
+            anyhow::bail!("boom")
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn tflops_derivation() {
+        let r = row("g", "v", 1, 0.5, 1_000_000_000_000);
+        assert!((r.tflops() - 2.0).abs() < 1e-9);
+        assert_eq!(skipped_row("g", "v", 1, "oom").tflops(), 0.0);
+    }
+
+    #[test]
+    fn speedups_align_group_and_x() {
+        let mut rep = Report::new("t");
+        rep.push(row("d64", "ours", 512, 1.0, 0));
+        rep.push(row("d64", "base", 512, 4.0, 0));
+        rep.push(row("d64", "ours", 1024, 1.0, 0));
+        rep.push(row("d64", "base", 1024, 8.0, 0));
+        rep.push(row("d128", "ours", 512, 1.0, 0)); // no baseline → skipped
+        let sp = rep.speedups("ours", "base");
+        assert_eq!(sp.len(), 2);
+        let (mean, max) = rep.speedup_summary("ours", "base").unwrap();
+        assert!((mean - 6.0).abs() < 1e-9);
+        assert!((max - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn oom_rows_excluded_from_speedups() {
+        let mut rep = Report::new("t");
+        rep.push(row("g", "ours", 512, 1.0, 0));
+        rep.push(skipped_row("g", "base", 512, "oom"));
+        assert!(rep.speedup_summary("ours", "base").is_none());
+    }
+
+    #[test]
+    fn emitters_contain_rows() {
+        let mut rep = Report::new("Fig X");
+        rep.push(row("d64", "fused", 256, 0.002, 1 << 30));
+        let table = rep.table();
+        assert!(table.contains("Fig X"));
+        assert!(table.contains("fused"));
+        let csv = rep.csv();
+        assert!(csv.lines().count() == 2);
+        let j = rep.to_json();
+        assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

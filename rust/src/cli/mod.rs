@@ -1,0 +1,204 @@
+//! Command-line argument parsing (no `clap` in the offline registry).
+//!
+//! Conventions: `spark <command> [--flag value] [--switch]`.  Flags are
+//! declared up front so `--help` is generated and unknown flags are hard
+//! errors — silent typo-eating in a benchmark harness corrupts results.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Declared flag (with `--help` metadata).
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// true = boolean switch; false = takes a value.
+    pub is_switch: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed invocation: flag values + positional arguments.
+#[derive(Debug, Default)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    switches: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>> {
+        self.get(name).map(|v| v.parse::<usize>().map_err(
+            |_| anyhow!("--{name} expects an integer, got {v:?}"))).transpose()
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
+        self.get(name).map(|v| v.parse::<f64>().map_err(
+            |_| anyhow!("--{name} expects a number, got {v:?}"))).transpose()
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.get(name).copied().unwrap_or(false)
+    }
+}
+
+/// A command parser: declared flags + positional arity.
+#[derive(Debug)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    flags: Vec<FlagSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, flags: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str,
+                default: Option<&'static str>) -> Self {
+        self.flags.push(FlagSpec { name, help, is_switch: false, default });
+        self
+    }
+
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, is_switch: true,
+                                   default: None });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("spark {} — {}\n\nflags:\n", self.name, self.about);
+        for f in &self.flags {
+            let kind = if f.is_switch { "" } else { " <value>" };
+            let dfl = f.default.map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{}{kind}\n      {}{dfl}\n",
+                                f.name, f.help));
+        }
+        s
+    }
+
+    /// Parse `args` (excluding the command word itself).
+    pub fn parse(&self, args: &[String]) -> Result<Parsed> {
+        let mut out = Parsed::default();
+        for f in &self.flags {
+            if let Some(d) = f.default {
+                out.values.insert(f.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                bail!("{}", self.usage());
+            }
+            if let Some(name) = a.strip_prefix("--") {
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let spec = self.flags.iter().find(|f| f.name == name)
+                    .ok_or_else(|| anyhow!(
+                        "unknown flag --{name} for `spark {}`\n\n{}",
+                        self.name, self.usage()))?;
+                if spec.is_switch {
+                    if inline.is_some() {
+                        bail!("--{name} is a switch, it takes no value");
+                    }
+                    out.switches.insert(name.to_string(), true);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i).cloned().ok_or_else(|| anyhow!(
+                                "--{name} expects a value"))?
+                        }
+                    };
+                    out.values.insert(name.to_string(), v);
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("bench-forward", "run the Fig 10 sweep")
+            .flag("iters", "measured iterations", Some("3"))
+            .flag("artifacts", "artifact directory", Some("artifacts"))
+            .switch("json", "emit JSON rows")
+    }
+
+    fn args(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = cmd().parse(&args(&[])).unwrap();
+        assert_eq!(p.get("iters"), Some("3"));
+        assert!(!p.switch("json"));
+    }
+
+    #[test]
+    fn values_and_switches() {
+        let p = cmd().parse(&args(&["--iters", "7", "--json"])).unwrap();
+        assert_eq!(p.get_usize("iters").unwrap(), Some(7));
+        assert!(p.switch("json"));
+    }
+
+    #[test]
+    fn inline_equals_form() {
+        let p = cmd().parse(&args(&["--iters=9"])).unwrap();
+        assert_eq!(p.get("iters"), Some("9"));
+    }
+
+    #[test]
+    fn positional_collected() {
+        let p = cmd().parse(&args(&["foo", "--iters", "2", "bar"])).unwrap();
+        assert_eq!(p.positional, vec!["foo", "bar"]);
+    }
+
+    #[test]
+    fn unknown_flag_is_error() {
+        let e = cmd().parse(&args(&["--wat"])).unwrap_err().to_string();
+        assert!(e.contains("unknown flag --wat"));
+        assert!(e.contains("flags:"), "error should embed usage");
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(cmd().parse(&args(&["--iters"])).is_err());
+    }
+
+    #[test]
+    fn bad_int_is_error() {
+        let p = cmd().parse(&args(&["--iters", "x"])).unwrap();
+        assert!(p.get_usize("iters").is_err());
+    }
+
+    #[test]
+    fn switch_with_value_is_error() {
+        assert!(cmd().parse(&args(&["--json=yes"])).is_err());
+    }
+
+    #[test]
+    fn help_flag_surfaces_usage() {
+        let e = cmd().parse(&args(&["--help"])).unwrap_err().to_string();
+        assert!(e.contains("bench-forward"));
+        assert!(e.contains("--iters"));
+    }
+}

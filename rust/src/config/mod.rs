@@ -1,0 +1,382 @@
+//! Typed configuration + a TOML-subset parser (no `toml`/`serde` offline).
+//!
+//! Supports the subset our configs use: `[section]` headers, `key = value`
+//! with string/int/float/bool values, `#` comments, and arrays of scalars.
+//! Everything is validated into `TrainConfig` / `BenchConfig` with explicit
+//! error messages; defaults mirror the paper's hyperparameters (§4.1).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A scalar-ish TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Toml {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Toml>),
+}
+
+impl Toml {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Toml::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Toml::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Toml::Float(f) => Some(*f),
+            Toml::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Toml::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: section → key → value ("" = top-level section).
+#[derive(Debug, Default, Clone)]
+pub struct Document {
+    sections: BTreeMap<String, BTreeMap<String, Toml>>,
+}
+
+impl Document {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut doc = Document::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name.strip_suffix(']').ok_or_else(|| anyhow!(
+                    "line {}: unterminated section header", lineno + 1))?;
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or_else(|| anyhow!(
+                "line {}: expected `key = value`, got {line:?}", lineno + 1))?;
+            let value = parse_value(value.trim()).with_context(|| format!(
+                "line {}: bad value for {}", lineno + 1, key.trim()))?;
+            doc.sections.entry(section.clone()).or_default()
+                .insert(key.trim().to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref()).with_context(
+            || format!("reading config {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Toml> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &String> {
+        self.sections.keys()
+    }
+
+    fn str_or(&self, sec: &str, key: &str, default: &str) -> Result<String> {
+        match self.get(sec, key) {
+            None => Ok(default.to_string()),
+            Some(v) => v.as_str().map(String::from).ok_or_else(
+                || anyhow!("[{sec}] {key} must be a string")),
+        }
+    }
+
+    fn usize_or(&self, sec: &str, key: &str, default: usize) -> Result<usize> {
+        match self.get(sec, key) {
+            None => Ok(default),
+            Some(v) => v.as_i64().filter(|&i| i >= 0).map(|i| i as usize)
+                .ok_or_else(|| anyhow!("[{sec}] {key} must be a non-negative \
+                                        integer")),
+        }
+    }
+
+    fn f64_or(&self, sec: &str, key: &str, default: f64) -> Result<f64> {
+        match self.get(sec, key) {
+            None => Ok(default),
+            Some(v) => v.as_f64().ok_or_else(
+                || anyhow!("[{sec}] {key} must be a number")),
+        }
+    }
+
+    fn bool_or(&self, sec: &str, key: &str, default: bool) -> Result<bool> {
+        match self.get(sec, key) {
+            None => Ok(default),
+            Some(v) => v.as_bool().ok_or_else(
+                || anyhow!("[{sec}] {key} must be a bool")),
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a string literal.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Toml> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"')
+            .ok_or_else(|| anyhow!("unterminated string {s:?}"))?;
+        return Ok(Toml::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Toml::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Toml::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated array {s:?}"))?;
+        let mut out = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in trimmed.split(',') {
+                out.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Toml::Arr(out));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Toml::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Toml::Float(f));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+// ---------------------------------------------------------------------------
+// Typed configs
+// ---------------------------------------------------------------------------
+
+/// Training-run configuration (`spark train --config …`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    pub artifact_dir: String,
+    pub steps: usize,
+    pub seed: u64,
+    pub log_every: usize,
+    pub checkpoint_every: usize,
+    pub checkpoint_dir: String,
+    /// zipf exponent of the synthetic corpus token distribution.
+    pub corpus_zipf: f64,
+    pub corpus_tokens: usize,
+    pub metrics_out: Option<String>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            artifact_dir: "artifacts".into(),
+            steps: 200,
+            seed: 42,
+            log_every: 10,
+            checkpoint_every: 0, // disabled
+            checkpoint_dir: "checkpoints".into(),
+            corpus_zipf: 1.1,
+            corpus_tokens: 1 << 20,
+            metrics_out: None,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn from_doc(doc: &Document) -> Result<Self> {
+        let d = TrainConfig::default();
+        let cfg = TrainConfig {
+            artifact_dir: doc.str_or("train", "artifact_dir",
+                                     &d.artifact_dir)?,
+            steps: doc.usize_or("train", "steps", d.steps)?,
+            seed: doc.usize_or("train", "seed", d.seed as usize)? as u64,
+            log_every: doc.usize_or("train", "log_every", d.log_every)?,
+            checkpoint_every: doc.usize_or("train", "checkpoint_every",
+                                           d.checkpoint_every)?,
+            checkpoint_dir: doc.str_or("train", "checkpoint_dir",
+                                       &d.checkpoint_dir)?,
+            corpus_zipf: doc.f64_or("corpus", "zipf", d.corpus_zipf)?,
+            corpus_tokens: doc.usize_or("corpus", "tokens",
+                                        d.corpus_tokens)?,
+            metrics_out: doc.get("train", "metrics_out")
+                .and_then(Toml::as_str).map(String::from),
+        };
+        if cfg.steps == 0 {
+            bail!("[train] steps must be > 0");
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        Self::from_doc(&Document::load(path)?)
+    }
+}
+
+/// Benchmark-harness configuration (shared by `spark bench-*`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchConfig {
+    pub artifact_dir: String,
+    pub warmup_iters: usize,
+    pub iters: usize,
+    /// Host memory budget for admitting artifact executions (bytes).
+    pub mem_budget: usize,
+    /// Emit machine-readable JSON rows alongside the table.
+    pub json: bool,
+    pub out_path: Option<String>,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            artifact_dir: "artifacts".into(),
+            warmup_iters: 1,
+            iters: 3,
+            mem_budget: 8 << 30,
+            json: false,
+            out_path: None,
+        }
+    }
+}
+
+impl BenchConfig {
+    pub fn from_doc(doc: &Document) -> Result<Self> {
+        let d = BenchConfig::default();
+        Ok(BenchConfig {
+            artifact_dir: doc.str_or("bench", "artifact_dir",
+                                     &d.artifact_dir)?,
+            warmup_iters: doc.usize_or("bench", "warmup_iters",
+                                       d.warmup_iters)?,
+            iters: doc.usize_or("bench", "iters", d.iters)?.max(1),
+            mem_budget: doc.usize_or("bench", "mem_budget_gb", 8)? << 30,
+            json: doc.bool_or("bench", "json", d.json)?,
+            out_path: doc.get("bench", "out_path")
+                .and_then(Toml::as_str).map(String::from),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# training run
+[train]
+steps = 300
+seed = 7
+artifact_dir = "artifacts"   # inline comment
+metrics_out = "metrics.json"
+
+[corpus]
+zipf = 1.3
+tokens = 65536
+
+[bench]
+iters = 5
+json = true
+mem_budget_gb = 4
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = Document::parse(SAMPLE).unwrap();
+        assert_eq!(doc.get("train", "steps"), Some(&Toml::Int(300)));
+        assert_eq!(doc.get("corpus", "zipf"), Some(&Toml::Float(1.3)));
+        assert_eq!(doc.get("bench", "json"), Some(&Toml::Bool(true)));
+        assert_eq!(doc.get("train", "artifact_dir"),
+                   Some(&Toml::Str("artifacts".into())));
+    }
+
+    #[test]
+    fn typed_train_config() {
+        let cfg = TrainConfig::from_doc(&Document::parse(SAMPLE).unwrap())
+            .unwrap();
+        assert_eq!(cfg.steps, 300);
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.corpus_zipf, 1.3);
+        assert_eq!(cfg.corpus_tokens, 65536);
+        assert_eq!(cfg.metrics_out.as_deref(), Some("metrics.json"));
+        // defaults fill the gaps
+        assert_eq!(cfg.checkpoint_every, 0);
+    }
+
+    #[test]
+    fn typed_bench_config() {
+        let cfg = BenchConfig::from_doc(&Document::parse(SAMPLE).unwrap())
+            .unwrap();
+        assert_eq!(cfg.iters, 5);
+        assert!(cfg.json);
+        assert_eq!(cfg.mem_budget, 4 << 30);
+    }
+
+    #[test]
+    fn defaults_from_empty_doc() {
+        let cfg = TrainConfig::from_doc(&Document::parse("").unwrap())
+            .unwrap();
+        assert_eq!(cfg, TrainConfig::default());
+    }
+
+    #[test]
+    fn arrays_parse() {
+        let doc = Document::parse("xs = [1, 2, 3]\nys = []").unwrap();
+        assert_eq!(doc.get("", "xs"),
+                   Some(&Toml::Arr(vec![Toml::Int(1), Toml::Int(2),
+                                        Toml::Int(3)])));
+        assert_eq!(doc.get("", "ys"), Some(&Toml::Arr(vec![])));
+    }
+
+    #[test]
+    fn comments_respect_strings() {
+        let doc = Document::parse("s = \"a # b\"  # real comment").unwrap();
+        assert_eq!(doc.get("", "s"), Some(&Toml::Str("a # b".into())));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Document::parse("[unterminated").is_err());
+        assert!(Document::parse("novalue").is_err());
+        assert!(Document::parse("x = @?!").is_err());
+        assert!(TrainConfig::from_doc(
+            &Document::parse("[train]\nsteps = 0").unwrap()).is_err());
+    }
+
+    #[test]
+    fn type_errors_are_loud() {
+        let doc = Document::parse("[train]\nsteps = \"many\"").unwrap();
+        let err = TrainConfig::from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("steps"), "error should name the key: {err}");
+    }
+}

@@ -1,0 +1,155 @@
+//! Flat-buffer checkpointing for parameters + optimizer state.
+//!
+//! Format: a JSON header line (names, shapes, step, loss) followed by the
+//! concatenated little-endian f32 payloads in header order.  Self-describing
+//! enough to resume training or inspect offline, with no serde dependency.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::jsonio::{self, Value};
+use crate::runtime::HostValue;
+
+/// Saved training state.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub step: usize,
+    pub loss: f64,
+    /// (name, value) in artifact input order.
+    pub buffers: Vec<(String, HostValue)>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut header_entries = Vec::new();
+        let mut payload: Vec<u8> = Vec::new();
+        for (name, hv) in &self.buffers {
+            let data = hv.as_f32_slice().with_context(
+                || format!("checkpoint buffer {name} must be f32"))?;
+            header_entries.push(jsonio::obj(vec![
+                ("name", jsonio::s(name.clone())),
+                ("shape", Value::Arr(hv.shape().iter()
+                    .map(|&d| jsonio::num(d as f64)).collect())),
+                ("offset", jsonio::num(payload.len() as f64)),
+            ]));
+            for x in data {
+                payload.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        let header = jsonio::obj(vec![
+            ("magic", jsonio::s("spark-ckpt-v1")),
+            ("step", jsonio::num(self.step as f64)),
+            ("loss", jsonio::num(self.loss)),
+            ("buffers", Value::Arr(header_entries)),
+        ]);
+        let mut f = std::fs::File::create(path.as_ref()).with_context(
+            || format!("creating checkpoint {}", path.as_ref().display()))?;
+        let htext = jsonio::to_string(&header);
+        writeln!(f, "{htext}")?;
+        f.write_all(&payload)?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let mut f = std::fs::File::open(path.as_ref()).with_context(
+            || format!("opening checkpoint {}", path.as_ref().display()))?;
+        let mut bytes = Vec::new();
+        f.read_to_end(&mut bytes)?;
+        let nl = bytes.iter().position(|&b| b == b'\n')
+            .context("checkpoint missing header line")?;
+        let header = jsonio::parse(std::str::from_utf8(&bytes[..nl])?)
+            .context("parsing checkpoint header")?;
+        if header.get("magic").and_then(Value::as_str)
+            != Some("spark-ckpt-v1") {
+            bail!("not a spark checkpoint");
+        }
+        let payload = &bytes[nl + 1..];
+        let step = header.get("step").and_then(Value::as_usize)
+            .context("header missing step")?;
+        let loss = header.get("loss").and_then(Value::as_f64).unwrap_or(0.0);
+        let mut buffers = Vec::new();
+        for e in header.get("buffers").and_then(Value::as_arr)
+            .context("header missing buffers")? {
+            let name = e.get("name").and_then(Value::as_str)
+                .context("buffer missing name")?.to_string();
+            let shape: Vec<usize> = e.get("shape").and_then(Value::as_arr)
+                .context("buffer missing shape")?
+                .iter().filter_map(Value::as_usize).collect();
+            let offset = e.get("offset").and_then(Value::as_usize)
+                .context("buffer missing offset")?;
+            let count: usize = shape.iter().product();
+            let end = offset + 4 * count;
+            if end > payload.len() {
+                bail!("checkpoint truncated: {name} wants bytes {offset}..{end}, \
+                       payload has {}", payload.len());
+            }
+            let data = payload[offset..end].chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            buffers.push((name, HostValue::F32 { shape, data }));
+        }
+        Ok(Checkpoint { step, loss, buffers })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("spark-ckpt-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let ck = Checkpoint {
+            step: 42,
+            loss: 2.5,
+            buffers: vec![
+                ("p/w".into(), HostValue::F32 {
+                    shape: vec![2, 3],
+                    data: vec![1.0, -2.0, 0.5, 3.25, 0.0, -0.125],
+                }),
+                ("m/w".into(), HostValue::F32 {
+                    shape: vec![3],
+                    data: vec![0.1, 0.2, 0.3],
+                }),
+            ],
+        };
+        let p = tmpfile("roundtrip.ckpt");
+        ck.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back.step, 42);
+        assert_eq!(back.loss, 2.5);
+        assert_eq!(back.buffers.len(), 2);
+        assert_eq!(back.buffers[0].1, ck.buffers[0].1);
+        assert_eq!(back.buffers[1].0, "m/w");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmpfile("garbage.ckpt");
+        std::fs::write(&p, b"{\"magic\":\"nope\"}\nxxxx").unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let ck = Checkpoint {
+            step: 1,
+            loss: 0.0,
+            buffers: vec![("w".into(), HostValue::F32 {
+                shape: vec![8], data: vec![0.0; 8],
+            })],
+        };
+        let p = tmpfile("trunc.ckpt");
+        ck.save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 8]).unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+    }
+}

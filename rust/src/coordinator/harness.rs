@@ -1,0 +1,451 @@
+//! The evaluation harness: regenerates every figure/table of the paper.
+//!
+//! * `fig10_forward`  — MHA-Forward TFLOP/s sweep (fused f32/bf16-ACC vs
+//!   the unfused PyTorch-FP16 analog), grouped by (head-dim, causal).
+//! * `fig11_backward` — MHA-Backward sweep.  PyTorch times its backward
+//!   kernels alone, so the unfused backward is reported as
+//!   `t(fwd+bwd) − t(fwd)`; the fused backward artifact is pure backward
+//!   (recomputation included, as in the paper).
+//! * `fig12_e2e`      — single-encoder-layer forward latency across fusion
+//!   scopes, with OOM/NS cells from the host memory budget.
+//! * `accuracy_report` — §4.2.3: rel/abs error of every variant against
+//!   the f32 oracle.
+//! * `io_report` / `projected_fig10` — the §2.3 I/O claim and the V100
+//!   roofline projection of the paper-scale grid (E5, E1-projection).
+//!
+//! Measured CPU numbers demonstrate the *shape* (who wins, how the gap
+//! scales with n); the projection carries the paper-scale magnitudes.
+
+use anyhow::{Context, Result};
+use log::{info, warn};
+
+use super::inputs::synth_inputs;
+use crate::attention;
+use crate::bench::{measure, skipped_row, Options, Report, Row};
+use crate::iomodel::{self, MhaShape};
+use crate::perfmodel::{self, Bound, Machine};
+use crate::runtime::{ArtifactMeta, Engine, HostValue};
+use crate::tensor::{Rng, Tensor};
+
+/// Harness knobs shared by the figure generators.
+#[derive(Debug, Clone, Copy)]
+pub struct HarnessOptions {
+    pub bench: Options,
+    /// Host-memory admission budget (bytes): artifacts whose modeled peak
+    /// exceeds it are reported as OOM instead of executed.
+    pub mem_budget: usize,
+}
+
+impl Default for HarnessOptions {
+    fn default() -> Self {
+        HarnessOptions { bench: Options::default(), mem_budget: 8 << 30 }
+    }
+}
+
+fn mha_group(meta: &ArtifactMeta) -> String {
+    format!("d{}{}", meta.attr_i64("d").unwrap_or(0),
+            if meta.attr_bool("causal").unwrap_or(false) {
+                "/causal"
+            } else {
+                "/full"
+            })
+}
+
+fn mha_shape(meta: &ArtifactMeta) -> MhaShape {
+    MhaShape::new(meta.attr_i64("bh").unwrap_or(1) as usize,
+                  meta.attr_i64("n").unwrap_or(0) as usize,
+                  meta.attr_i64("d").unwrap_or(0) as usize)
+}
+
+/// Admission check: unfused variants materialise N×N tensors on the host
+/// backend too — refuse what would not fit (the Fig 10 OOM cells).
+fn admit(meta: &ArtifactMeta, fused: bool, budget: usize) -> bool {
+    let peak = iomodel::peak_resident_bytes(mha_shape(meta), fused);
+    peak <= budget
+}
+
+fn run_mha_rows(eng: &Engine, report: &mut Report, kind: &str,
+                variant_of: impl Fn(&ArtifactMeta) -> String, fused: bool,
+                backward: bool, opts: HarnessOptions,
+                dropout_filter: i64) -> Result<()> {
+    let metas: Vec<ArtifactMeta> = eng.manifest().of_kind(kind)
+        .filter(|m| (m.attr_f64("dropout").unwrap_or(0.0) * 100.0) as i64
+                == dropout_filter)
+        .cloned().collect();
+    for meta in metas {
+        let group = mha_group(&meta);
+        let variant = variant_of(&meta);
+        let n = meta.attr_i64("n").unwrap_or(0) as usize;
+        let s = mha_shape(&meta);
+        let causal = meta.attr_bool("causal").unwrap_or(false);
+        if !admit(&meta, fused, opts.mem_budget) {
+            report.push(skipped_row(&group, &variant, n, "oom"));
+            continue;
+        }
+        let ins = prepare_inputs(eng, &meta)?;
+        let time = measure(opts.bench, || {
+            Ok(eng.execute_timed(&meta.name, &ins)?.1)
+        }).with_context(|| format!("benching {}", meta.name))?;
+        report.push(Row {
+            group, variant, x: n, time,
+            flops: attention::attention_flops(s.bh, s.n, s.d, causal,
+                                              backward),
+            status: "ok".into(),
+        });
+    }
+    Ok(())
+}
+
+/// Inputs for MHA artifacts; backward artifacts get a real (o, lse) pair
+/// by running the matching forward once (not timed).
+fn prepare_inputs(eng: &Engine, meta: &ArtifactMeta)
+                  -> Result<Vec<HostValue>> {
+    let base = synth_inputs(meta, 42)?;
+    if meta.kind != "mha_bwd" {
+        return Ok(base);
+    }
+    // Find the forward twin: same d/n/bh/causal/dropout, any acc.
+    let twin = eng.manifest().of_kind("mha_fwd").find(|f| {
+        ["d", "n", "bh"].iter().all(
+            |k| f.attr_i64(k) == meta.attr_i64(k))
+            && f.attr_bool("causal") == meta.attr_bool("causal")
+            && f.attr_f64("dropout") == meta.attr_f64("dropout")
+    }).with_context(|| format!("no forward twin for {}", meta.name))?
+        .clone();
+    // bwd inputs: seed, q, k, v, o, lse, do — reuse the synth q,k,v.
+    let fwd_out = eng.execute(&twin.name, &base[..4])?;
+    let mut ins = base[..4].to_vec();
+    ins.push(fwd_out[0].clone()); // o
+    ins.push(fwd_out[1].clone()); // lse
+    // dO: a fresh normal tensor, bf16-quantised
+    let mut rng = Rng::new(43);
+    let shape = meta.inputs[6].shape.clone();
+    let n: usize = shape.iter().product();
+    ins.push(HostValue::F32 {
+        shape,
+        data: rng.normal_vec(n).into_iter()
+            .map(crate::tensor::bf16::quantize).collect(),
+    });
+    Ok(ins)
+}
+
+/// Figure 10: MHA-Forward performance sweep.
+pub fn fig10_forward(eng: &Engine, opts: HarnessOptions) -> Result<Report> {
+    let mut report = Report::new(
+        "Fig 10 — MHA-Forward (TFLOP/s, higher is better)");
+    run_mha_rows(eng, &mut report, "mha_fwd", |m| {
+        format!("spark_{}acc", m.attr_str("acc").unwrap_or("?"))
+    }, true, false, opts, 10)?;
+    run_mha_rows(eng, &mut report, "mha_fwd_unf",
+                 |_| "pytorch_fp16".into(), false, false, opts, 10)?;
+    if let Some((mean, max)) =
+        report.speedup_summary("spark_f32acc", "pytorch_fp16") {
+        info!("fig10: fused f32-ACC vs unfused: avg {mean:.2}× (max {max:.2}×)");
+    }
+    Ok(report)
+}
+
+/// Figure 11: MHA-Backward performance sweep.
+///
+/// Unfused backward = t(fwd+bwd) − t(fwd), clamped at 10% of the combined
+/// time to guard against noise inversion.
+pub fn fig11_backward(eng: &Engine, opts: HarnessOptions) -> Result<Report> {
+    let mut report = Report::new(
+        "Fig 11 — MHA-Backward (TFLOP/s, higher is better)");
+    run_mha_rows(eng, &mut report, "mha_bwd", |m| {
+        format!("spark_{}acc", m.attr_str("acc").unwrap_or("?"))
+    }, true, true, opts, 10)?;
+
+    // Unfused: measure fwd and fwd+bwd, difference the means.
+    let combos: Vec<ArtifactMeta> = eng.manifest().of_kind("mha_fwdbwd_unf")
+        .filter(|m| (m.attr_f64("dropout").unwrap_or(0.0) * 100.0) as i64
+                == 10)
+        .cloned().collect();
+    for meta in combos {
+        let group = mha_group(&meta);
+        let n = meta.attr_i64("n").unwrap_or(0) as usize;
+        let s = mha_shape(&meta);
+        let causal = meta.attr_bool("causal").unwrap_or(false);
+        if !admit(&meta, false, opts.mem_budget) {
+            report.push(skipped_row(&group, "pytorch_fp16", n, "oom"));
+            continue;
+        }
+        let fwd_twin = eng.manifest().of_kind("mha_fwd_unf").find(|f| {
+            ["d", "n", "bh"].iter().all(
+                |k| f.attr_i64(k) == meta.attr_i64(k))
+                && f.attr_bool("causal") == meta.attr_bool("causal")
+                && f.attr_f64("dropout") == meta.attr_f64("dropout")
+        }).map(|f| f.name.clone());
+        let ins = synth_inputs(&meta, 42)?;
+        let combined = measure(opts.bench, || {
+            Ok(eng.execute_timed(&meta.name, &ins)?.1)
+        })?;
+        let bwd_mean = match fwd_twin {
+            Some(fname) => {
+                let fmeta = eng.manifest().get(&fname)?.clone();
+                let fins = synth_inputs(&fmeta, 42)?;
+                let fwd = measure(opts.bench, || {
+                    Ok(eng.execute_timed(&fname, &fins)?.1)
+                })?;
+                (combined.mean() - fwd.mean()).max(combined.mean() * 0.1)
+            }
+            None => {
+                warn!("no unfused forward twin for {}; reporting combined",
+                      meta.name);
+                combined.mean()
+            }
+        };
+        let mut time = crate::metrics::Series::default();
+        time.record(bwd_mean);
+        report.push(Row {
+            group, variant: "pytorch_fp16".into(), x: n, time,
+            flops: attention::attention_flops(s.bh, s.n, s.d, causal, true),
+            status: "ok".into(),
+        });
+    }
+    if let Some((mean, max)) =
+        report.speedup_summary("spark_bf16acc", "pytorch_fp16") {
+        info!("fig11: fused bf16-ACC vs unfused: avg {mean:.2}× (max {max:.2}×)");
+    }
+    Ok(report)
+}
+
+/// Figure 12: end-to-end encoder-layer forward latency.
+pub fn fig12_e2e(eng: &Engine, opts: HarnessOptions) -> Result<Report> {
+    let mut report = Report::new(
+        "Fig 12 — Encoder-Forward latency (ms, lower is better)");
+    // Bench the paper's configuration (dropout 0.1); dropout-0 encoder
+    // artifacts exist for numerical cross-checks, not for Fig 12.
+    let mut metas: Vec<ArtifactMeta> = eng.manifest().of_kind("encoder_fwd")
+        .filter(|m| (m.attr_f64("dropout").unwrap_or(0.0) * 100.0) as i64
+                == 10)
+        .cloned().collect();
+    if metas.is_empty() {
+        metas = eng.manifest().of_kind("encoder_fwd").cloned().collect();
+    }
+    for meta in metas {
+        let d_head = meta.attr_i64("d_head").unwrap_or(0);
+        let group = format!("head-dim {d_head}");
+        let impl_name = meta.attr_str("impl").unwrap_or("?").to_string();
+        let variant = match impl_name.as_str() {
+            "unfused" => "pytorch_jit".to_string(),
+            "fused" => "sparkattention".to_string(),
+            "fully_fused" => "fastertransformer*".to_string(),
+            other => other.to_string(),
+        };
+        let n = meta.attr_i64("n").unwrap_or(0) as usize;
+        // unfused attention inside the encoder pays the N×N residency
+        let fused = impl_name != "unfused";
+        let bh = meta.attr_i64("batch").unwrap_or(1) as usize
+            * meta.attr_i64("num_heads").unwrap_or(1) as usize;
+        let peak = iomodel::peak_resident_bytes(
+            MhaShape::new(bh, n, d_head as usize), fused);
+        if peak > opts.mem_budget {
+            report.push(skipped_row(&group, &variant, n, "oom"));
+            continue;
+        }
+        let ins = synth_inputs(&meta, 42)?;
+        let time = measure(opts.bench, || {
+            Ok(eng.execute_timed(&meta.name, &ins)?.1)
+        }).with_context(|| format!("benching {}", meta.name))?;
+        report.push(Row {
+            group, variant, x: n, time,
+            flops: meta.attr_i64("flops_attn").unwrap_or(0) as u64,
+            status: "ok".into(),
+        });
+    }
+    if let Some((mean, max)) =
+        report.speedup_summary("sparkattention", "pytorch_jit") {
+        info!("fig12: fused encoder vs PyTorch-JIT analog: avg {mean:.2}× \
+               (max {max:.2}×)");
+    }
+    Ok(report)
+}
+
+/// One row of the §4.2.3 accuracy table.
+#[derive(Debug, Clone)]
+pub struct AccuracyRow {
+    pub name: String,
+    pub mean_rel_err: f64,
+    pub mean_abs_err: f64,
+    pub max_abs_err: f64,
+}
+
+/// §4.2.3: accuracy of each variant against the f32 oracle, on the
+/// dropout-0 accuracy artifacts.
+pub fn accuracy_report(eng: &Engine) -> Result<Vec<AccuracyRow>> {
+    let mut rows = Vec::new();
+    let fwd_metas: Vec<ArtifactMeta> = eng.manifest().of_kind("mha_fwd")
+        .chain(eng.manifest().of_kind("mha_fwd_unf"))
+        .filter(|m| m.attr_f64("dropout") == Some(0.0))
+        .cloned().collect();
+    for meta in fwd_metas {
+        let ins = synth_inputs(&meta, 42)?;
+        let out = eng.execute(&meta.name, &ins)?;
+        let o_dev = out[0].as_tensor()?;
+        let (q, k, v) = (ins[1].as_tensor()?, ins[2].as_tensor()?,
+                         ins[3].as_tensor()?);
+        let d = meta.attr_i64("d").unwrap_or(64) as usize;
+        let causal = meta.attr_bool("causal").unwrap_or(false);
+        let oracle = attention::mha_forward(
+            &q, &k, &v, attention::AttnParams::new(d, causal)).output;
+        rows.push(accuracy_row(&meta.name, &o_dev, &oracle));
+    }
+
+    // Backward accuracy: fused bwd artifacts vs the Rust backward oracle.
+    let bwd_metas: Vec<ArtifactMeta> = eng.manifest().of_kind("mha_bwd")
+        .filter(|m| m.attr_f64("dropout") == Some(0.0))
+        .cloned().collect();
+    for meta in bwd_metas {
+        let ins = prepare_inputs(eng, &meta)?;
+        let out = eng.execute(&meta.name, &ins)?;
+        let (q, k, v) = (ins[1].as_tensor()?, ins[2].as_tensor()?,
+                         ins[3].as_tensor()?);
+        let dout = ins[6].as_tensor()?;
+        let d = meta.attr_i64("d").unwrap_or(64) as usize;
+        let causal = meta.attr_bool("causal").unwrap_or(false);
+        let g = attention::mha_backward(
+            &q, &k, &v, &dout, attention::AttnParams::new(d, causal));
+        for (i, (gname, oracle)) in [("dq", &g.dq), ("dk", &g.dk),
+                                     ("dv", &g.dv)].iter().enumerate() {
+            let dev = out[i].as_tensor()?;
+            rows.push(accuracy_row(&format!("{}/{gname}", meta.name),
+                                   &dev, oracle));
+        }
+    }
+    Ok(rows)
+}
+
+fn accuracy_row(name: &str, dev: &Tensor, oracle: &Tensor) -> AccuracyRow {
+    AccuracyRow {
+        name: name.to_string(),
+        mean_rel_err: dev.mean_rel_err(oracle, 1e-3) as f64,
+        mean_abs_err: dev.mean_abs_diff(oracle) as f64,
+        max_abs_err: dev.max_abs_diff(oracle) as f64,
+    }
+}
+
+/// Render the accuracy table.
+pub fn accuracy_table(rows: &[AccuracyRow]) -> String {
+    let mut s = String::from(
+        "== §4.2.3 accuracy vs f32 oracle ==\n");
+    s.push_str(&format!("{:<48} {:>12} {:>12} {:>12}\n",
+                        "artifact", "rel_err", "abs_err", "max_abs"));
+    for r in rows {
+        s.push_str(&format!("{:<48} {:>11.4}% {:>12.6} {:>12.6}\n",
+                            r.name, r.mean_rel_err * 100.0, r.mean_abs_err,
+                            r.max_abs_err));
+    }
+    s
+}
+
+/// E5: the §2.3 I/O table — analytic + simulated traffic per schedule.
+pub fn io_report(machine: &Machine) -> String {
+    let mut s = String::from(
+        "== §2.3 / §3.2 HBM traffic (per MHA forward) ==\n");
+    s.push_str(&format!(
+        "{:>6} {:>5} | {:>10} {:>10} {:>7} | {:>10} {:>10} {:>7} | {:>6}\n",
+        "n", "d", "unf_rd_MB", "unf_wr_MB", "5r/3w", "fus_rd_MB",
+        "fus_wr_MB", "3r/1w", "ratio"));
+    for d in [64usize, 128] {
+        for n in [512usize, 1024, 2048, 4096, 16384] {
+            let shape = perfmodel::paper_shape(n, d);
+            let u = iomodel::analytic_unfused_fwd(shape);
+            let (f, _) = iomodel::simulate_fused_fwd(shape, 128, 128,
+                                                     16 << 20);
+            let us = iomodel::simulate_unfused_fwd(shape, 128 * 1024);
+            debug_assert_eq!(us.read_bytes, u.read_bytes);
+            let mb = |b: usize| b as f64 / (1 << 20) as f64;
+            s.push_str(&format!(
+                "{:>6} {:>5} | {:>10.1} {:>10.1} {:>3}r/{}w | {:>10.1} \
+                 {:>10.1} {:>3}r/{}w | {:>5.1}×\n",
+                n, d, mb(u.read_bytes), mb(u.write_bytes), u.tensor_reads,
+                u.tensor_writes, mb(f.read_bytes), mb(f.write_bytes),
+                f.tensor_reads, f.tensor_writes,
+                u.total_bytes() as f64 / f.total_bytes() as f64));
+        }
+    }
+    s.push_str(&format!("\n(machine: {:.0} TFLOP/s TCU, {:.0} GB/s HBM, \
+                         {} GiB)\n",
+                        machine.matrix_flops / 1e12, machine.hbm_bw / 1e9,
+                        machine.hbm_capacity >> 30));
+    s
+}
+
+/// V100-projected Fig 12 at paper scale (hidden 2048, batch = 16384/n).
+pub fn projected_fig12(machine: &Machine) -> Report {
+    let mut report = Report::new(
+        "Fig 12 (V100 projection) — Encoder-Forward at paper scale");
+    for d_head in [64usize, 128] {
+        let group = format!("head-dim {d_head}");
+        for n in [512usize, 1024, 2048, 4096, 16384] {
+            let (batch, dm, heads) = perfmodel::paper_encoder_point(n, d_head);
+            for variant in ["pytorch_jit", "sparkattention",
+                            "fastertransformer"] {
+                let proj = perfmodel::project_encoder(
+                    machine, batch, n, dm, heads, variant);
+                if proj.bound == Bound::Oom {
+                    report.push(skipped_row(&group, variant, n, "oom"));
+                } else {
+                    let mut time = crate::metrics::Series::default();
+                    time.record(proj.seconds);
+                    report.push(Row {
+                        group: group.clone(),
+                        variant: variant.into(),
+                        x: n,
+                        time,
+                        flops: 0,
+                        status: "ok".into(),
+                    });
+                }
+            }
+        }
+    }
+    report
+}
+
+/// V100-projected Fig 10/11 at paper scale (heads = 2048/d, batch =
+/// 16384/n) — the magnitudes the CPU cannot produce.
+pub fn projected_fig10(machine: &Machine, backward: bool) -> Report {
+    let mut report = Report::new(if backward {
+        "Fig 11 (V100 projection) — MHA-Backward at paper scale"
+    } else {
+        "Fig 10 (V100 projection) — MHA-Forward at paper scale"
+    });
+    for d in [64usize, 128] {
+        for causal in [false, true] {
+            let group = format!("d{d}{}", if causal { "/causal" }
+                                else { "/full" });
+            for n in [512usize, 1024, 2048, 4096, 16384] {
+                let s = perfmodel::paper_shape(n, d);
+                let (ours, base) = if backward {
+                    (perfmodel::project_fused_bwd(machine, s, causal),
+                     perfmodel::project_unfused_bwd(machine, s, causal))
+                } else {
+                    (perfmodel::project_fused_fwd(machine, s, causal, 128),
+                     perfmodel::project_unfused_fwd(machine, s, causal))
+                };
+                let flops = attention::attention_flops(s.bh, s.n, s.d,
+                                                       causal, backward);
+                for (name, proj) in [("spark_projected", ours),
+                                     ("pytorch_projected", base)] {
+                    if proj.bound == Bound::Oom {
+                        report.push(skipped_row(&group, name, n, "oom"));
+                    } else {
+                        let mut time = crate::metrics::Series::default();
+                        time.record(proj.seconds);
+                        report.push(Row {
+                            group: group.clone(),
+                            variant: name.into(),
+                            x: n,
+                            time,
+                            flops,
+                            status: "ok".into(),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    report
+}

@@ -1,0 +1,18 @@
+//! Layer-3 coordinator: the run-time system driving the AOT artifacts.
+//!
+//! * `trainer` — the LM training loop (init → step → checkpoint), backed by
+//!   the `train_step` artifact; Python never runs here.
+//! * `checkpoint` — flat-buffer checkpoint save/load for params/opt state.
+//! * `harness` — the evaluation harness regenerating every paper figure
+//!   (Fig 10/11/12, the §4.2.3 accuracy table, the §2.3 I/O claim) from
+//!   the artifact set + the analytic models.
+//! * `inputs` — deterministic artifact input synthesis from manifest specs.
+
+pub mod checkpoint;
+pub mod harness;
+pub mod inputs;
+pub mod trainer;
+
+pub use harness::{accuracy_report, fig10_forward, fig11_backward, projected_fig12,
+                  fig12_e2e, io_report, projected_fig10};
+pub use trainer::{TrainOutcome, Trainer};

@@ -1,0 +1,154 @@
+//! The training loop: init → (batch → train_step artifact → metrics) → ckpt.
+//!
+//! All heavy math is inside the AOT `train_step` HLO (forward with the
+//! fused SparkAttention kernels, backward via their recomputation VJP, and
+//! the Adam update).  The coordinator owns state buffers, data, logging,
+//! and checkpoints — the paper's Figure 5 integration with the framework
+//! loop living in Rust instead of PyTorch.
+
+use anyhow::{bail, Context, Result};
+use log::info;
+
+use super::checkpoint::Checkpoint;
+use crate::config::TrainConfig;
+use crate::data::{Batcher, ByteTokenizer, CorpusGenerator};
+use crate::metrics::Registry;
+use crate::runtime::{Engine, HostValue};
+
+/// Summary of a finished run.
+#[derive(Debug, Clone)]
+pub struct TrainOutcome {
+    pub steps: usize,
+    pub losses: Vec<f64>,
+    pub tokens_per_step: usize,
+    pub mean_step_seconds: f64,
+}
+
+impl TrainOutcome {
+    pub fn first_loss(&self) -> f64 {
+        self.losses.first().copied().unwrap_or(f64::NAN)
+    }
+
+    pub fn last_loss(&self) -> f64 {
+        self.losses.last().copied().unwrap_or(f64::NAN)
+    }
+
+    /// Mean of the final k losses (noise-robust convergence check).
+    pub fn tail_mean(&self, k: usize) -> f64 {
+        let k = k.min(self.losses.len()).max(1);
+        let tail = &self.losses[self.losses.len() - k..];
+        tail.iter().sum::<f64>() / k as f64
+    }
+}
+
+/// LM trainer bound to an engine + config.
+pub struct Trainer<'e> {
+    engine: &'e Engine,
+    cfg: TrainConfig,
+    pub metrics: Registry,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(engine: &'e Engine, cfg: TrainConfig) -> Self {
+        Trainer { engine, cfg, metrics: Registry::new() }
+    }
+
+    /// Run the configured number of steps; returns the loss history.
+    pub fn run(&mut self) -> Result<TrainOutcome> {
+        let init_meta = self.engine.manifest().get("lm_init")?.clone();
+        let step_meta = self.engine.manifest().get("train_step")?.clone();
+        let batch = step_meta.attr_i64("batch")
+            .context("train_step missing batch attr")? as usize;
+        let seq = step_meta.attr_i64("seq")
+            .context("train_step missing seq attr")? as usize;
+        let n_state = init_meta.outputs.len(); // params + m + v leaves
+        let n_params = n_state / 3;
+        if step_meta.inputs.len() != n_state + 3 {
+            bail!("train_step expects {} inputs, init provides {} state \
+                   buffers (+step/tokens/seed)",
+                  step_meta.inputs.len(), n_state);
+        }
+
+        info!("initializing {} params ({} leaves) via lm_init",
+              step_meta.attr_i64("param_count").unwrap_or(0), n_params);
+        let mut state = self.engine.execute(
+            "lm_init", &[HostValue::scalar_u32(self.cfg.seed as u32)])?;
+
+        info!("synthesizing corpus: {} tokens, zipf {}",
+              self.cfg.corpus_tokens, self.cfg.corpus_zipf);
+        let gen = CorpusGenerator { zipf: self.cfg.corpus_zipf,
+                                    ..CorpusGenerator::default() };
+        let text = gen.generate(self.cfg.corpus_tokens, self.cfg.seed);
+        let tokens = ByteTokenizer::new().encode(&text);
+        let mut batcher = Batcher::new(tokens, batch, seq, self.cfg.seed);
+        info!("corpus ready: {} batches/epoch", batcher.batches_per_epoch());
+
+        let mut losses = Vec::with_capacity(self.cfg.steps);
+        let t_run = std::time::Instant::now();
+        for step in 0..self.cfg.steps {
+            let toks = batcher.next_batch();
+            let mut inputs = Vec::with_capacity(state.len() + 3);
+            inputs.append(&mut state);
+            inputs.push(HostValue::scalar_f32((step + 1) as f32));
+            inputs.push(HostValue::I32 {
+                shape: vec![batch, seq + 1],
+                data: toks,
+            });
+            inputs.push(HostValue::scalar_f32(
+                self.cfg.seed as f32 + step as f32));
+
+            let (mut out, secs) = self.engine
+                .execute_timed("train_step", &inputs)
+                .with_context(|| format!("train step {step}"))?;
+            let loss = out.pop().context("train_step returned no loss")?;
+            let loss = loss.as_f32_slice()?[0] as f64;
+            if !loss.is_finite() {
+                bail!("loss diverged to {loss} at step {step}");
+            }
+            losses.push(loss);
+            state = out;
+
+            self.metrics.time("train_step", secs);
+            self.metrics.inc("steps", 1);
+            self.metrics.set_gauge("loss", loss);
+            if self.cfg.log_every > 0 && step % self.cfg.log_every == 0 {
+                info!("step {step:4}  loss {loss:.4}  ({:.0} ms)",
+                      secs * 1e3);
+            }
+            if self.cfg.checkpoint_every > 0
+                && (step + 1) % self.cfg.checkpoint_every == 0 {
+                self.save_checkpoint(&step_meta, &state, step + 1, loss)?;
+            }
+        }
+        let wall = t_run.elapsed().as_secs_f64();
+        let outcome = TrainOutcome {
+            steps: self.cfg.steps,
+            tokens_per_step: batch * seq,
+            mean_step_seconds: wall / self.cfg.steps.max(1) as f64,
+            losses,
+        };
+        info!("done: loss {:.4} → {:.4} over {} steps ({:.2} s/step, \
+               {:.0} tok/s)",
+              outcome.first_loss(), outcome.last_loss(), outcome.steps,
+              outcome.mean_step_seconds,
+              outcome.tokens_per_step as f64 / outcome.mean_step_seconds);
+        Ok(outcome)
+    }
+
+    fn save_checkpoint(&self, step_meta: &crate::runtime::ArtifactMeta,
+                       state: &[HostValue], step: usize, loss: f64)
+                       -> Result<()> {
+        std::fs::create_dir_all(&self.cfg.checkpoint_dir)?;
+        let names = step_meta.inputs.iter().take(state.len())
+            .map(|s| s.name.clone());
+        let ck = Checkpoint {
+            step,
+            loss,
+            buffers: names.zip(state.iter().cloned()).collect(),
+        };
+        let path = format!("{}/step{:06}.ckpt", self.cfg.checkpoint_dir, step);
+        ck.save(&path)?;
+        info!("checkpoint → {path}");
+        Ok(())
+    }
+}

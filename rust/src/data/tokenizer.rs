@@ -1,0 +1,65 @@
+//! Byte-level tokenizer (vocab 256) — matches the exported LM's vocab.
+//!
+//! Deliberately simple: the train-step artifact bakes `vocab = 256`, and a
+//! byte tokenizer needs no learned merges, keeping the Rust request path
+//! free of Python-trained state.  Round-trips arbitrary bytes exactly.
+
+/// Byte-level tokenizer with an optional BOS byte convention.
+#[derive(Debug, Clone, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub const VOCAB: usize = 256;
+
+    pub fn new() -> Self {
+        ByteTokenizer
+    }
+
+    pub fn encode(&self, text: &[u8]) -> Vec<i32> {
+        text.iter().map(|&b| b as i32).collect()
+    }
+
+    pub fn encode_str(&self, text: &str) -> Vec<i32> {
+        self.encode(text.as_bytes())
+    }
+
+    pub fn decode(&self, tokens: &[i32]) -> Vec<u8> {
+        tokens.iter().map(|&t| {
+            debug_assert!((0..256).contains(&t), "token {t} out of range");
+            (t & 0xFF) as u8
+        }).collect()
+    }
+
+    pub fn decode_lossy(&self, tokens: &[i32]) -> String {
+        String::from_utf8_lossy(&self.decode(tokens)).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer::new();
+        let ids = t.encode_str("hello spark");
+        assert_eq!(ids.len(), 11);
+        assert_eq!(t.decode_lossy(&ids), "hello spark");
+    }
+
+    #[test]
+    fn roundtrip_all_bytes() {
+        let t = ByteTokenizer::new();
+        let bytes: Vec<u8> = (0..=255).collect();
+        let ids = t.encode(&bytes);
+        assert!(ids.iter().all(|&i| (0..256).contains(&i)));
+        assert_eq!(t.decode(&ids), bytes);
+    }
+
+    #[test]
+    fn utf8_multibyte_survives() {
+        let t = ByteTokenizer::new();
+        let s = "héllo 世界";
+        assert_eq!(t.decode_lossy(&t.encode_str(s)), s);
+    }
+}

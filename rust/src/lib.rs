@@ -1,0 +1,33 @@
+//! SparkAttention — fused multi-head attention for large-model training.
+//!
+//! Reproduction of "SparkAttention: High-Performance Multi-Head Attention for
+//! Large Models on Volta GPU Architecture" (CS.DC 2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1** — Pallas flash-attention kernels (build-time Python, see
+//!   `python/compile/kernels/`), AOT-lowered to HLO text.
+//! * **Layer 2** — JAX transformer model + train step (`python/compile/`).
+//! * **Layer 3** — this crate: the runtime coordinator that loads the AOT
+//!   artifacts via PJRT and drives training, benchmarking, and the paper's
+//!   evaluation harness. Python never runs on the request path.
+//!
+//! See `DESIGN.md` for the hardware-adaptation mapping (Volta `m8n8k4` TCU →
+//! MXU-style Pallas BlockSpecs) and the per-experiment index.
+
+pub mod attention;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod iomodel;
+pub mod jsonio;
+pub mod logging;
+pub mod metrics;
+pub mod perfmodel;
+pub mod proptest;
+pub mod runtime;
+pub mod tensor;
+
+/// Crate version, re-exported for the CLI `--version` flag.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,70 @@
+//! Tiny env-filtered logger backing the `log` crate facade.
+//!
+//! `SPARK_LOG=debug spark train …` raises verbosity; default is `info`.
+//! Messages go to stderr with a monotonic timestamp so bench output on
+//! stdout stays machine-parseable.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+struct SparkLogger {
+    start: Instant,
+    level: Level,
+}
+
+impl log::Log for SparkLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        eprintln!("[{t:9.3}s {:5} {}] {}", record.level(),
+                  record.target().split("::").last().unwrap_or(""),
+                  record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceLock<SparkLogger> = OnceLock::new();
+
+/// Install the logger (idempotent).  Level from `SPARK_LOG` ∈
+/// {error, warn, info, debug, trace}; default info.
+pub fn init() {
+    let level = match std::env::var("SPARK_LOG").ok().as_deref() {
+        Some("error") => Level::Error,
+        Some("warn") => Level::Warn,
+        Some("debug") => Level::Debug,
+        Some("trace") => Level::Trace,
+        _ => Level::Info,
+    };
+    let logger = LOGGER.get_or_init(|| SparkLogger {
+        start: Instant::now(),
+        level,
+    });
+    // Ignore the error if a logger is already set (tests call init twice).
+    let _ = log::set_logger(logger);
+    log::set_max_level(LevelFilter::Trace.min(match level {
+        Level::Error => LevelFilter::Error,
+        Level::Warn => LevelFilter::Warn,
+        Level::Info => LevelFilter::Info,
+        Level::Debug => LevelFilter::Debug,
+        Level::Trace => LevelFilter::Trace,
+    }));
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logger smoke message");
+    }
+}

@@ -1,0 +1,286 @@
+//! `spark` — the SparkAttention coordinator CLI.
+//!
+//! Subcommands map 1:1 to the paper's evaluation (DESIGN.md §5):
+//!
+//! ```text
+//! spark train              train the LM end-to-end (E7)
+//! spark bench-forward      Fig 10 sweep (E1)
+//! spark bench-backward     Fig 11 sweep (E2)
+//! spark bench-e2e          Fig 12 encoder latency (E4)
+//! spark accuracy           §4.2.3 error table (E3)
+//! spark io-report          §2.3 HBM traffic claim (E5)
+//! spark project            V100-projected Fig 10/11 at paper scale
+//! spark inspect-artifacts  manifest + compile stats
+//! ```
+
+use anyhow::{bail, Result};
+use sparkattention::bench::Options;
+use sparkattention::cli::Command;
+use sparkattention::config::TrainConfig;
+use sparkattention::coordinator::{self, harness::HarnessOptions, Trainer};
+use sparkattention::jsonio;
+use sparkattention::perfmodel::V100;
+use sparkattention::runtime::Engine;
+
+fn main() {
+    sparkattention::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn top_usage() -> String {
+    format!(
+        "spark {} — SparkAttention coordinator\n\n\
+         commands:\n\
+         \x20 train              train the LM on a synthetic corpus (E7)\n\
+         \x20 bench-forward      Fig 10: MHA-Forward sweep (E1)\n\
+         \x20 bench-backward     Fig 11: MHA-Backward sweep (E2)\n\
+         \x20 bench-e2e          Fig 12: encoder-forward latency (E4)\n\
+         \x20 accuracy           §4.2.3 accuracy table (E3)\n\
+         \x20 io-report          §2.3 HBM traffic model (E5)\n\
+         \x20 project            V100-projected figures at paper scale\n\
+         \x20 inspect-artifacts  list artifacts + engine stats\n\n\
+         run `spark <command> --help` for flags",
+        sparkattention::VERSION)
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        println!("{}", top_usage());
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "train" => cmd_train(rest),
+        "bench-forward" => cmd_bench(rest, Figure::Forward),
+        "bench-backward" => cmd_bench(rest, Figure::Backward),
+        "bench-e2e" => cmd_bench(rest, Figure::E2e),
+        "accuracy" => cmd_accuracy(rest),
+        "io-report" => cmd_io_report(rest),
+        "project" => cmd_project(rest),
+        "inspect-artifacts" => cmd_inspect(rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", top_usage());
+            Ok(())
+        }
+        "--version" => {
+            println!("spark {}", sparkattention::VERSION);
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n\n{}", top_usage()),
+    }
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let cmd = Command::new("train", "train the LM via the train_step artifact")
+        .flag("config", "TOML config path", None)
+        .flag("artifacts", "artifact directory", Some("artifacts"))
+        .flag("steps", "training steps", None)
+        .flag("seed", "run seed", None)
+        .flag("checkpoint-every", "steps between checkpoints (0 = off)", None)
+        .flag("metrics-out", "write metrics JSON here", None);
+    let p = cmd.parse(args)?;
+    let mut cfg = match p.get("config") {
+        Some(path) => TrainConfig::load(path)?,
+        None => TrainConfig::default(),
+    };
+    if let Some(dir) = p.get("artifacts") {
+        cfg.artifact_dir = dir.to_string();
+    }
+    if let Some(steps) = p.get_usize("steps")? {
+        cfg.steps = steps;
+    }
+    if let Some(seed) = p.get_usize("seed")? {
+        cfg.seed = seed as u64;
+    }
+    if let Some(ck) = p.get_usize("checkpoint-every")? {
+        cfg.checkpoint_every = ck;
+    }
+    if let Some(m) = p.get("metrics-out") {
+        cfg.metrics_out = Some(m.to_string());
+    }
+
+    let engine = Engine::new(&cfg.artifact_dir)?;
+    let metrics_out = cfg.metrics_out.clone();
+    let mut trainer = Trainer::new(&engine, cfg);
+    let outcome = trainer.run()?;
+    println!("steps: {}", outcome.steps);
+    println!("loss: {:.4} → {:.4} (tail-10 mean {:.4})",
+             outcome.first_loss(), outcome.last_loss(),
+             outcome.tail_mean(10));
+    println!("throughput: {:.0} tokens/s",
+             outcome.tokens_per_step as f64 / outcome.mean_step_seconds);
+    if let Some(path) = metrics_out {
+        std::fs::write(&path,
+                       jsonio::to_string(&trainer.metrics.to_json()))?;
+        println!("metrics → {path}");
+    }
+    Ok(())
+}
+
+enum Figure {
+    Forward,
+    Backward,
+    E2e,
+}
+
+fn bench_flags(name: &'static str, about: &'static str) -> Command {
+    Command::new(name, about)
+        .flag("artifacts", "artifact directory", Some("artifacts"))
+        .flag("iters", "measured iterations", Some("3"))
+        .flag("warmup", "warmup iterations", Some("1"))
+        .flag("mem-budget-gb", "host memory admission budget", Some("8"))
+        .flag("json-out", "write JSON report here", None)
+        .switch("csv", "also print CSV rows")
+}
+
+fn cmd_bench(args: &[String], fig: Figure) -> Result<()> {
+    let cmd = match fig {
+        Figure::Forward => bench_flags("bench-forward",
+                                       "Fig 10: MHA-Forward sweep"),
+        Figure::Backward => bench_flags("bench-backward",
+                                        "Fig 11: MHA-Backward sweep"),
+        Figure::E2e => bench_flags("bench-e2e",
+                                   "Fig 12: encoder-forward latency"),
+    };
+    let p = cmd.parse(args)?;
+    let engine = Engine::new(p.get("artifacts").unwrap())?;
+    let opts = HarnessOptions {
+        bench: Options {
+            warmup_iters: p.get_usize("warmup")?.unwrap_or(1),
+            iters: p.get_usize("iters")?.unwrap_or(3),
+        },
+        mem_budget: (p.get_usize("mem-budget-gb")?.unwrap_or(8)) << 30,
+    };
+    let report = match fig {
+        Figure::Forward => coordinator::fig10_forward(&engine, opts)?,
+        Figure::Backward => coordinator::fig11_backward(&engine, opts)?,
+        Figure::E2e => coordinator::fig12_e2e(&engine, opts)?,
+    };
+    print!("{}", report.emit(p.get("json-out"))?);
+    if p.switch("csv") {
+        print!("{}", report.csv());
+    }
+    let pairs: &[(&str, &str)] = match fig {
+        Figure::Forward => &[("spark_f32acc", "pytorch_fp16"),
+                             ("spark_bf16acc", "pytorch_fp16")],
+        Figure::Backward => &[("spark_bf16acc", "pytorch_fp16")],
+        Figure::E2e => &[("sparkattention", "pytorch_jit"),
+                         ("fastertransformer*", "pytorch_jit")],
+    };
+    for (v, b) in pairs {
+        if let Some((mean, max)) = report.speedup_summary(v, b) {
+            println!("speedup {v} vs {b}: avg {mean:.2}× (max {max:.2}×)");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_accuracy(args: &[String]) -> Result<()> {
+    let cmd = Command::new("accuracy", "§4.2.3 accuracy vs the f32 oracle")
+        .flag("artifacts", "artifact directory", Some("artifacts"))
+        .flag("json-out", "write JSON rows here", None);
+    let p = cmd.parse(args)?;
+    let engine = Engine::new(p.get("artifacts").unwrap())?;
+    let rows = coordinator::accuracy_report(&engine)?;
+    print!("{}", coordinator::harness::accuracy_table(&rows));
+    if let Some(path) = p.get("json-out") {
+        let arr = jsonio::Value::Arr(rows.iter().map(|r| jsonio::obj(vec![
+            ("name", jsonio::s(r.name.clone())),
+            ("mean_rel_err", jsonio::num(r.mean_rel_err)),
+            ("mean_abs_err", jsonio::num(r.mean_abs_err)),
+            ("max_abs_err", jsonio::num(r.max_abs_err)),
+        ])).collect());
+        std::fs::write(path, jsonio::to_string(&arr))?;
+    }
+    // paper-style summary: averages per variant family
+    let avg = |pred: &dyn Fn(&str) -> bool| {
+        let v: Vec<&coordinator::harness::AccuracyRow> =
+            rows.iter().filter(|r| pred(&r.name)).collect();
+        if v.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (v.iter().map(|r| r.mean_rel_err).sum::<f64>() / v.len() as f64,
+             v.iter().map(|r| r.mean_abs_err).sum::<f64>() / v.len() as f64)
+        }
+    };
+    let (rel, abs) = avg(&|n| n.contains("fused_f32"));
+    println!("\nFP32-ACC forward: avg rel {:.4}%, avg abs {:.6}",
+             rel * 100.0, abs);
+    let (rel, abs) = avg(&|n| n.contains("fused_bf16") && !n.contains('/'));
+    println!("BF16-ACC forward: avg rel {:.4}%, avg abs {:.6}",
+             rel * 100.0, abs);
+    let (rel, abs) = avg(&|n| n.contains('/'));
+    println!("backward (dq/dk/dv): avg rel {:.4}%, avg abs {:.6}",
+             rel * 100.0, abs);
+    Ok(())
+}
+
+fn cmd_io_report(args: &[String]) -> Result<()> {
+    let cmd = Command::new("io-report", "§2.3 HBM traffic model");
+    cmd.parse(args)?;
+    print!("{}", coordinator::io_report(&V100));
+    Ok(())
+}
+
+fn cmd_project(args: &[String]) -> Result<()> {
+    let cmd = Command::new("project",
+                           "V100 roofline projection at paper scale")
+        .switch("backward", "project the backward pass (Fig 11)")
+        .switch("e2e", "project the encoder end-to-end (Fig 12)");
+    let p = cmd.parse(args)?;
+    if p.switch("e2e") {
+        let report = coordinator::projected_fig12(&V100);
+        print!("{}", report.table());
+        if let Some((mean, max)) =
+            report.speedup_summary("sparkattention", "pytorch_jit") {
+            println!("projected e2e speedup: avg {mean:.2}× (max {max:.2}×) \
+                      [paper: avg 1.80× (max 2.46×)]");
+        }
+        return Ok(());
+    }
+    let report = coordinator::projected_fig10(&V100, p.switch("backward"));
+    print!("{}", report.table());
+    if let Some((mean, max)) =
+        report.speedup_summary("spark_projected", "pytorch_projected") {
+        println!("projected speedup: avg {mean:.2}× (max {max:.2}×)  \
+                  [paper: {}]",
+                 if p.switch("backward") {
+                     "avg 3.44× (max 7.91×)"
+                 } else {
+                     "avg 4.55× (max 9.17×)"
+                 });
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &[String]) -> Result<()> {
+    let cmd = Command::new("inspect-artifacts", "manifest summary")
+        .flag("artifacts", "artifact directory", Some("artifacts"))
+        .switch("compile-all", "compile every artifact and time it");
+    let p = cmd.parse(args)?;
+    let engine = Engine::new(p.get("artifacts").unwrap())?;
+    println!("platform: {}", engine.platform());
+    println!("artifacts: {}", engine.manifest().len());
+    let mut by_kind = std::collections::BTreeMap::new();
+    for a in engine.manifest().iter() {
+        *by_kind.entry(a.kind.clone()).or_insert(0usize) += 1;
+    }
+    for (k, c) in by_kind {
+        println!("  {k:<16} ×{c}");
+    }
+    if p.switch("compile-all") {
+        let names: Vec<String> =
+            engine.manifest().iter().map(|a| a.name.clone()).collect();
+        for n in &names {
+            engine.load(n)?;
+        }
+        let st = engine.stats();
+        println!("compiled {} modules in {:.1} ms total",
+                 st.compiles, st.compile_ms);
+    }
+    Ok(())
+}

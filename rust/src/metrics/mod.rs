@@ -1,0 +1,186 @@
+//! Run-time metrics: counters, gauges, and streaming timing statistics.
+//!
+//! The coordinator and bench harness record into a `Registry`; reports are
+//! emitted as JSON (`jsonio`) or human tables.  Timing stats keep the full
+//! sample vector (runs are short) so p50/p95 are exact, not sketched.
+
+use std::collections::BTreeMap;
+
+use crate::jsonio::{self, Value};
+
+/// Streaming summary of one timing series (seconds).
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    samples: Vec<f64>,
+}
+
+impl Series {
+    pub fn record(&mut self, secs: f64) {
+        self.samples.push(secs);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Exact percentile by sorting a copy (fine for bench-scale counts).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.samples.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((v.len() - 1) as f64 * p.clamp(0.0, 1.0)).round() as usize;
+        v[idx]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(0.95)
+    }
+
+    /// Sample standard deviation.
+    pub fn stddev(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (n - 1) as f64).sqrt()
+    }
+
+    pub fn to_json(&self) -> Value {
+        jsonio::obj(vec![
+            ("count", jsonio::num(self.count() as f64)),
+            ("mean_s", jsonio::num(self.mean())),
+            ("p50_s", jsonio::num(self.p50())),
+            ("p95_s", jsonio::num(self.p95())),
+            ("min_s", jsonio::num(self.min())),
+            ("max_s", jsonio::num(self.max())),
+            ("stddev_s", jsonio::num(self.stddev())),
+        ])
+    }
+}
+
+/// Named counters + gauges + timing series.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    series: BTreeMap<String, Series>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn time(&mut self, name: &str, secs: f64) {
+        self.series.entry(name.to_string()).or_default().record(secs);
+    }
+
+    pub fn series(&self, name: &str) -> Option<&Series> {
+        self.series.get(name)
+    }
+
+    /// Full JSON dump for `--metrics-out`.
+    pub fn to_json(&self) -> Value {
+        let counters = Value::Obj(self.counters.iter()
+            .map(|(k, v)| (k.clone(), jsonio::num(*v as f64))).collect());
+        let gauges = Value::Obj(self.gauges.iter()
+            .map(|(k, v)| (k.clone(), jsonio::num(*v))).collect());
+        let series = Value::Obj(self.series.iter()
+            .map(|(k, s)| (k.clone(), s.to_json())).collect());
+        jsonio::obj(vec![
+            ("counters", counters),
+            ("gauges", gauges),
+            ("timings", series),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut r = Registry::new();
+        r.inc("steps", 1);
+        r.inc("steps", 2);
+        assert_eq!(r.counter("steps"), 3);
+        assert_eq!(r.counter("missing"), 0);
+    }
+
+    #[test]
+    fn series_stats() {
+        let mut s = Series::default();
+        for x in [1.0, 2.0, 3.0, 4.0, 100.0] {
+            s.record(x);
+        }
+        assert_eq!(s.count(), 5);
+        assert!((s.mean() - 22.0).abs() < 1e-9);
+        assert_eq!(s.p50(), 3.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 100.0);
+        assert!(s.stddev() > 40.0);
+    }
+
+    #[test]
+    fn percentiles_on_single_sample() {
+        let mut s = Series::default();
+        s.record(7.0);
+        assert_eq!(s.p50(), 7.0);
+        assert_eq!(s.p95(), 7.0);
+        assert_eq!(s.stddev(), 0.0);
+    }
+
+    #[test]
+    fn json_dump_shape() {
+        let mut r = Registry::new();
+        r.inc("execs", 4);
+        r.set_gauge("loss", 2.5);
+        r.time("step", 0.1);
+        let j = r.to_json();
+        assert_eq!(j.get("counters").unwrap().get("execs").unwrap().as_i64(),
+                   Some(4));
+        assert_eq!(j.get("gauges").unwrap().get("loss").unwrap().as_f64(),
+                   Some(2.5));
+        assert!(j.get("timings").unwrap().get("step").is_some());
+    }
+}

@@ -1,0 +1,190 @@
+//! Minimal property-testing framework (no `proptest` crate offline).
+//!
+//! Seeded generators + a runner that, on failure, reports the case index
+//! and the generator seed so any counterexample is reproducible with
+//! `SPARK_PROPTEST_SEED`.  No integrated shrinking — generators are asked
+//! to produce *small-biased* values instead (sufficient for coordinator
+//! invariants and attention algebra, our two uses).
+
+use crate::tensor::Rng;
+
+/// Number of cases per property (override with SPARK_PROPTEST_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("SPARK_PROPTEST_CASES").ok()
+        .and_then(|s| s.parse().ok()).unwrap_or(64)
+}
+
+fn base_seed() -> u64 {
+    std::env::var("SPARK_PROPTEST_SEED").ok()
+        .and_then(|s| s.parse().ok()).unwrap_or(0x5EED_CAFE)
+}
+
+/// A value generator: draws from an `Rng`.
+pub trait Gen {
+    type Value;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+}
+
+/// usize in [lo, hi], biased toward the low end (≈ shrunken cases).
+pub struct USize {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen for USize {
+    type Value = usize;
+
+    fn generate(&self, rng: &mut Rng) -> usize {
+        debug_assert!(self.lo <= self.hi);
+        let span = self.hi - self.lo + 1;
+        // square the uniform draw: density concentrates near lo
+        let u = rng.uniform();
+        self.lo + ((u * u * span as f64) as usize).min(span - 1)
+    }
+}
+
+/// Pick uniformly from a fixed set (block sizes, dtypes, …).
+pub struct OneOf<T: Clone>(pub Vec<T>);
+
+impl<T: Clone> Gen for OneOf<T> {
+    type Value = T;
+
+    fn generate(&self, rng: &mut Rng) -> T {
+        self.0[rng.below(self.0.len())].clone()
+    }
+}
+
+/// f32 in [lo, hi].
+pub struct F32 {
+    pub lo: f32,
+    pub hi: f32,
+}
+
+impl Gen for F32 {
+    type Value = f32;
+
+    fn generate(&self, rng: &mut Rng) -> f32 {
+        rng.range_f64(self.lo as f64, self.hi as f64) as f32
+    }
+}
+
+/// Vec of standard normals with generated length.
+pub struct NormalVec {
+    pub len: USize,
+}
+
+impl Gen for NormalVec {
+    type Value = Vec<f32>;
+
+    fn generate(&self, rng: &mut Rng) -> Vec<f32> {
+        let n = self.len.generate(rng);
+        rng.normal_vec(n)
+    }
+}
+
+/// Run `prop` over `cases` generated inputs; panic with a reproducible
+/// seed report on the first failure.
+pub fn check<G: Gen>(name: &str, gen: &G, cases: usize,
+                     mut prop: impl FnMut(G::Value) -> Result<(), String>) {
+    let seed0 = base_seed();
+    for case in 0..cases {
+        let seed = seed0 ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let value = gen.generate(&mut rng);
+        if let Err(msg) = prop(value) {
+            panic!(
+                "property {name:?} failed at case {case}/{cases}: {msg}\n\
+                 reproduce with SPARK_PROPTEST_SEED={seed0} (case seed {seed})");
+        }
+    }
+}
+
+/// Two-generator convenience.
+pub fn check2<A: Gen, B: Gen>(
+    name: &str, ga: &A, gb: &B, cases: usize,
+    mut prop: impl FnMut(A::Value, B::Value) -> Result<(), String>) {
+    let seed0 = base_seed();
+    for case in 0..cases {
+        let seed = seed0 ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let a = ga.generate(&mut rng);
+        let b = gb.generate(&mut rng);
+        if let Err(msg) = prop(a, b) {
+            panic!(
+                "property {name:?} failed at case {case}/{cases}: {msg}\n\
+                 reproduce with SPARK_PROPTEST_SEED={seed0}");
+        }
+    }
+}
+
+/// Assertion helper: approximate equality with context.
+pub fn approx_eq(a: f32, b: f32, tol: f32, what: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn usize_respects_bounds_and_biases_low() {
+        let g = USize { lo: 4, hi: 64 };
+        let mut rng = Rng::new(1);
+        let mut low = 0;
+        for _ in 0..1000 {
+            let v = g.generate(&mut rng);
+            assert!((4..=64).contains(&v));
+            if v < 20 {
+                low += 1;
+            }
+        }
+        assert!(low > 500, "low-bias expected, got {low}/1000 below 20");
+    }
+
+    #[test]
+    fn oneof_covers_choices() {
+        let g = OneOf(vec!["a", "b", "c"]);
+        let mut rng = Rng::new(2);
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..100 {
+            seen.insert(g.generate(&mut rng));
+        }
+        assert_eq!(seen.len(), 3);
+    }
+
+    #[test]
+    fn check_passes_good_property() {
+        check("sum-commutes", &USize { lo: 0, hi: 100 }, 32, |n| {
+            if n + 1 == 1 + n {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "reproduce with SPARK_PROPTEST_SEED")]
+    fn check_reports_seed_on_failure() {
+        check("always-fails", &USize { lo: 0, hi: 10 }, 8,
+              |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn approx_eq_tolerance() {
+        assert!(approx_eq(1.0, 1.005, 0.01, "x").is_ok());
+        assert!(approx_eq(1.0, 1.5, 0.01, "x").is_err());
+    }
+
+    #[test]
+    fn cases_deterministic_per_seed() {
+        let g = NormalVec { len: USize { lo: 1, hi: 8 } };
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        assert_eq!(g.generate(&mut r1), g.generate(&mut r2));
+    }
+}

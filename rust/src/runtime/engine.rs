@@ -1,0 +1,165 @@
+//! The PJRT execution engine: loads HLO-text artifacts, compiles them once,
+//! and executes them from the request path.
+//!
+//! Mirrors `/opt/xla-example/load_hlo.rs`: HLO **text** → `HloModuleProto`
+//! → `XlaComputation` → `PjRtClient::compile` → `execute`.  Compilation is
+//! amortised behind a cache keyed by artifact name; the hot path is
+//! literal-encode → execute → literal-decode.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable,
+          XlaComputation};
+
+use super::host::HostValue;
+use super::manifest::{ArtifactMeta, Manifest};
+
+/// Compile/execute statistics (observable via `spark inspect-artifacts`).
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub compiles: u64,
+    pub compile_ms: f64,
+    pub executions: u64,
+    pub execute_ms: f64,
+    pub h2d_ms: f64,
+    pub d2h_ms: f64,
+}
+
+/// Artifact registry + PJRT client.  Single-threaded by design (the PJRT
+/// CPU client is driven from the coordinator's event loop; worker
+/// parallelism lives inside XLA).
+pub struct Engine {
+    client: PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    stats: RefCell<EngineStats>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifact directory.
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats.borrow().clone()
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn load(&self, name: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(Rc::clone(exe));
+        }
+        let meta = self.manifest.get(name)?;
+        let path = self.manifest.hlo_path(meta);
+        let t0 = Instant::now();
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        let exe = Rc::new(exe);
+        {
+            let mut st = self.stats.borrow_mut();
+            st.compiles += 1;
+            st.compile_ms += t0.elapsed().as_secs_f64() * 1e3;
+        }
+        self.cache.borrow_mut().insert(name.to_string(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of artifacts (amortise before the timed region).
+    pub fn warmup<'a>(&self, names: impl IntoIterator<Item = &'a str>)
+                      -> Result<()> {
+        for n in names {
+            self.load(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact with host values; returns decoded host outputs.
+    ///
+    /// Inputs are validated against the manifest specs (count, shape,
+    /// dtype); outputs come back as f32/i32 host tensors.
+    pub fn execute(&self, name: &str, inputs: &[HostValue])
+                   -> Result<Vec<HostValue>> {
+        let meta = self.manifest.get(name)?.clone();
+        let exe = self.load(name)?;
+        if inputs.len() != meta.inputs.len() {
+            bail!("artifact {name}: expected {} inputs, got {}",
+                  meta.inputs.len(), inputs.len());
+        }
+        let t0 = Instant::now();
+        let literals = inputs.iter().zip(&meta.inputs)
+            .map(|(hv, spec)| hv.to_literal(spec))
+            .collect::<Result<Vec<Literal>>>()?;
+        let h2d = t0.elapsed();
+
+        let t1 = Instant::now();
+        let result = exe.execute::<Literal>(&literals)
+            .with_context(|| format!("executing artifact {name}"))?;
+        let exec = t1.elapsed();
+
+        let t2 = Instant::now();
+        let out = self.decode_result(name, &meta, result)?;
+        let d2h = t2.elapsed();
+
+        let mut st = self.stats.borrow_mut();
+        st.executions += 1;
+        st.h2d_ms += h2d.as_secs_f64() * 1e3;
+        st.execute_ms += exec.as_secs_f64() * 1e3;
+        st.d2h_ms += d2h.as_secs_f64() * 1e3;
+        Ok(out)
+    }
+
+    /// Timed execute for benches: returns (outputs, pure-execute seconds).
+    pub fn execute_timed(&self, name: &str, inputs: &[HostValue])
+                         -> Result<(Vec<HostValue>, f64)> {
+        let meta = self.manifest.get(name)?.clone();
+        let exe = self.load(name)?;
+        let literals = inputs.iter().zip(&meta.inputs)
+            .map(|(hv, spec)| hv.to_literal(spec))
+            .collect::<Result<Vec<Literal>>>()?;
+        let t0 = Instant::now();
+        let result = exe.execute::<Literal>(&literals)
+            .with_context(|| format!("executing artifact {name}"))?;
+        let secs = t0.elapsed().as_secs_f64();
+        let out = self.decode_result(name, &meta, result)?;
+        Ok((out, secs))
+    }
+
+    fn decode_result(&self, name: &str, meta: &ArtifactMeta,
+                     result: Vec<Vec<xla::PjRtBuffer>>)
+                     -> Result<Vec<HostValue>> {
+        // aot.py lowers with return_tuple=True: one buffer, a tuple literal.
+        let buf = result.first().and_then(|r| r.first())
+            .with_context(|| format!("artifact {name} produced no output"))?;
+        let lit = buf.to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        if parts.len() != meta.outputs.len() {
+            bail!("artifact {name}: manifest promises {} outputs, tuple has {}",
+                  meta.outputs.len(), parts.len());
+        }
+        parts.iter().map(HostValue::from_literal).collect()
+    }
+}

@@ -1,0 +1,187 @@
+//! Host-side values and their PJRT literal encoding.
+//!
+//! The coordinator works in f32/i32 on the host; artifacts consume bf16 /
+//! f32 / s32 / u32 tensors.  `HostValue::to_literal` converts with explicit
+//! round-to-nearest-even bf16 quantisation (`tensor::bf16`), and
+//! `from_literal` upconverts device outputs back — so precision loss happens
+//! in exactly one visible place.
+
+use anyhow::{anyhow, bail, Result};
+use xla::{ElementType, Literal, PrimitiveType};
+
+use super::manifest::{DType, TensorSpec};
+use crate::tensor::{bf16, Tensor};
+
+/// A host tensor headed to, or coming from, a PJRT executable.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostValue {
+    /// f32 payload (also the carrier for bf16 artifacts).
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+    U32 { shape: Vec<usize>, data: Vec<u32> },
+}
+
+impl HostValue {
+    pub fn scalar_f32(v: f32) -> Self {
+        HostValue::F32 { shape: vec![1], data: vec![v] }
+    }
+
+    pub fn scalar_u32(v: u32) -> Self {
+        HostValue::U32 { shape: vec![1], data: vec![v] }
+    }
+
+    pub fn from_tensor(t: &Tensor) -> Self {
+        HostValue::F32 { shape: t.shape().to_vec(), data: t.data().to_vec() }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostValue::F32 { shape, .. }
+            | HostValue::I32 { shape, .. }
+            | HostValue::U32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    /// View as an f32 `Tensor` (errors on integer payloads).
+    pub fn as_tensor(&self) -> Result<Tensor> {
+        match self {
+            HostValue::F32 { shape, data } => {
+                Ok(Tensor::new(shape.clone(), data.clone()))
+            }
+            _ => bail!("expected float tensor, got {self:?}"),
+        }
+    }
+
+    pub fn as_f32_slice(&self) -> Result<&[f32]> {
+        match self {
+            HostValue::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 payload"),
+        }
+    }
+
+    /// Encode for a given artifact input spec (shape-checked).
+    pub fn to_literal(&self, spec: &TensorSpec) -> Result<Literal> {
+        if self.shape() != &spec.shape[..] {
+            bail!("input {}: shape {:?} != spec {:?}",
+                  spec.name, self.shape(), spec.shape);
+        }
+        match (self, spec.dtype) {
+            (HostValue::F32 { shape, data }, DType::Bf16) => {
+                let bytes = bf16::encode(data);
+                Ok(Literal::create_from_shape_and_untyped_data(
+                    ElementType::Bf16, shape, &bytes)?)
+            }
+            (HostValue::F32 { shape, data }, DType::F32) => {
+                let bytes: Vec<u8> =
+                    data.iter().flat_map(|x| x.to_le_bytes()).collect();
+                Ok(Literal::create_from_shape_and_untyped_data(
+                    ElementType::F32, shape, &bytes)?)
+            }
+            (HostValue::I32 { shape, data }, DType::S32) => {
+                let bytes: Vec<u8> =
+                    data.iter().flat_map(|x| x.to_le_bytes()).collect();
+                Ok(Literal::create_from_shape_and_untyped_data(
+                    ElementType::S32, shape, &bytes)?)
+            }
+            (HostValue::U32 { shape, data }, DType::U32) => {
+                let bytes: Vec<u8> =
+                    data.iter().flat_map(|x| x.to_le_bytes()).collect();
+                Ok(Literal::create_from_shape_and_untyped_data(
+                    ElementType::U32, shape, &bytes)?)
+            }
+            (hv, dt) => bail!(
+                "input {}: no conversion from host {:?} to {}",
+                spec.name, variant_name(hv), dt.name()),
+        }
+    }
+
+    /// Decode a device literal (any supported dtype) into a host value.
+    pub fn from_literal(lit: &Literal) -> Result<HostValue> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.primitive_type() {
+            PrimitiveType::Bf16 | PrimitiveType::F16 => {
+                let as_f32 = lit.convert(PrimitiveType::F32)?;
+                Ok(HostValue::F32 { shape: dims, data: as_f32.to_vec::<f32>()? })
+            }
+            PrimitiveType::F32 => {
+                Ok(HostValue::F32 { shape: dims, data: lit.to_vec::<f32>()? })
+            }
+            PrimitiveType::F64 => {
+                let v = lit.to_vec::<f64>()?;
+                Ok(HostValue::F32 {
+                    shape: dims,
+                    data: v.into_iter().map(|x| x as f32).collect(),
+                })
+            }
+            PrimitiveType::S32 => {
+                Ok(HostValue::I32 { shape: dims, data: lit.to_vec::<i32>()? })
+            }
+            PrimitiveType::U32 => {
+                Ok(HostValue::U32 { shape: dims, data: lit.to_vec::<u32>()? })
+            }
+            other => Err(anyhow!("unsupported output primitive type {other:?}")),
+        }
+    }
+}
+
+fn variant_name(hv: &HostValue) -> &'static str {
+    match hv {
+        HostValue::F32 { .. } => "F32",
+        HostValue::I32 { .. } => "I32",
+        HostValue::U32 { .. } => "U32",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, shape: &[usize], dtype: DType) -> TensorSpec {
+        TensorSpec { name: name.into(), shape: shape.to_vec(), dtype }
+    }
+
+    #[test]
+    fn f32_literal_roundtrip() {
+        let hv = HostValue::F32 { shape: vec![2, 3],
+                                  data: vec![1., 2., 3., 4., 5., 6.] };
+        let lit = hv.to_literal(&spec("x", &[2, 3], DType::F32)).unwrap();
+        let back = HostValue::from_literal(&lit).unwrap();
+        assert_eq!(back, hv);
+    }
+
+    #[test]
+    fn bf16_literal_quantizes() {
+        let vals = vec![1.0f32, 1.0 + 2f32.powi(-10), -3.7];
+        let hv = HostValue::F32 { shape: vec![3], data: vals.clone() };
+        let lit = hv.to_literal(&spec("x", &[3], DType::Bf16)).unwrap();
+        let back = HostValue::from_literal(&lit).unwrap();
+        let got = back.as_f32_slice().unwrap();
+        for (g, v) in got.iter().zip(&vals) {
+            assert_eq!(*g, bf16::quantize(*v));
+        }
+    }
+
+    #[test]
+    fn i32_literal_roundtrip() {
+        let hv = HostValue::I32 { shape: vec![4], data: vec![-1, 0, 7, 1 << 20] };
+        let lit = hv.to_literal(&spec("t", &[4], DType::S32)).unwrap();
+        assert_eq!(HostValue::from_literal(&lit).unwrap(), hv);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let hv = HostValue::F32 { shape: vec![2], data: vec![0.0; 2] };
+        assert!(hv.to_literal(&spec("x", &[3], DType::F32)).is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let hv = HostValue::I32 { shape: vec![1], data: vec![1] };
+        assert!(hv.to_literal(&spec("x", &[1], DType::Bf16)).is_err());
+    }
+}

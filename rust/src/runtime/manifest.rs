@@ -1,0 +1,276 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.  `manifest.json` lists every HLO entry point with its
+//! input/output tensor specs and static attributes (shapes, FLOPs, HBM
+//! traffic model) — the runtime never guesses shapes.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::jsonio::{self, Value};
+
+/// Element dtype of an artifact tensor (manifest string form).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    Bf16,
+    F32,
+    F64,
+    S32,
+    U32,
+    Pred,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "bf16" => DType::Bf16,
+            "f32" => DType::F32,
+            "f64" => DType::F64,
+            "s32" => DType::S32,
+            "u32" => DType::U32,
+            "pred" => DType::Pred,
+            other => bail!("unknown dtype {other:?} in manifest"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::Bf16 => "bf16",
+            DType::F32 => "f32",
+            DType::F64 => "f64",
+            DType::S32 => "s32",
+            DType::U32 => "u32",
+            DType::Pred => "pred",
+        }
+    }
+
+    pub fn byte_size(self) -> usize {
+        match self {
+            DType::Bf16 => 2,
+            DType::F32 | DType::S32 | DType::U32 => 4,
+            DType::F64 => 8,
+            DType::Pred => 1,
+        }
+    }
+}
+
+/// Shape + dtype of one artifact input or output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_size(&self) -> usize {
+        self.element_count() * self.dtype.byte_size()
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        let name = v.get("name").and_then(Value::as_str)
+            .ok_or_else(|| anyhow!("tensor spec missing name"))?.to_string();
+        let shape = v.get("shape").and_then(Value::as_arr)
+            .ok_or_else(|| anyhow!("tensor spec {name}: missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim in {name}")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::parse(
+            v.get("dtype").and_then(Value::as_str)
+                .ok_or_else(|| anyhow!("tensor spec {name}: missing dtype"))?)?;
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+/// One AOT-compiled HLO entry point.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub attrs: Value,
+}
+
+impl ArtifactMeta {
+    fn from_json(v: &Value) -> Result<Self> {
+        let name = v.get("name").and_then(Value::as_str)
+            .ok_or_else(|| anyhow!("artifact missing name"))?.to_string();
+        let get_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            v.get(key).and_then(Value::as_arr)
+                .ok_or_else(|| anyhow!("artifact {name}: missing {key}"))?
+                .iter().map(TensorSpec::from_json).collect()
+        };
+        Ok(ArtifactMeta {
+            file: v.get("file").and_then(Value::as_str)
+                .ok_or_else(|| anyhow!("artifact {name}: missing file"))?
+                .to_string(),
+            kind: v.get("kind").and_then(Value::as_str)
+                .ok_or_else(|| anyhow!("artifact {name}: missing kind"))?
+                .to_string(),
+            inputs: get_specs("inputs")?,
+            outputs: get_specs("outputs")?,
+            attrs: v.get("attrs").cloned().unwrap_or(Value::Null),
+            name,
+        })
+    }
+
+    /// Integer attribute accessor (`n`, `d`, `bh`, `flops`, …).
+    pub fn attr_i64(&self, key: &str) -> Option<i64> {
+        self.attrs.get(key).and_then(Value::as_i64)
+    }
+
+    pub fn attr_f64(&self, key: &str) -> Option<f64> {
+        self.attrs.get(key).and_then(Value::as_f64)
+    }
+
+    pub fn attr_bool(&self, key: &str) -> Option<bool> {
+        self.attrs.get(key).and_then(Value::as_bool)
+    }
+
+    pub fn attr_str(&self, key: &str) -> Option<&str> {
+        self.attrs.get(key).and_then(Value::as_str)
+    }
+
+    /// Total bytes of all inputs + outputs (host-side working set).
+    pub fn io_bytes(&self) -> usize {
+        self.inputs.iter().map(TensorSpec::byte_size).sum::<usize>()
+            + self.outputs.iter().map(TensorSpec::byte_size).sum::<usize>()
+    }
+}
+
+/// The parsed manifest: artifact lookup by name, kind, and attribute query.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    by_name: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!(
+                "reading {} — run `make artifacts` first", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let root = jsonio::parse(text).context("parsing manifest.json")?;
+        let arts = root.get("artifacts").and_then(Value::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts array"))?;
+        let mut by_name = BTreeMap::new();
+        for a in arts {
+            let meta = ArtifactMeta::from_json(a)?;
+            if by_name.insert(meta.name.clone(), meta.clone()).is_some() {
+                bail!("duplicate artifact name {}", meta.name);
+            }
+        }
+        Ok(Manifest { dir, by_name })
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.by_name.get(name).ok_or_else(|| anyhow!(
+            "artifact {name:?} not in manifest ({} entries); \
+             run `make artifacts`?", self.by_name.len()))
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ArtifactMeta> {
+        self.by_name.values()
+    }
+
+    /// All artifacts of one kind, manifest order.
+    pub fn of_kind<'a>(&'a self, kind: &'a str)
+                       -> impl Iterator<Item = &'a ArtifactMeta> + 'a {
+        self.by_name.values().filter(move |a| a.kind == kind)
+    }
+
+    /// Path to an artifact's HLO text file.
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "a1", "file": "a1.hlo.txt", "kind": "mha_fwd",
+         "attrs": {"n": 256, "d": 64, "causal": true, "acc": "f32",
+                   "flops": 134217728, "mxu_utilization": 0.5},
+         "inputs": [{"name": "seed", "shape": [1], "dtype": "f32"},
+                    {"name": "q", "shape": [4, 256, 64], "dtype": "bf16"}],
+         "outputs": [{"name": "out0", "shape": [4, 256, 64], "dtype": "bf16"}]},
+        {"name": "a2", "file": "a2.hlo.txt", "kind": "encoder_fwd",
+         "attrs": {}, "inputs": [], "outputs": []}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.len(), 2);
+        let a = m.get("a1").unwrap();
+        assert_eq!(a.kind, "mha_fwd");
+        assert_eq!(a.inputs[1].shape, vec![4, 256, 64]);
+        assert_eq!(a.inputs[1].dtype, DType::Bf16);
+        assert_eq!(a.attr_i64("n"), Some(256));
+        assert_eq!(a.attr_bool("causal"), Some(true));
+        assert_eq!(a.attr_str("acc"), Some("f32"));
+        assert!(a.attr_f64("mxu_utilization").unwrap() > 0.4);
+        assert_eq!(a.attr_i64("missing"), None);
+    }
+
+    #[test]
+    fn byte_sizes() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let a = m.get("a1").unwrap();
+        assert_eq!(a.inputs[0].byte_size(), 4);
+        assert_eq!(a.inputs[1].byte_size(), 4 * 256 * 64 * 2);
+        assert_eq!(a.io_bytes(), 4 + 2 * 4 * 256 * 64 * 2);
+    }
+
+    #[test]
+    fn kind_filter() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.of_kind("mha_fwd").count(), 1);
+        assert_eq!(m.of_kind("nope").count(), 0);
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_duplicates() {
+        let dup = SAMPLE.replace("\"a2\"", "\"a1\"");
+        assert!(Manifest::parse(&dup, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let bad = SAMPLE.replace("\"bf16\"", "\"q7\"");
+        assert!(Manifest::parse(&bad, PathBuf::from("/tmp")).is_err());
+    }
+}

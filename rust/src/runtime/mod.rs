@@ -1,0 +1,15 @@
+//! PJRT runtime: manifest-driven artifact registry, host⇄device value
+//! conversion, and the execution engine.
+//!
+//! Layer boundary: everything above this module (coordinator, benches,
+//! examples) speaks `HostValue` + artifact names; everything below is the
+//! `xla` crate's PJRT C-API wrapper.  Python never appears at run time —
+//! artifacts are HLO text produced once by `make artifacts`.
+
+pub mod engine;
+pub mod host;
+pub mod manifest;
+
+pub use engine::{Engine, EngineStats};
+pub use host::HostValue;
+pub use manifest::{ArtifactMeta, DType, Manifest, TensorSpec};

@@ -1,0 +1,103 @@
+//! Software bfloat16 — the interchange dtype of every attention artifact.
+//!
+//! The paper's kernels take FP16 inputs; our TPU-style port standardises on
+//! bfloat16 (the MXU-native input type).  The PJRT boundary moves raw bf16
+//! bytes; the Rust side computes in f32 and converts at the edges with
+//! round-to-nearest-even, exactly matching XLA's `convert` semantics so
+//! host-side oracles agree bit-for-bit with device-side casts.
+
+/// Convert f32 → bf16 bits with round-to-nearest-even.
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // Preserve a quiet NaN; avoid collapsing to Inf via rounding.
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // Round to nearest even on the truncated 16 bits.
+    let round_bit = (bits >> 16) & 1;
+    ((bits.wrapping_add(0x7FFF + round_bit)) >> 16) as u16
+}
+
+/// Convert bf16 bits → f32 (exact).
+#[inline]
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Round-trip an f32 through bf16 (the precision an artifact input has).
+#[inline]
+pub fn quantize(x: f32) -> f32 {
+    bf16_to_f32(f32_to_bf16(x))
+}
+
+/// Encode an f32 slice as little-endian bf16 bytes (PJRT literal payload).
+pub fn encode(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 2);
+    for &x in xs {
+        out.extend_from_slice(&f32_to_bf16(x).to_le_bytes());
+    }
+    out
+}
+
+/// Decode little-endian bf16 bytes into f32s.
+pub fn decode(bytes: &[u8]) -> Vec<f32> {
+    assert!(bytes.len() % 2 == 0, "bf16 payload must be even-length");
+    bytes
+        .chunks_exact(2)
+        .map(|c| bf16_to_f32(u16::from_le_bytes([c[0], c[1]])))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        for x in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 256.0, -65280.0] {
+            assert_eq!(quantize(x), x, "{x} should be bf16-exact");
+        }
+    }
+
+    #[test]
+    fn rounds_to_nearest_even() {
+        // 1.0 + 2^-8 is exactly halfway between bf16(1.0) and the next
+        // representable value 1.0078125; ties-to-even keeps 1.0.
+        let half_ulp = 1.0 + 2f32.powi(-8);
+        assert_eq!(quantize(half_ulp), 1.0);
+        // Just above the midpoint must round up.
+        assert_eq!(quantize(1.0 + 2f32.powi(-8) + 2f32.powi(-12)), 1.0078125);
+    }
+
+    #[test]
+    fn specials() {
+        assert!(quantize(f32::NAN).is_nan());
+        assert_eq!(quantize(f32::INFINITY), f32::INFINITY);
+        assert_eq!(quantize(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        // Large-but-finite must not round to Inf unless it exceeds bf16 max.
+        assert!(quantize(3.38e38).is_finite());
+        // f32::MAX is beyond bf16 max + ½ulp: rounds to Inf.
+        assert_eq!(quantize(f32::MAX), f32::INFINITY);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let xs: Vec<f32> = (0..256).map(|i| (i as f32 - 128.0) * 0.37).collect();
+        let decoded = decode(&encode(&xs));
+        for (a, b) in xs.iter().zip(&decoded) {
+            assert_eq!(quantize(*a), *b);
+        }
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        // bf16 has 8 significand bits → rel err ≤ 2^-8 for normal values.
+        let mut x = 1.1e-30f32;
+        while x < 1.0e30 {
+            let q = quantize(x);
+            assert!(((q - x) / x).abs() <= 2f32.powi(-8), "x={x} q={q}");
+            x *= 3.7;
+        }
+    }
+}

@@ -1,0 +1,433 @@
+//! CPU tensor substrate: shapes, batched linear algebra, dtype conversion.
+//!
+//! This is not a deep-learning framework — it is the minimal, well-tested
+//! host-side tensor the coordinator needs for (a) the pure-Rust attention
+//! oracle/baseline in `attention/`, (b) building PJRT literal payloads, and
+//! (c) verifying artifact outputs.  Values are held in f32; `bf16` handles
+//! the device interchange precision.
+
+pub mod bf16;
+pub mod rng;
+
+pub use rng::Rng;
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Build from shape + data (length must match the shape product).
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, data.len(), "shape {shape:?} needs {n} elements, got {}",
+                   data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: Vec<usize>, v: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![v; n] }
+    }
+
+    /// Standard-normal entries from a deterministic stream.
+    pub fn randn(shape: Vec<usize>, rng: &mut Rng) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: rng.normal_vec(n) }
+    }
+
+    /// Normal entries quantised to bf16 precision (what a device artifact
+    /// actually receives — keeps host oracle and device bit-aligned).
+    pub fn randn_bf16(shape: Vec<usize>, rng: &mut Rng) -> Self {
+        let mut t = Self::randn(shape, rng);
+        for x in &mut t.data {
+            *x = bf16::quantize(*x);
+        }
+        t
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reshape (same element count).
+    pub fn reshape(mut self, shape: Vec<usize>) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, self.data.len(), "reshape {:?} -> {shape:?}", self.shape);
+        self.shape = shape;
+        self
+    }
+
+    /// Row-major linear index.
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[self.offset(idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let o = self.offset(idx);
+        self.data[o] = v;
+    }
+
+    fn offset(&self, idx: &[usize]) -> usize {
+        assert_eq!(idx.len(), self.shape.len());
+        let mut o = 0;
+        for (i, (&x, &dim)) in idx.iter().zip(&self.shape).enumerate() {
+            assert!(x < dim, "index {idx:?} out of bounds {:?} at axis {i}",
+                    self.shape);
+            o = o * dim + x;
+        }
+        o
+    }
+
+    /// Quantise every element to bf16 precision in place.
+    pub fn quantize_bf16(mut self) -> Self {
+        for x in &mut self.data {
+            *x = bf16::quantize(*x);
+        }
+        self
+    }
+
+    /// Elementwise map.
+    pub fn map(mut self, f: impl Fn(f32) -> f32) -> Self {
+        for x in &mut self.data {
+            *x = f(*x);
+        }
+        self
+    }
+
+    /// Elementwise binary op (shapes must match).
+    pub fn zip(mut self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Self {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a = f(*a, *b);
+        }
+        self
+    }
+
+    pub fn scale(self, s: f32) -> Self {
+        self.map(|x| x * s)
+    }
+
+    pub fn add(self, other: &Tensor) -> Self {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(self, other: &Tensor) -> Self {
+        self.zip(other, |a, b| a - b)
+    }
+
+    /// Max |a - b| between two same-shaped tensors.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Mean |a - b|.
+    pub fn mean_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let s: f32 = self.data.iter().zip(&other.data)
+            .map(|(a, b)| (a - b).abs()).sum();
+        s / self.data.len() as f32
+    }
+
+    /// Mean relative error |a−b| / max(|b|, eps) — the paper's §4.2.3 metric
+    /// with the reference implementation as `other`.
+    pub fn mean_rel_err(&self, other: &Tensor, eps: f32) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let s: f32 = self.data.iter().zip(&other.data)
+            .map(|(a, b)| (a - b).abs() / b.abs().max(eps)).sum();
+        s / self.data.len() as f32
+    }
+}
+
+/// Batched matmul: (b, m, k) × (b, k, n) → (b, m, n).
+///
+/// Cache-aware ikj loop order; this is the workhorse of the pure-Rust
+/// baseline so it must not be naive-ijk slow.
+pub fn batch_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (ba, m, ka) = dims3(a);
+    let (bb, kb, n) = dims3(b);
+    assert_eq!(ba, bb, "batch mismatch");
+    assert_eq!(ka, kb, "inner dim mismatch");
+    let mut out = vec![0.0f32; ba * m * n];
+    let ad = a.data();
+    let bd = b.data();
+    for bi in 0..ba {
+        let ao = bi * m * ka;
+        let bo = bi * ka * n;
+        let oo = bi * m * n;
+        for i in 0..m {
+            let arow = &ad[ao + i * ka..ao + (i + 1) * ka];
+            let orow = &mut out[oo + i * n..oo + (i + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &bd[bo + kk * n..bo + (kk + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+    Tensor::new(vec![ba, m, n], out)
+}
+
+/// Batched matmul with B transposed: (b, m, k) × (b, n, k) → (b, m, n).
+pub fn batch_matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (ba, m, ka) = dims3(a);
+    let (bb, n, kb) = dims3(b);
+    assert_eq!(ba, bb, "batch mismatch");
+    assert_eq!(ka, kb, "inner dim mismatch");
+    let mut out = vec![0.0f32; ba * m * n];
+    let ad = a.data();
+    let bd = b.data();
+    for bi in 0..ba {
+        let ao = bi * m * ka;
+        let bo = bi * n * ka;
+        let oo = bi * m * n;
+        for i in 0..m {
+            let arow = &ad[ao + i * ka..ao + (i + 1) * ka];
+            for j in 0..n {
+                let brow = &bd[bo + j * ka..bo + (j + 1) * ka];
+                let mut s = 0.0;
+                for (x, y) in arow.iter().zip(brow) {
+                    s += x * y;
+                }
+                out[oo + i * n + j] = s;
+            }
+        }
+    }
+    Tensor::new(vec![ba, m, n], out)
+}
+
+/// Batched matmul with A transposed: (b, k, m) × (b, k, n) → (b, m, n).
+pub fn batch_matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+    let (ba, ka, m) = dims3(a);
+    let (bb, kb, n) = dims3(b);
+    assert_eq!(ba, bb, "batch mismatch");
+    assert_eq!(ka, kb, "inner dim mismatch");
+    let mut out = vec![0.0f32; ba * m * n];
+    let ad = a.data();
+    let bd = b.data();
+    for bi in 0..ba {
+        let ao = bi * ka * m;
+        let bo = bi * ka * n;
+        let oo = bi * m * n;
+        for kk in 0..ka {
+            let arow = &ad[ao + kk * m..ao + (kk + 1) * m];
+            let brow = &bd[bo + kk * n..bo + (kk + 1) * n];
+            for (i, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let orow = &mut out[oo + i * n..oo + (i + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+    Tensor::new(vec![ba, m, n], out)
+}
+
+/// Row-wise softmax over the last axis of a (b, m, n) tensor, in place.
+pub fn softmax_lastdim(t: &mut Tensor) {
+    let shape = t.shape().to_vec();
+    let n = *shape.last().expect("softmax needs rank ≥ 1");
+    for row in t.data_mut().chunks_exact_mut(n) {
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for x in row.iter_mut() {
+            *x = (*x - m).exp();
+            sum += *x;
+        }
+        for x in row.iter_mut() {
+            *x /= sum;
+        }
+    }
+}
+
+fn dims3(t: &Tensor) -> (usize, usize, usize) {
+    match *t.shape() {
+        [a, b, c] => (a, b, c),
+        ref s => panic!("expected rank-3 tensor, got {s:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: &[usize], data: &[f32]) -> Tensor {
+        Tensor::new(shape.to_vec(), data.to_vec())
+    }
+
+    #[test]
+    fn construct_and_index() {
+        let x = t(&[2, 3], &[1., 2., 3., 4., 5., 6.]);
+        assert_eq!(x.at(&[0, 0]), 1.0);
+        assert_eq!(x.at(&[1, 2]), 6.0);
+        assert_eq!(x.shape(), &[2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn index_oob_panics() {
+        t(&[2, 2], &[0.; 4]).at(&[2, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "needs")]
+    fn bad_shape_panics() {
+        Tensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = t(&[1, 2, 2], &[1., 2., 3., 4.]);
+        let eye = t(&[1, 2, 2], &[1., 0., 0., 1.]);
+        assert_eq!(batch_matmul(&a, &eye), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = t(&[1, 2, 3], &[1., 2., 3., 4., 5., 6.]);
+        let b = t(&[1, 3, 2], &[7., 8., 9., 10., 11., 12.]);
+        let c = batch_matmul(&a, &b);
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_batched_independent() {
+        let mut r = Rng::new(1);
+        let a = Tensor::randn(vec![3, 4, 5], &mut r);
+        let b = Tensor::randn(vec![3, 5, 6], &mut r);
+        let c = batch_matmul(&a, &b);
+        // batch 1 alone must equal the slice-wise product
+        let a1 = t(&[1, 4, 5], &a.data()[20..40]);
+        let b1 = t(&[1, 5, 6], &b.data()[30..60]);
+        let c1 = batch_matmul(&a1, &b1);
+        assert_eq!(&c.data()[24..48], c1.data());
+    }
+
+    #[test]
+    fn nt_matches_explicit_transpose() {
+        let mut r = Rng::new(2);
+        let a = Tensor::randn(vec![2, 3, 4], &mut r);
+        let b = Tensor::randn(vec![2, 5, 4], &mut r);
+        let got = batch_matmul_nt(&a, &b);
+        // transpose b manually
+        let mut bt = Tensor::zeros(vec![2, 4, 5]);
+        for bi in 0..2 {
+            for i in 0..5 {
+                for j in 0..4 {
+                    bt.set(&[bi, j, i], b.at(&[bi, i, j]));
+                }
+            }
+        }
+        let want = batch_matmul(&a, &bt);
+        assert!(got.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn tn_matches_explicit_transpose() {
+        let mut r = Rng::new(3);
+        let a = Tensor::randn(vec![2, 4, 3], &mut r);
+        let b = Tensor::randn(vec![2, 4, 5], &mut r);
+        let got = batch_matmul_tn(&a, &b);
+        let mut at = Tensor::zeros(vec![2, 3, 4]);
+        for bi in 0..2 {
+            for i in 0..4 {
+                for j in 0..3 {
+                    at.set(&[bi, j, i], a.at(&[bi, i, j]));
+                }
+            }
+        }
+        let want = batch_matmul(&at, &b);
+        assert!(got.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut r = Rng::new(4);
+        let mut x = Tensor::randn(vec![2, 3, 8], &mut r);
+        softmax_lastdim(&mut x);
+        for row in x.data().chunks_exact(8) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(row.iter().all(|&p| p >= 0.0));
+        }
+    }
+
+    #[test]
+    fn softmax_is_shift_invariant() {
+        let mut a = t(&[1, 1, 4], &[1., 2., 3., 4.]);
+        let mut b = t(&[1, 1, 4], &[101., 102., 103., 104.]);
+        softmax_lastdim(&mut a);
+        softmax_lastdim(&mut b);
+        assert!(a.max_abs_diff(&b) < 1e-6);
+    }
+
+    #[test]
+    fn softmax_handles_extremes() {
+        let mut x = t(&[1, 1, 3], &[-1e30, 0.0, -1e30]);
+        softmax_lastdim(&mut x);
+        assert!((x.at(&[0, 0, 1]) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn error_metrics() {
+        let a = t(&[1, 4], &[1.0, 2.0, 3.0, 4.0]);
+        let b = t(&[1, 4], &[1.1, 2.0, 3.0, 4.0]);
+        assert!((a.max_abs_diff(&b) - 0.1).abs() < 1e-6);
+        assert!((a.mean_abs_diff(&b) - 0.025).abs() < 1e-6);
+        assert!(a.mean_rel_err(&b, 1e-6) > 0.0);
+    }
+
+    #[test]
+    fn randn_bf16_is_quantized() {
+        let mut r = Rng::new(5);
+        let x = Tensor::randn_bf16(vec![64], &mut r);
+        for &v in x.data() {
+            assert_eq!(v, bf16::quantize(v));
+        }
+    }
+}

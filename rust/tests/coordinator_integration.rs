@@ -1,0 +1,109 @@
+//! Integration: the full training coordinator over real artifacts.
+//!
+//! Skipped gracefully when `make artifacts` hasn't run.
+
+use sparkattention::config::TrainConfig;
+use sparkattention::coordinator::checkpoint::Checkpoint;
+use sparkattention::coordinator::Trainer;
+use sparkattention::runtime::Engine;
+
+fn artifact_dir() -> Option<String> {
+    let dir = std::env::var("SPARK_ARTIFACTS").unwrap_or_else(
+        |_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")));
+    std::path::Path::new(&dir).join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn short_training_run_reduces_loss() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let engine = Engine::new(&dir).unwrap();
+    if engine.manifest().get("train_step").is_err() {
+        eprintln!("skipping: train profile not built");
+        return;
+    }
+    let ckpt_dir = std::env::temp_dir().join("spark-train-test");
+    let cfg = TrainConfig {
+        artifact_dir: dir,
+        steps: 12,
+        seed: 3,
+        log_every: 0,
+        checkpoint_every: 10,
+        checkpoint_dir: ckpt_dir.to_string_lossy().into_owned(),
+        ..TrainConfig::default()
+    };
+    let mut trainer = Trainer::new(&engine, cfg);
+    let out = trainer.run().expect("training run");
+    assert_eq!(out.losses.len(), 12);
+    assert!(out.losses.iter().all(|l| l.is_finite()));
+    // 12 Adam steps on the tiny LM reliably cut the loss from ~ln(256).
+    assert!(out.first_loss() > 4.5,
+            "initial loss should be near ln(256)≈5.55, got {}",
+            out.first_loss());
+    assert!(out.last_loss() < out.first_loss() - 0.5,
+            "loss must decrease: {} → {}", out.first_loss(),
+            out.last_loss());
+    // checkpoint landed and round-trips
+    let ck_path = ckpt_dir.join("step000010.ckpt");
+    assert!(ck_path.exists(), "checkpoint file missing");
+    let ck = Checkpoint::load(&ck_path).expect("load checkpoint");
+    assert_eq!(ck.step, 10);
+    assert!(!ck.buffers.is_empty());
+    assert!(ck.buffers[0].0.starts_with("p/"));
+
+    // trainer metrics recorded each step
+    assert_eq!(trainer.metrics.counter("steps"), 12);
+    assert!(trainer.metrics.series("train_step").unwrap().count() == 12);
+}
+
+#[test]
+fn training_is_deterministic_per_seed() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let engine = Engine::new(&dir).unwrap();
+    if engine.manifest().get("train_step").is_err() {
+        eprintln!("skipping: train profile not built");
+        return;
+    }
+    let run = |seed: u64| {
+        let cfg = TrainConfig {
+            artifact_dir: dir.clone(),
+            steps: 4,
+            seed,
+            log_every: 0,
+            ..TrainConfig::default()
+        };
+        Trainer::new(&engine, cfg).run().unwrap().losses
+    };
+    let a = run(11);
+    let b = run(11);
+    let c = run(12);
+    assert_eq!(a, b, "same seed → identical loss trajectory");
+    assert_ne!(a, c, "different seed → different trajectory");
+}
+
+#[test]
+fn lm_init_output_matches_train_step_inputs() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let engine = Engine::new(&dir).unwrap();
+    let (Ok(init), Ok(step)) = (engine.manifest().get("lm_init"),
+                                engine.manifest().get("train_step")) else {
+        eprintln!("skipping: train profile not built");
+        return;
+    };
+    // contract: init outputs = the state prefix of train_step's inputs
+    assert_eq!(init.outputs.len() + 3, step.inputs.len());
+    for (o, i) in init.outputs.iter().zip(&step.inputs) {
+        assert_eq!(o.shape, i.shape,
+                   "state buffer shape mismatch: {} vs {}", o.name, i.name);
+    }
+    // and train_step outputs = same state + loss
+    assert_eq!(step.outputs.len(), init.outputs.len() + 1);
+}

@@ -1,0 +1,114 @@
+//! Integration: §4.2.3 accuracy protocol + Fig 12 artifact consistency.
+
+use sparkattention::coordinator::{accuracy_report, harness::HarnessOptions,
+                                  fig12_e2e};
+use sparkattention::coordinator::inputs::synth_inputs;
+use sparkattention::runtime::Engine;
+
+fn engine() -> Option<Engine> {
+    let dir = std::env::var("SPARK_ARTIFACTS").unwrap_or_else(
+        |_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")));
+    std::path::Path::new(&dir).join("manifest.json").exists()
+        .then(|| Engine::new(dir).expect("engine"))
+}
+
+#[test]
+fn accuracy_within_paper_band() {
+    let Some(eng) = engine() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let rows = accuracy_report(&eng).expect("accuracy report");
+    assert!(!rows.is_empty(), "accuracy profile artifacts missing");
+    for r in &rows {
+        // The paper reports ≤ 0.76% average relative error for its least
+        // precise variant; bf16 has less mantissa than fp16, so grant a
+        // proportionally wider band — but catastrophic error means the
+        // kernel is wrong.
+        assert!(r.mean_rel_err < 0.05,
+                "{}: mean rel err {:.4}% too high", r.name,
+                r.mean_rel_err * 100.0);
+        assert!(r.mean_abs_err < 0.02,
+                "{}: mean abs err {} too high", r.name, r.mean_abs_err);
+    }
+    // FP32-ACC must beat BF16-ACC on average (the paper's §4.2.1 claim).
+    let avg = |needle: &str| {
+        let v: Vec<f64> = rows.iter()
+            .filter(|r| r.name.contains(needle) && !r.name.contains('/'))
+            .map(|r| r.mean_rel_err).collect();
+        v.iter().sum::<f64>() / v.len().max(1) as f64
+    };
+    let f32acc = avg("fused_f32");
+    let bf16acc = avg("fused_bf16");
+    assert!(f32acc <= bf16acc * 1.5 + 1e-6,
+            "f32-ACC ({f32acc}) should not be much worse than bf16-ACC \
+             ({bf16acc})");
+}
+
+#[test]
+fn encoder_variants_agree_numerically() {
+    let Some(eng) = engine() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    // same (n, d_model, heads) triple across impls must agree closely —
+    // they compute the same function through different fusion scopes.
+    let metas: Vec<_> = eng.manifest().of_kind("encoder_fwd")
+        .filter(|m| m.attr_i64("n") == Some(128)
+                && m.attr_i64("num_heads") == Some(8)
+                && m.attr_f64("dropout") == Some(0.0))
+        .cloned().collect();
+    if metas.len() < 2 {
+        eprintln!("skipping: e2e profile not built");
+        return;
+    }
+    let mut outputs = Vec::new();
+    for meta in &metas {
+        // synth weights are N(0,1); scale to Xavier-like magnitude so the
+        // bf16 FFN stays in a numerically sane regime (like trained nets).
+        let mut ins = synth_inputs(meta, 7).unwrap();
+        for (hv, spec) in ins.iter_mut().zip(&meta.inputs).skip(2) {
+            if let sparkattention::runtime::HostValue::F32 { data, .. } = hv {
+                let s = 1.0 / (spec.shape.last().copied().unwrap_or(1) as f32)
+                    .sqrt();
+                for x in data.iter_mut() {
+                    *x = sparkattention::tensor::bf16::quantize(*x * s);
+                }
+            }
+        }
+        let out = eng.execute(&meta.name, &ins).unwrap();
+        outputs.push((meta.attr_str("impl").unwrap_or("?").to_string(),
+                      out[0].as_tensor().unwrap()));
+    }
+    let (base_name, base) = &outputs[0];
+    let scale = base.data().iter().fold(0f32, |a, &x| a.max(x.abs()))
+        .max(1e-6);
+    for (name, t) in &outputs[1..] {
+        let err = base.max_abs_diff(t) / scale;
+        assert!(err < 0.05,
+                "encoder {base_name} vs {name}: rel err {err} (scale {scale})");
+    }
+}
+
+#[test]
+fn fig12_reports_all_variants() {
+    let Some(eng) = engine() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    if eng.manifest().of_kind("encoder_fwd").next().is_none() {
+        eprintln!("skipping: e2e profile not built");
+        return;
+    }
+    let opts = HarnessOptions {
+        bench: sparkattention::bench::Options { warmup_iters: 0, iters: 1 },
+        mem_budget: 8 << 30,
+    };
+    let report = fig12_e2e(&eng, opts).expect("fig12");
+    let variants: std::collections::BTreeSet<&str> =
+        report.rows.iter().map(|r| r.variant.as_str()).collect();
+    assert!(variants.contains("pytorch_jit"));
+    assert!(variants.contains("sparkattention"));
+    assert!(variants.contains("fastertransformer*"));
+    assert!(report.rows.iter().all(|r| r.status == "ok" || r.status == "oom"));
+}

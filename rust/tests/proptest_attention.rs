@@ -1,0 +1,248 @@
+//! Property tests: online-softmax algebra, I/O model, and coordinator
+//! invariants over randomized inputs (seeded; see `proptest` module docs).
+
+use sparkattention::attention::{self, AttnParams};
+use sparkattention::data::Batcher;
+use sparkattention::iomodel::{self, MhaShape};
+use sparkattention::proptest::{check, default_cases, Gen, OneOf, USize};
+use sparkattention::tensor::{bf16, Rng, Tensor};
+
+/// Random MHA case: shape + blocks + flags.
+#[derive(Debug, Clone)]
+struct MhaCase {
+    bh: usize,
+    n: usize,
+    d: usize,
+    block_q: usize,
+    block_k: usize,
+    causal: bool,
+    seed: u64,
+}
+
+struct MhaGen;
+
+impl Gen for MhaGen {
+    type Value = MhaCase;
+
+    fn generate(&self, rng: &mut Rng) -> MhaCase {
+        let n_choices = OneOf(vec![4usize, 8, 16, 32, 64]);
+        let n = n_choices.generate(rng);
+        let divisors: Vec<usize> =
+            (1..=n).filter(|b| n % b == 0).collect();
+        let blocks = OneOf(divisors);
+        MhaCase {
+            bh: USize { lo: 1, hi: 3 }.generate(rng),
+            n,
+            d: OneOf(vec![2usize, 4, 8, 16]).generate(rng),
+            block_q: blocks.generate(rng),
+            block_k: blocks.generate(rng),
+            causal: rng.uniform() < 0.5,
+            seed: rng.next_u64(),
+        }
+    }
+}
+
+fn qkv(c: &MhaCase) -> (Tensor, Tensor, Tensor) {
+    let mut r = Rng::new(c.seed);
+    (Tensor::randn(vec![c.bh, c.n, c.d], &mut r),
+     Tensor::randn(vec![c.bh, c.n, c.d], &mut r),
+     Tensor::randn(vec![c.bh, c.n, c.d], &mut r))
+}
+
+/// The paper's Equation-3 claim: block-streamed online softmax computes the
+/// same attention as the monolithic softmax, for *any* block partition.
+#[test]
+fn streaming_equals_oracle_for_any_blocks() {
+    check("streaming=oracle", &MhaGen, default_cases(), |c| {
+        let (q, k, v) = qkv(&c);
+        let p = AttnParams::new(c.d, c.causal);
+        let a = attention::mha_forward(&q, &k, &v, p);
+        let b = attention::mha_forward_streaming(&q, &k, &v, p,
+                                                 c.block_q, c.block_k);
+        let err = a.output.max_abs_diff(&b.output);
+        if err > 1e-3 {
+            return Err(format!("output err {err} for {c:?}"));
+        }
+        let lse_err = a.lse.max_abs_diff(&b.lse);
+        if lse_err > 1e-3 {
+            return Err(format!("lse err {lse_err} for {c:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// Attention output rows are convex combinations of V rows (no dropout):
+/// each output coordinate is bounded by the min/max of that V column.
+#[test]
+fn output_within_v_hull() {
+    check("output-in-hull", &MhaGen, default_cases(), |c| {
+        let (q, k, v) = qkv(&c);
+        let p = AttnParams::new(c.d, c.causal);
+        let o = attention::mha_forward(&q, &k, &v, p).output;
+        for b in 0..c.bh {
+            for col in 0..c.d {
+                let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+                for i in 0..c.n {
+                    let x = v.at(&[b, i, col]);
+                    lo = lo.min(x);
+                    hi = hi.max(x);
+                }
+                for i in 0..c.n {
+                    let x = o.at(&[b, i, col]);
+                    if x < lo - 1e-4 || x > hi + 1e-4 {
+                        return Err(format!(
+                            "o[{b},{i},{col}]={x} outside [{lo},{hi}]"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Causal masking: output row i must not depend on K/V rows > i.
+#[test]
+fn causal_ignores_future() {
+    check("causal-no-future", &MhaGen, default_cases() / 2, |mut c| {
+        c.causal = true;
+        let (q, k, v) = qkv(&c);
+        let p = AttnParams::new(c.d, true);
+        let o1 = attention::mha_forward(&q, &k, &v, p).output;
+        // perturb the last K/V row; everything before must be unchanged
+        let mut k2 = k.clone();
+        let mut v2 = v.clone();
+        for col in 0..c.d {
+            for b in 0..c.bh {
+                k2.set(&[b, c.n - 1, col], 9.0);
+                v2.set(&[b, c.n - 1, col], -9.0);
+            }
+        }
+        let o2 = attention::mha_forward(&q, &k2, &v2, p).output;
+        for b in 0..c.bh {
+            for i in 0..c.n - 1 {
+                for col in 0..c.d {
+                    let d = (o1.at(&[b, i, col]) - o2.at(&[b, i, col])).abs();
+                    if d > 1e-5 {
+                        return Err(format!(
+                            "row {i} changed by future perturbation ({d})"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Gradient structure: if dO = 0 then all grads are 0.
+#[test]
+fn zero_cotangent_zero_grads() {
+    check("zero-dO", &MhaGen, default_cases() / 2, |c| {
+        let (q, k, v) = qkv(&c);
+        let p = AttnParams::new(c.d, c.causal);
+        let dout = Tensor::zeros(vec![c.bh, c.n, c.d]);
+        let g = attention::mha_backward(&q, &k, &v, &dout, p);
+        for (nm, t) in [("dq", &g.dq), ("dk", &g.dk), ("dv", &g.dv)] {
+            if t.data().iter().any(|&x| x != 0.0) {
+                return Err(format!("{nm} nonzero under zero cotangent"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// I/O model invariants: fused traffic ≤ unfused for every shape, and the
+/// simulator agrees with the closed form.
+#[test]
+fn io_model_invariants() {
+    struct ShapeGen;
+    impl Gen for ShapeGen {
+        type Value = (MhaShape, usize);
+
+        fn generate(&self, rng: &mut Rng) -> (MhaShape, usize) {
+            let n = OneOf(vec![128usize, 256, 512, 1024]).generate(rng);
+            let bq = OneOf(vec![32usize, 64, 128]).generate(rng);
+            (MhaShape::new(USize { lo: 1, hi: 32 }.generate(rng), n,
+                           OneOf(vec![32usize, 64, 128]).generate(rng)), bq)
+        }
+    }
+    check("io-invariants", &ShapeGen, default_cases(), |(s, bq)| {
+        let u = iomodel::analytic_unfused_fwd(s);
+        let f = iomodel::analytic_fused_fwd(s);
+        if f.total_bytes() >= u.total_bytes() {
+            return Err(format!("fused ≥ unfused at {s:?}"));
+        }
+        let (sim, _) = iomodel::simulate_fused_fwd(s, bq, bq, 16 << 20);
+        let ana = iomodel::analytic_fused_fwd_streamed(s, bq);
+        if sim.read_bytes != ana.read_bytes
+            || sim.write_bytes != ana.write_bytes {
+            return Err(format!(
+                "simulator {sim:?} != analytic {ana:?} at {s:?} bq={bq}"));
+        }
+        Ok(())
+    });
+}
+
+/// bf16 quantisation is idempotent and monotone (order-preserving).
+#[test]
+fn bf16_quantize_properties() {
+    struct VecGen;
+    impl Gen for VecGen {
+        type Value = Vec<f32>;
+
+        fn generate(&self, rng: &mut Rng) -> Vec<f32> {
+            (0..64).map(|_| (rng.normal() * 100.0)).collect()
+        }
+    }
+    check("bf16-props", &VecGen, default_cases(), |xs| {
+        for &x in &xs {
+            let q = bf16::quantize(x);
+            if bf16::quantize(q) != q {
+                return Err(format!("not idempotent at {x}"));
+            }
+        }
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let qs: Vec<f32> = sorted.iter().map(|&x| bf16::quantize(x)).collect();
+        if qs.windows(2).any(|w| w[0] > w[1]) {
+            return Err("quantisation broke ordering".into());
+        }
+        Ok(())
+    });
+}
+
+/// Batcher invariants: windows always in-range, contiguous, full coverage
+/// of batch shape — the coordinator's data-routing contract.
+#[test]
+fn batcher_invariants() {
+    struct BatchGen;
+    impl Gen for BatchGen {
+        type Value = (usize, usize, usize, u64);
+
+        fn generate(&self, rng: &mut Rng) -> (usize, usize, usize, u64) {
+            let seq = OneOf(vec![4usize, 8, 16]).generate(rng);
+            let batch = USize { lo: 1, hi: 4 }.generate(rng);
+            let tokens = (seq + 1) * batch * (2 + rng.below(8));
+            (tokens, batch, seq, rng.next_u64())
+        }
+    }
+    check("batcher-invariants", &BatchGen, default_cases(),
+          |(tokens, batch, seq, seed)| {
+        let data: Vec<i32> = (0..tokens as i32).collect();
+        let mut b = Batcher::new(data, batch, seq, seed);
+        for _ in 0..5 {
+            let blk = b.next_batch();
+            if blk.len() != batch * (seq + 1) {
+                return Err(format!("bad block len {}", blk.len()));
+            }
+            for row in blk.chunks_exact(seq + 1) {
+                if row.windows(2).any(|w| w[1] != w[0] + 1) {
+                    return Err("window not contiguous".into());
+                }
+                if row[0] < 0 || row[seq] as usize >= tokens {
+                    return Err("window out of range".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,156 @@
+//! Integration: load AOT artifacts and execute them through PJRT.
+//!
+//! Requires `make artifacts` (or at least the accuracy profile).  Tests are
+//! skipped gracefully when the artifact directory is absent so `cargo test`
+//! stays green on a fresh checkout.
+
+use sparkattention::attention;
+use sparkattention::runtime::{Engine, HostValue};
+use sparkattention::tensor::{Rng, Tensor};
+
+fn artifact_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(
+        std::env::var("SPARK_ARTIFACTS").unwrap_or_else(|_| {
+            format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+        }));
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn engine() -> Option<Engine> {
+    artifact_dir().map(|d| Engine::new(d).expect("engine"))
+}
+
+#[test]
+fn fused_fwd_matches_rust_oracle() {
+    let Some(eng) = engine() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let name = "mha_fwd_fused_f32_d64_n256_bh2_c0_p0";
+    let meta = eng.manifest().get(name).expect("accuracy artifact").clone();
+    let (bh, n, d) = (2usize, 256usize, 64usize);
+    let mut rng = Rng::new(42);
+    let q = Tensor::randn_bf16(vec![bh, n, d], &mut rng);
+    let k = Tensor::randn_bf16(vec![bh, n, d], &mut rng);
+    let v = Tensor::randn_bf16(vec![bh, n, d], &mut rng);
+    let inputs = vec![
+        HostValue::scalar_f32(0.0),
+        HostValue::from_tensor(&q),
+        HostValue::from_tensor(&k),
+        HostValue::from_tensor(&v),
+    ];
+    let out = eng.execute(name, &inputs).expect("execute");
+    assert_eq!(out.len(), meta.outputs.len());
+    let o_dev = out[0].as_tensor().unwrap();
+
+    let o_ref = attention::mha_forward(&q, &k, &v, attention::AttnParams {
+        causal: false,
+        scale: 1.0 / (d as f32).sqrt(),
+    }).output;
+    let err = o_dev.max_abs_diff(&o_ref);
+    assert!(err < 0.05, "device vs oracle max err {err}");
+}
+
+#[test]
+fn fused_fwd_causal_matches_rust_oracle() {
+    let Some(eng) = engine() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let name = "mha_fwd_fused_f32_d64_n256_bh2_c1_p0";
+    let (bh, n, d) = (2usize, 256usize, 64usize);
+    let mut rng = Rng::new(7);
+    let q = Tensor::randn_bf16(vec![bh, n, d], &mut rng);
+    let k = Tensor::randn_bf16(vec![bh, n, d], &mut rng);
+    let v = Tensor::randn_bf16(vec![bh, n, d], &mut rng);
+    let inputs = vec![
+        HostValue::scalar_f32(0.0),
+        HostValue::from_tensor(&q),
+        HostValue::from_tensor(&k),
+        HostValue::from_tensor(&v),
+    ];
+    let out = eng.execute(name, &inputs).expect("execute");
+    let o_dev = out[0].as_tensor().unwrap();
+    let o_ref = attention::mha_forward(&q, &k, &v, attention::AttnParams {
+        causal: true,
+        scale: 1.0 / (d as f32).sqrt(),
+    }).output;
+    let err = o_dev.max_abs_diff(&o_ref);
+    assert!(err < 0.05, "causal device vs oracle max err {err}");
+}
+
+#[test]
+fn fused_bwd_matches_rust_oracle() {
+    let Some(eng) = engine() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let fwd = "mha_fwd_fused_f32_d64_n256_bh2_c0_p0";
+    let bwd = "mha_bwd_fused_f32_d64_n256_bh2_c0_p0";
+    let (bh, n, d) = (2usize, 256usize, 64usize);
+    let mut rng = Rng::new(11);
+    let q = Tensor::randn_bf16(vec![bh, n, d], &mut rng);
+    let k = Tensor::randn_bf16(vec![bh, n, d], &mut rng);
+    let v = Tensor::randn_bf16(vec![bh, n, d], &mut rng);
+    let dout = Tensor::randn_bf16(vec![bh, n, d], &mut rng);
+    let seed = HostValue::scalar_f32(0.0);
+
+    let f = eng.execute(fwd, &[
+        seed.clone(), HostValue::from_tensor(&q),
+        HostValue::from_tensor(&k), HostValue::from_tensor(&v),
+    ]).expect("fwd");
+    let (o, lse) = (&f[0], &f[1]);
+
+    let b = eng.execute(bwd, &[
+        seed, HostValue::from_tensor(&q), HostValue::from_tensor(&k),
+        HostValue::from_tensor(&v), o.clone(), lse.clone(),
+        HostValue::from_tensor(&dout),
+    ]).expect("bwd");
+    let params = attention::AttnParams { causal: false,
+                                         scale: 1.0 / (d as f32).sqrt() };
+    let grads = attention::mha_backward(&q, &k, &v, &dout, params);
+    for (dev, oracle, nm) in [(&b[0], &grads.dq, "dq"),
+                              (&b[1], &grads.dk, "dk"),
+                              (&b[2], &grads.dv, "dv")] {
+        let err = dev.as_tensor().unwrap().max_abs_diff(oracle);
+        assert!(err < 0.08, "{nm} device vs oracle max err {err}");
+    }
+}
+
+#[test]
+fn unfused_and_fused_agree() {
+    let Some(eng) = engine() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let fused = "mha_fwd_fused_f32_d64_n256_bh2_c1_p0";
+    let unfused = "mha_fwd_unfused_d64_n256_bh2_c1_p0";
+    let (bh, n, d) = (2usize, 256usize, 64usize);
+    let mut rng = Rng::new(13);
+    let q = Tensor::randn_bf16(vec![bh, n, d], &mut rng);
+    let k = Tensor::randn_bf16(vec![bh, n, d], &mut rng);
+    let v = Tensor::randn_bf16(vec![bh, n, d], &mut rng);
+    let inputs = vec![
+        HostValue::scalar_f32(0.0),
+        HostValue::from_tensor(&q),
+        HostValue::from_tensor(&k),
+        HostValue::from_tensor(&v),
+    ];
+    let of = eng.execute(fused, &inputs).unwrap()[0].as_tensor().unwrap();
+    let ou = eng.execute(unfused, &inputs).unwrap()[0].as_tensor().unwrap();
+    let err = of.max_abs_diff(&ou);
+    assert!(err < 0.05, "fused vs unfused max err {err}");
+}
+
+#[test]
+fn engine_caches_compilations() {
+    let Some(eng) = engine() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let name = "mha_fwd_fused_f32_d64_n256_bh2_c0_p0";
+    eng.load(name).unwrap();
+    let c1 = eng.stats().compiles;
+    eng.load(name).unwrap();
+    assert_eq!(eng.stats().compiles, c1, "second load must hit the cache");
+}
