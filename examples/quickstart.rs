@@ -8,6 +8,7 @@
 
 use anyhow::{Context, Result};
 use sparkattention::attention::{self, AttnParams};
+use sparkattention::exec::Scalar;
 use sparkattention::iomodel::{self, MhaShape};
 use sparkattention::runtime::{Engine, HostValue};
 use sparkattention::tensor::{Rng, Tensor};
@@ -37,7 +38,7 @@ fn main() -> Result<()> {
     let o_dev = fwd[0].as_tensor()?;
 
     let oracle = attention::mha_forward(&q, &k, &v,
-                                        AttnParams::new(d, false));
+                                        AttnParams::new(d, false), &Scalar);
     println!("   device vs oracle: max |Δ| = {:.5}  (bf16 regime)\n",
              o_dev.max_abs_diff(&oracle.output));
 
@@ -50,8 +51,8 @@ fn main() -> Result<()> {
         HostValue::from_tensor(&v), fwd[0].clone(), fwd[1].clone(),
         HostValue::from_tensor(&dout),
     ])?;
-    let g_oracle = attention::mha_backward(&q, &k, &v, &dout,
-                                           AttnParams::new(d, false));
+    let g_oracle = attention::mha_backward(
+        &q, &k, &v, &dout, AttnParams::new(d, false), &Scalar);
     for (hv, (oracle, nm)) in grads.iter().zip([
         (&g_oracle.dq, "dq"), (&g_oracle.dk, "dk"), (&g_oracle.dv, "dv"),
     ]) {

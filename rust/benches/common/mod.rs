@@ -5,13 +5,20 @@
 //! * `SPARK_ARTIFACTS`      — artifact directory (default `artifacts/`)
 //! * `SPARK_BENCH_ITERS`    — measured iterations (default 3)
 //! * `SPARK_BENCH_WARMUP`   — warmup iterations (default 1)
-//! * `SPARK_BENCH_JSON_DIR` — if set, JSON reports are written there
+//! * `SPARK_BENCH_JSON_DIR` — JSON report directory (default
+//!   `bench-results/`, always written so CI can upload it)
+//! * `SPARK_EXEC_BACKEND`   — host backend: `scalar` | `blocked`
+//! * `SPARK_EXEC_THREADS`   — host worker threads (default 8; 0 = auto)
+//! * `SPARK_HOST_NS`        — host-path sequence lengths (default 256,512)
+//! * `SPARK_HOST_BH`        — host-path batch × heads (default 8)
+//! * `SPARK_HOST_D`         — host-path head dim (default 64)
 
 // Each bench binary uses a subset of these helpers.
 #![allow(dead_code)]
 
 use sparkattention::bench::{Options, Report};
 use sparkattention::coordinator::harness::HarnessOptions;
+use sparkattention::exec::{BackendKind, ExecOptions};
 use sparkattention::runtime::Engine;
 
 pub fn engine_or_skip() -> Option<Engine> {
@@ -24,20 +31,49 @@ pub fn engine_or_skip() -> Option<Engine> {
     Some(Engine::new(dir).expect("engine"))
 }
 
+fn envnum(k: &str, d: usize) -> usize {
+    std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+/// Host execution backend selection from the environment.  The default is
+/// the blocked backend at 8 threads — the configuration the recorded
+/// speedup numbers refer to.
+pub fn exec_options() -> ExecOptions {
+    let kind = match std::env::var("SPARK_EXEC_BACKEND").ok().as_deref() {
+        Some(name) => BackendKind::parse(name).expect("SPARK_EXEC_BACKEND"),
+        None => BackendKind::Blocked,
+    };
+    ExecOptions { kind, threads: envnum("SPARK_EXEC_THREADS", 8) }
+}
+
 pub fn harness_options() -> HarnessOptions {
-    let envnum = |k: &str, d: usize| std::env::var(k).ok()
-        .and_then(|v| v.parse().ok()).unwrap_or(d);
     HarnessOptions {
         bench: Options {
             warmup_iters: envnum("SPARK_BENCH_WARMUP", 1),
             iters: envnum("SPARK_BENCH_ITERS", 3),
         },
         mem_budget: envnum("SPARK_BENCH_MEM_GB", 8) << 30,
+        exec: exec_options(),
     }
 }
 
+/// Host-path sweep shape: (sequence lengths, bh, d).
+pub fn host_shape() -> (Vec<usize>, usize, usize) {
+    let ns = std::env::var("SPARK_HOST_NS")
+        .unwrap_or_else(|_| "256,512".into())
+        .split(',')
+        .map(|s| s.trim().parse().expect("SPARK_HOST_NS"))
+        .collect();
+    (ns, envnum("SPARK_HOST_BH", 8), envnum("SPARK_HOST_D", 64))
+}
+
+/// Print the table and write the JSON report (always — CI uploads the
+/// JSON directory as its bench artifact).
 pub fn emit(report: &Report, name: &str) {
-    let json = std::env::var("SPARK_BENCH_JSON_DIR").ok()
-        .map(|d| format!("{d}/{name}.json"));
-    print!("{}", report.emit(json.as_deref()).expect("emit"));
+    let dir = std::env::var("SPARK_BENCH_JSON_DIR")
+        .unwrap_or_else(|_| "bench-results".into());
+    std::fs::create_dir_all(&dir).expect("bench JSON dir");
+    let json = format!("{dir}/{name}.json");
+    print!("{}", report.emit(Some(&json)).expect("emit"));
+    eprintln!("json → {json}");
 }

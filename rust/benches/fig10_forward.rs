@@ -1,18 +1,43 @@
 //! `cargo bench --bench fig10_forward` — regenerates Fig 10 (E1):
 //! MHA-Forward across sequence lengths, head dims, causal settings, and
-//! accumulator variants, measured on the CPU PJRT backend, followed by the
-//! V100 projection at paper scale.
+//! accumulator variants, followed by the V100 projection at paper scale.
+//!
+//! Three sections, most portable first:
+//!
+//! 1. **Host backend sweep** (always runs, no artifacts needed): the
+//!    pure-Rust attention forward under the `scalar` reference backend vs
+//!    the parallel `blocked` backend — the host-path speedup this repo's
+//!    execution layer is accountable for.  JSON → `fig10_host.json`.
+//! 2. **Measured artifact sweep** (needs `make artifacts`).
+//! 3. **V100 projection** at paper scale.
 //!
 //! Shape (who wins, how the gap scales) is measured; magnitude at paper
 //! scale comes from the projection.  See EXPERIMENTS.md §E1.
 
 mod common;
 
-use sparkattention::coordinator::{fig10_forward, projected_fig10};
+use sparkattention::coordinator::{fig10_forward, host_backend_report,
+                                  projected_fig10};
 use sparkattention::perfmodel::V100;
 
 fn main() {
     sparkattention::logging::init();
+
+    // --- host backend sweep (the execution-layer figure) ----------------
+    let (ns, bh, d) = common::host_shape();
+    let opts = common::harness_options();
+    let host = host_backend_report(&ns, bh, d, false, opts)
+        .expect("host backend report");
+    common::emit(&host, "fig10_host");
+    let blocked = opts.exec.build().name();
+    if blocked != "scalar" {
+        if let Some((mean, max)) = host.speedup_summary(&blocked, "scalar") {
+            println!("host speedup {blocked} vs scalar: avg {mean:.2}× \
+                      (max {max:.2}×)");
+        }
+    }
+
+    // --- measured artifact sweep ----------------------------------------
     if let Some(engine) = common::engine_or_skip() {
         let report = fig10_forward(&engine, common::harness_options())
             .expect("fig10 harness");
@@ -25,6 +50,8 @@ fn main() {
             }
         }
     }
+
+    // --- V100 projection --------------------------------------------------
     let proj = projected_fig10(&V100, false);
     common::emit(&proj, "fig10_projected");
     if let Some((mean, max)) =

@@ -1,15 +1,35 @@
 //! `cargo bench --bench fig11_backward` — regenerates Fig 11 (E2):
 //! MHA-Backward with recomputation vs the staged PyTorch-style backward
 //! (reported as t(fwd+bwd) − t(fwd)), plus the V100 projection.
+//!
+//! Opens with the host backend sweep of the block-streamed backward
+//! (`scalar` vs `blocked` execution; always runs, no artifacts needed).
 //! See EXPERIMENTS.md §E2.
 
 mod common;
 
-use sparkattention::coordinator::{fig11_backward, projected_fig10};
+use sparkattention::coordinator::{fig11_backward, host_backend_report,
+                                  projected_fig10};
 use sparkattention::perfmodel::V100;
 
 fn main() {
     sparkattention::logging::init();
+
+    // --- host backend sweep: streamed backward ---------------------------
+    let (ns, bh, d) = common::host_shape();
+    let opts = common::harness_options();
+    let host = host_backend_report(&ns, bh, d, true, opts)
+        .expect("host backward report");
+    common::emit(&host, "fig11_host");
+    let blocked = opts.exec.build().name();
+    if blocked != "scalar" {
+        if let Some((mean, max)) = host.speedup_summary(&blocked, "scalar") {
+            println!("host backward speedup {blocked} vs scalar: avg \
+                      {mean:.2}× (max {max:.2}×)");
+        }
+    }
+
+    // --- measured artifact sweep ----------------------------------------
     if let Some(engine) = common::engine_or_skip() {
         let report = fig11_backward(&engine, common::harness_options())
             .expect("fig11 harness");
@@ -19,6 +39,8 @@ fn main() {
             println!("measured speedup: avg {mean:.2}× (max {max:.2}×)");
         }
     }
+
+    // --- V100 projection --------------------------------------------------
     let proj = projected_fig10(&V100, true);
     common::emit(&proj, "fig11_projected");
     if let Some((mean, max)) =

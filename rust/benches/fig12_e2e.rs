@@ -1,11 +1,14 @@
 //! `cargo bench --bench fig12_e2e` — regenerates Fig 12 (E4): single
 //! encoder-layer forward latency across fusion scopes (PyTorch-JIT analog,
 //! SparkAttention, FasterTransformer analog), with OOM cells from the
-//! memory budget.  See EXPERIMENTS.md §E4.
+//! memory budget.  Opens with the projection and a host-latency row for
+//! the attention sub-block (scalar vs blocked execution), so the binary
+//! reports something useful without artifacts.  See EXPERIMENTS.md §E4.
 
 mod common;
 
-use sparkattention::coordinator::{fig12_e2e, projected_fig12};
+use sparkattention::coordinator::{fig12_e2e, host_backend_report,
+                                  projected_fig12};
 use sparkattention::perfmodel::V100;
 
 fn main() {
@@ -17,6 +20,14 @@ fn main() {
         println!("projected V100 e2e speedup: avg {mean:.2}× (max {max:.2}×)  \
                   [paper: avg 1.80× (max 2.46×)]");
     }
+
+    // host attention-sublayer latency (the e2e figure's hot block)
+    let (ns, bh, d) = common::host_shape();
+    let host = host_backend_report(&ns, bh, d, false,
+                                   common::harness_options())
+        .expect("host latency report");
+    common::emit(&host, "fig12_host_attention");
+
     let Some(engine) = common::engine_or_skip() else { return };
     let report = fig12_e2e(&engine, common::harness_options())
         .expect("fig12 harness");

@@ -1,11 +1,18 @@
 //! `cargo bench --bench io_model` — regenerates the §2.3 / Table-1-adjacent
 //! I/O analysis (E5): HBM traffic per schedule from both the closed-form
 //! model and the schedule simulator, plus the V100 roofline projections
-//! that turn traffic into the paper's headline speedups.
+//! that turn traffic into the paper's headline speedups.  Closes with the
+//! *achieved* host GEMM throughput per exec backend, grounding the
+//! roofline discussion in a measured compute ceiling.
 
+mod common;
+
+use sparkattention::bench::measure_wallclock;
 use sparkattention::coordinator::io_report;
+use sparkattention::exec::{Backend, Scalar};
 use sparkattention::iomodel::{self, MhaShape};
 use sparkattention::perfmodel::{self, V100};
+use sparkattention::tensor::{Rng, Tensor};
 
 fn main() {
     sparkattention::logging::init();
@@ -59,5 +66,25 @@ fn main() {
             println!("{n:>7} {:>10} {:>10.2}     OOM→∞", "OOM",
                      f.seconds * 1e3);
         }
+    }
+
+    // Achieved host GEMM throughput per backend: the measured compute
+    // ceiling the host-path figures (fig10_host etc.) run against.
+    let opts = common::harness_options();
+    let parallel = opts.exec.build();
+    let (bh, n, d) = (8usize, 512usize, 64usize);
+    let mut rng = Rng::new(0x10F);
+    let a = Tensor::randn(vec![bh, n, d], &mut rng);
+    let b = Tensor::randn(vec![bh, n, d], &mut rng);
+    let flops = 2.0 * (bh * n * n * d) as f64;
+    println!("\nachieved host QKᵀ throughput ({bh}×{n}×{d}):");
+    let backends: [&dyn Backend; 2] = [&Scalar, parallel.as_ref()];
+    for be in backends {
+        let time = measure_wallclock(opts.bench, || {
+            be.batch_matmul_nt(&a, &b);
+            Ok(())
+        }).expect("gemm measure");
+        println!("  {:<12} {:>8.2} GFLOP/s", be.name(),
+                 flops / time.mean() / 1e9);
     }
 }

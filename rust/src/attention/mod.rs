@@ -1,18 +1,25 @@
 //! Pure-Rust multi-head attention: oracle + streaming (online-softmax)
-//! implementation.
+//! implementation, executed through an `exec::Backend`.
 //!
 //! Two roles:
 //!
 //! 1. **Oracle** — `mha_forward` / `mha_backward` materialise the full N×N
 //!    score matrix in f32 (Equation 1 / Equation 4 of the paper) and are the
 //!    ground truth the device artifacts are verified against in the
-//!    integration tests (`rust/tests/`).
+//!    integration tests (`rust/tests/`).  Run them on `exec::Scalar` when
+//!    they serve as ground truth.
 //! 2. **Algorithm witness** — `mha_forward_streaming` re-implements the
 //!    fused kernel's *dataflow* (block-streamed K/V, running (m, l)
 //!    statistics, accumulator rescaling — Equation 3) on the host.  The
 //!    property tests in `rust/tests/proptest_attention.rs` check it against
 //!    the oracle over randomized shapes/blocks, which pins down the online
 //!    softmax algebra independently of JAX.
+//!
+//! Every entry point takes a `&dyn exec::Backend`.  The matmuls route
+//! through the backend, and the streaming paths fan their `(bh, q-block)`
+//! tiles out over the backend's worker pool with per-tile (m, l)
+//! statistics — so for a fixed block size the result is bitwise-identical
+//! for any thread count (each tile's accumulation order never changes).
 //!
 //! Dropout is intentionally absent here: masks are derived from the device
 //! RNG (`python/compile/kernels/rng.py`), so cross-checking dropout paths
@@ -22,11 +29,16 @@ pub mod streaming_bwd;
 
 pub use streaming_bwd::mha_backward_streaming;
 
-use crate::tensor::{batch_matmul, batch_matmul_nt, batch_matmul_tn,
-                    softmax_lastdim, Tensor};
+use crate::exec::{self, Backend, Task};
+use crate::tensor::Tensor;
 
 /// Value used for masked-out logits (matches the kernels' `NEG_INF`).
 pub const NEG_INF: f32 = -1e30;
+
+/// Rows of the score matrix handled per worker task in the fused
+/// scale/mask/softmax/LSE pass.  Fixed (not thread-derived) so the work
+/// partition is reproducible in traces regardless of `exec.threads`.
+const SOFTMAX_ROWS_PER_TASK: usize = 16;
 
 /// Static attention parameters.
 #[derive(Debug, Clone, Copy)]
@@ -68,54 +80,119 @@ fn dims(q: &Tensor, k: &Tensor, v: &Tensor) -> (usize, usize, usize) {
     (bh, n, d)
 }
 
-fn apply_causal_mask(s: &mut Tensor) {
-    let (bh, n, m) = match *s.shape() {
+/// Fused scale → causal-mask → softmax pass over raw scores, row-parallel
+/// on the backend pool.  Writes the row-wise log-sum-exp into `lse`
+/// (pass a scratch slice if the caller doesn't need it).  Element-for-
+/// element this performs the same operations in the same order as the
+/// unfused `scale` + `apply_causal_mask` + `softmax_lastdim` sequence, so
+/// it is bitwise-stable across backends and thread counts.
+fn finish_scores(s: &mut Tensor, lse: &mut [f32], p: AttnParams,
+                 be: &dyn Backend) {
+    let (bh, nq, nk) = match *s.shape() {
         [a, b, c] => (a, b, c),
-        _ => unreachable!(),
+        ref sh => panic!("scores must be rank-3, got {sh:?}"),
     };
-    let data = s.data_mut();
-    for bi in 0..bh {
-        for i in 0..n {
-            let row = &mut data[(bi * n + i) * m..(bi * n + i + 1) * m];
-            for (j, x) in row.iter_mut().enumerate() {
-                if j > i {
-                    *x = NEG_INF;
+    let total_rows = bh * nq;
+    assert_eq!(lse.len(), total_rows);
+    let mut srest: &mut [f32] = s.data_mut();
+    let mut lrest: &mut [f32] = lse;
+    let mut tasks: Vec<Task<'_>> = Vec::new();
+    let mut r0 = 0;
+    while r0 < total_rows {
+        let rows = SOFTMAX_ROWS_PER_TASK.min(total_rows - r0);
+        let schunk = exec::carve(&mut srest, rows * nk);
+        let lchunk = exec::carve(&mut lrest, rows);
+        tasks.push(Box::new(move || {
+            for (ri, (row, lse1)) in schunk.chunks_exact_mut(nk)
+                .zip(lchunk.iter_mut()).enumerate()
+            {
+                let i = (r0 + ri) % nq; // query position within the batch
+                for (j, x) in row.iter_mut().enumerate() {
+                    *x = if p.causal && j > i {
+                        NEG_INF
+                    } else {
+                        *x * p.scale
+                    };
                 }
+                let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut sum = 0.0;
+                for x in row.iter_mut() {
+                    *x = (*x - m).exp();
+                    sum += *x;
+                }
+                for x in row.iter_mut() {
+                    *x /= sum;
+                }
+                *lse1 = m + sum.ln();
+            }
+        }));
+        r0 += rows;
+    }
+    be.run_tasks(tasks);
+}
+
+/// Run the full algorithm witness through `be` and pin it against the
+/// Scalar oracle: streaming forward and streaming backward on a small
+/// shape must reproduce the monolithic results.  `spark train` runs this
+/// at startup so a miscompiled or misconfigured backend aborts before
+/// any long run (the witness is what grounds trust in the fused
+/// artifacts' dataflow).
+pub fn witness_self_check(be: &dyn Backend) -> anyhow::Result<()> {
+    let (bh, n, d) = (2usize, 32usize, 8usize);
+    let mut rng = crate::tensor::Rng::new(0xBEAC);
+    let q = Tensor::randn(vec![bh, n, d], &mut rng);
+    let k = Tensor::randn(vec![bh, n, d], &mut rng);
+    let v = Tensor::randn(vec![bh, n, d], &mut rng);
+    let dout = Tensor::randn(vec![bh, n, d], &mut rng);
+    for causal in [false, true] {
+        let p = AttnParams::new(d, causal);
+        let oracle = mha_forward(&q, &k, &v, p, &exec::Scalar);
+        let fwd = mha_forward_streaming(&q, &k, &v, p, 8, 16, be);
+        let err = fwd.output.max_abs_diff(&oracle.output);
+        if err > 1e-4 {
+            anyhow::bail!("backend {}: streaming forward deviates from \
+                           the oracle (causal={causal}, max err {err})",
+                          be.name());
+        }
+        let want = mha_backward(&q, &k, &v, &dout, p, &exec::Scalar);
+        let got = mha_backward_streaming(&q, &k, &v, &dout, &oracle.lse,
+                                         p, 8, 16, be);
+        for (name, g, w) in [("dq", &got.dq, &want.dq),
+                             ("dk", &got.dk, &want.dk),
+                             ("dv", &got.dv, &want.dv)] {
+            let err = g.max_abs_diff(w);
+            if err > 1e-3 {
+                anyhow::bail!("backend {}: streaming backward {name} \
+                               deviates (causal={causal}, max err {err})",
+                              be.name());
             }
         }
     }
+    Ok(())
 }
 
 /// Oracle forward: materialises S and P (the unfused dataflow), f32 math.
-pub fn mha_forward(q: &Tensor, k: &Tensor, v: &Tensor,
-                   p: AttnParams) -> ForwardResult {
+pub fn mha_forward(q: &Tensor, k: &Tensor, v: &Tensor, p: AttnParams,
+                   be: &dyn Backend) -> ForwardResult {
     let (bh, n, _d) = dims(q, k, v);
-    let mut s = batch_matmul_nt(q, k).scale(p.scale);
-    if p.causal {
-        apply_causal_mask(&mut s);
+    let mut s = be.batch_matmul_nt(q, k);
+    let mut lse = vec![0.0f32; bh * n];
+    finish_scores(&mut s, &mut lse, p, be);
+    ForwardResult {
+        output: be.batch_matmul(&s, v),
+        lse: Tensor::new(vec![bh, n], lse),
     }
-    // lse before normalisation (for parity with the fused kernel output)
-    let mut lse = Tensor::zeros(vec![bh, n]);
-    {
-        let sd = s.data();
-        let ld = lse.data_mut();
-        for (ri, row) in sd.chunks_exact(n).enumerate() {
-            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let sum: f32 = row.iter().map(|x| (x - m).exp()).sum();
-            ld[ri] = m + sum.ln();
-        }
-    }
-    softmax_lastdim(&mut s);
-    ForwardResult { output: batch_matmul(&s, v), lse }
 }
 
 /// Streaming forward: the fused kernel's block dataflow on the host.
 ///
 /// Iterates K/V in `block_k` tiles per `block_q` row tile, carrying
 /// (m, l, acc) and rescaling by `exp(m_prev − m_cur)` — Equation 3.
+/// Tiles are independent `(bh, q-block)` units fanned out over the
+/// backend's pool.
 pub fn mha_forward_streaming(q: &Tensor, k: &Tensor, v: &Tensor,
-                             p: AttnParams, block_q: usize,
-                             block_k: usize) -> ForwardResult {
+                             p: AttnParams, block_q: usize, block_k: usize,
+                             be: &dyn Backend) -> ForwardResult {
     let (bh, n, d) = dims(q, k, v);
     let bq = block_q.min(n).max(1);
     let bk = block_k.min(n).max(1);
@@ -126,72 +203,21 @@ pub fn mha_forward_streaming(q: &Tensor, k: &Tensor, v: &Tensor,
     let vd = v.data();
     let mut out = vec![0.0f32; bh * n * d];
     let mut lse = vec![0.0f32; bh * n];
-
-    for b in 0..bh {
-        for iq in (0..n).step_by(bq) {
-            // per-row running statistics + accumulator for this Q tile
-            let mut m = vec![f32::NEG_INFINITY; bq];
-            let mut l = vec![0.0f32; bq];
-            let mut acc = vec![0.0f32; bq * d];
-            for ik in (0..n).step_by(bk) {
-                if p.causal && ik > iq + bq - 1 {
-                    continue; // fully-masked tile: skipped, like the kernel
-                }
-                // s_tile = Q_tile · K_tileᵀ · scale  (+ causal mask)
-                for r in 0..bq {
-                    let qrow = &qd[(b * n + iq + r) * d
-                                   ..(b * n + iq + r + 1) * d];
-                    let mut srow = vec![0.0f32; bk];
-                    for (c, sv) in srow.iter_mut().enumerate() {
-                        let krow = &kd[(b * n + ik + c) * d
-                                       ..(b * n + ik + c + 1) * d];
-                        let mut dot = 0.0;
-                        for (x, y) in qrow.iter().zip(krow) {
-                            dot += x * y;
-                        }
-                        *sv = if p.causal && ik + c > iq + r {
-                            NEG_INF
-                        } else {
-                            dot * p.scale
-                        };
-                    }
-                    // online softmax update for row r
-                    let m_cur = srow.iter().cloned().fold(m[r], f32::max);
-                    let alpha = if m[r] == f32::NEG_INFINITY {
-                        0.0
-                    } else {
-                        (m[r] - m_cur).exp()
-                    };
-                    let mut psum = 0.0;
-                    let arow = &mut acc[r * d..(r + 1) * d];
-                    for x in arow.iter_mut() {
-                        *x *= alpha;
-                    }
-                    for (c, &sv) in srow.iter().enumerate() {
-                        let pv = (sv - m_cur).exp();
-                        psum += pv;
-                        if pv != 0.0 {
-                            let vrow = &vd[(b * n + ik + c) * d
-                                           ..(b * n + ik + c + 1) * d];
-                            for (a, &vv) in arow.iter_mut().zip(vrow) {
-                                *a += pv * vv;
-                            }
-                        }
-                    }
-                    l[r] = l[r] * alpha + psum;
-                    m[r] = m_cur;
-                }
-            }
-            for r in 0..bq {
-                let arow = &acc[r * d..(r + 1) * d];
-                let orow = &mut out[(b * n + iq + r) * d
-                                    ..(b * n + iq + r + 1) * d];
-                for (o, &a) in orow.iter_mut().zip(arow) {
-                    *o = a / l[r];
-                }
-                lse[b * n + iq + r] = m[r] + l[r].ln();
+    {
+        let mut orest: &mut [f32] = &mut out;
+        let mut lrest: &mut [f32] = &mut lse;
+        let mut tasks: Vec<Task<'_>> = Vec::new();
+        for b in 0..bh {
+            for iq in (0..n).step_by(bq) {
+                let otile = exec::carve(&mut orest, bq * d);
+                let ltile = exec::carve(&mut lrest, bq);
+                tasks.push(Box::new(move || {
+                    streaming_fwd_tile(qd, kd, vd, otile, ltile, p,
+                                       b, iq, bq, bk, n, d);
+                }));
             }
         }
+        be.run_tasks(tasks);
     }
     ForwardResult {
         output: Tensor::new(vec![bh, n, d], out),
@@ -199,41 +225,110 @@ pub fn mha_forward_streaming(q: &Tensor, k: &Tensor, v: &Tensor,
     }
 }
 
+/// One `(bh, q-block)` tile of the streaming forward: sweeps K/V blocks
+/// carrying per-row (m, l) statistics and a rescaled accumulator.
+fn streaming_fwd_tile(qd: &[f32], kd: &[f32], vd: &[f32], otile: &mut [f32],
+                      ltile: &mut [f32], p: AttnParams, b: usize, iq: usize,
+                      bq: usize, bk: usize, n: usize, d: usize) {
+    let mut m = vec![f32::NEG_INFINITY; bq];
+    let mut l = vec![0.0f32; bq];
+    let mut acc = vec![0.0f32; bq * d];
+    for ik in (0..n).step_by(bk) {
+        if p.causal && ik > iq + bq - 1 {
+            continue; // fully-masked tile: skipped, like the kernel
+        }
+        // s_tile = Q_tile · K_tileᵀ · scale  (+ causal mask)
+        for r in 0..bq {
+            let qrow = &qd[(b * n + iq + r) * d..(b * n + iq + r + 1) * d];
+            let mut srow = vec![0.0f32; bk];
+            for (c, sv) in srow.iter_mut().enumerate() {
+                let krow = &kd[(b * n + ik + c) * d
+                               ..(b * n + ik + c + 1) * d];
+                let mut dot = 0.0;
+                for (x, y) in qrow.iter().zip(krow) {
+                    dot += x * y;
+                }
+                *sv = if p.causal && ik + c > iq + r {
+                    NEG_INF
+                } else {
+                    dot * p.scale
+                };
+            }
+            // online softmax update for row r
+            let m_cur = srow.iter().cloned().fold(m[r], f32::max);
+            let alpha = if m[r] == f32::NEG_INFINITY {
+                0.0
+            } else {
+                (m[r] - m_cur).exp()
+            };
+            let mut psum = 0.0;
+            let arow = &mut acc[r * d..(r + 1) * d];
+            for x in arow.iter_mut() {
+                *x *= alpha;
+            }
+            for (c, &sv) in srow.iter().enumerate() {
+                let pv = (sv - m_cur).exp();
+                psum += pv;
+                if pv != 0.0 {
+                    let vrow = &vd[(b * n + ik + c) * d
+                                   ..(b * n + ik + c + 1) * d];
+                    for (a, &vv) in arow.iter_mut().zip(vrow) {
+                        *a += pv * vv;
+                    }
+                }
+            }
+            l[r] = l[r] * alpha + psum;
+            m[r] = m_cur;
+        }
+    }
+    for r in 0..bq {
+        let arow = &acc[r * d..(r + 1) * d];
+        let orow = &mut otile[r * d..(r + 1) * d];
+        for (o, &a) in orow.iter_mut().zip(arow) {
+            *o = a / l[r];
+        }
+        ltile[r] = m[r] + l[r].ln();
+    }
+}
+
 /// Oracle backward (Equation 4), recomputing the forward internally.
 pub fn mha_backward(q: &Tensor, k: &Tensor, v: &Tensor, dout: &Tensor,
-                    p: AttnParams) -> Grads {
-    let (_bh, _n, _d) = dims(q, k, v);
-    let mut s = batch_matmul_nt(q, k).scale(p.scale);
-    if p.causal {
-        apply_causal_mask(&mut s);
-    }
-    softmax_lastdim(&mut s);
+                    p: AttnParams, be: &dyn Backend) -> Grads {
+    let (bh, n, _d) = dims(q, k, v);
+    let mut s = be.batch_matmul_nt(q, k);
+    let mut lse_scratch = vec![0.0f32; bh * n];
+    finish_scores(&mut s, &mut lse_scratch, p, be);
     let pm = s; // P
 
     // dV = Pᵀ · dO
-    let dv = batch_matmul_tn(&pm, dout);
+    let dv = be.batch_matmul_tn(&pm, dout);
     // dP = dO · Vᵀ
-    let dp = batch_matmul_nt(dout, v);
-    // dS = P ∘ (dP − rowsum(P ∘ dP))
-    let n = pm.shape()[1];
+    let dp = be.batch_matmul_nt(dout, v);
+    // dS = P ∘ (dP − rowsum(P ∘ dP)), row-parallel
     let mut ds = pm.clone();
     {
         let pd = pm.data();
         let dpd = dp.data();
-        let dsd = ds.data_mut();
-        for ri in 0..pd.len() / n {
-            let prow = &pd[ri * n..(ri + 1) * n];
-            let dprow = &dpd[ri * n..(ri + 1) * n];
-            let dsum: f32 = prow.iter().zip(dprow).map(|(a, b)| a * b).sum();
-            let dsrow = &mut dsd[ri * n..(ri + 1) * n];
-            for ((dsv, &pv), &dpv) in dsrow.iter_mut().zip(prow).zip(dprow) {
-                *dsv = pv * (dpv - dsum);
+        exec::par_row_chunks(be, ds.data_mut(), n, SOFTMAX_ROWS_PER_TASK,
+                             |ci, chunk| {
+            let base = ci * SOFTMAX_ROWS_PER_TASK;
+            for (ri, dsrow) in chunk.chunks_exact_mut(n).enumerate() {
+                let r = base + ri;
+                let prow = &pd[r * n..(r + 1) * n];
+                let dprow = &dpd[r * n..(r + 1) * n];
+                let dsum: f32 =
+                    prow.iter().zip(dprow).map(|(a, b)| a * b).sum();
+                for ((dsv, &pv), &dpv) in
+                    dsrow.iter_mut().zip(prow).zip(dprow)
+                {
+                    *dsv = pv * (dpv - dsum);
+                }
             }
-        }
+        });
     }
     // dQ = dS · K · scale;  dK = dSᵀ · Q · scale
-    let dq = batch_matmul(&ds, k).scale(p.scale);
-    let dk = batch_matmul_tn(&ds, q).scale(p.scale);
+    let dq = be.batch_matmul(&ds, k).scale(p.scale);
+    let dk = be.batch_matmul_tn(&ds, q).scale(p.scale);
     Grads { dq, dk, dv }
 }
 
@@ -250,6 +345,7 @@ pub fn attention_flops(bh: usize, n: usize, d: usize, causal: bool,
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::exec::{Blocked, Scalar};
     use crate::tensor::Rng;
 
     fn rand_qkv(bh: usize, n: usize, d: usize, seed: u64)
@@ -265,7 +361,7 @@ mod tests {
         // q = 0 → uniform softmax → output = column mean of V
         let (_, k, v) = rand_qkv(1, 8, 4, 1);
         let q = Tensor::zeros(vec![1, 8, 4]);
-        let r = mha_forward(&q, &k, &v, AttnParams::new(4, false));
+        let r = mha_forward(&q, &k, &v, AttnParams::new(4, false), &Scalar);
         let vd = v.data();
         for c in 0..4 {
             let mean: f32 = (0..8).map(|i| vd[i * 4 + c]).sum::<f32>() / 8.0;
@@ -278,7 +374,7 @@ mod tests {
     #[test]
     fn causal_first_row_copies_v0() {
         let (q, k, v) = rand_qkv(2, 16, 8, 2);
-        let r = mha_forward(&q, &k, &v, AttnParams::new(8, true));
+        let r = mha_forward(&q, &k, &v, AttnParams::new(8, true), &Scalar);
         for b in 0..2 {
             for c in 0..8 {
                 assert!((r.output.at(&[b, 0, c]) - v.at(&[b, 0, c])).abs()
@@ -291,9 +387,9 @@ mod tests {
     fn streaming_matches_oracle_full() {
         let (q, k, v) = rand_qkv(2, 32, 8, 3);
         let p = AttnParams::new(8, false);
-        let a = mha_forward(&q, &k, &v, p);
+        let a = mha_forward(&q, &k, &v, p, &Scalar);
         for (bq, bk) in [(32, 32), (8, 8), (16, 4), (4, 16), (1, 1)] {
-            let b = mha_forward_streaming(&q, &k, &v, p, bq, bk);
+            let b = mha_forward_streaming(&q, &k, &v, p, bq, bk, &Scalar);
             assert!(a.output.max_abs_diff(&b.output) < 1e-4,
                     "blocks ({bq},{bk})");
             assert!(a.lse.max_abs_diff(&b.lse) < 1e-4);
@@ -304,11 +400,41 @@ mod tests {
     fn streaming_matches_oracle_causal() {
         let (q, k, v) = rand_qkv(2, 32, 8, 4);
         let p = AttnParams::new(8, true);
-        let a = mha_forward(&q, &k, &v, p);
+        let a = mha_forward(&q, &k, &v, p, &Scalar);
         for (bq, bk) in [(8, 8), (16, 8), (8, 16)] {
-            let b = mha_forward_streaming(&q, &k, &v, p, bq, bk);
+            let b = mha_forward_streaming(&q, &k, &v, p, bq, bk, &Scalar);
             assert!(a.output.max_abs_diff(&b.output) < 1e-4,
                     "blocks ({bq},{bk})");
+        }
+    }
+
+    #[test]
+    fn backends_agree_bitwise_on_forward() {
+        let (q, k, v) = rand_qkv(3, 32, 16, 9);
+        for causal in [false, true] {
+            let p = AttnParams::new(16, causal);
+            let a = mha_forward(&q, &k, &v, p, &Scalar);
+            for threads in [1usize, 2, 8] {
+                let b = mha_forward(&q, &k, &v, p, &Blocked::new(threads));
+                assert_eq!(a.output.data(), b.output.data(),
+                           "causal={causal} threads={threads}");
+                assert_eq!(a.lse.data(), b.lse.data());
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_thread_count_invariant() {
+        let (q, k, v) = rand_qkv(2, 64, 8, 10);
+        let p = AttnParams::new(8, true);
+        let base = mha_forward_streaming(&q, &k, &v, p, 16, 16,
+                                         &Blocked::new(1));
+        for threads in [2usize, 8] {
+            let got = mha_forward_streaming(&q, &k, &v, p, 16, 16,
+                                            &Blocked::new(threads));
+            assert_eq!(base.output.data(), got.output.data(),
+                       "threads={threads}");
+            assert_eq!(base.lse.data(), got.lse.data());
         }
     }
 
@@ -317,10 +443,10 @@ mod tests {
         let (q, k, v) = rand_qkv(1, 6, 4, 5);
         let p = AttnParams::new(4, false);
         let dout = Tensor::full(vec![1, 6, 4], 1.0);
-        let g = mha_backward(&q, &k, &v, &dout, p);
+        let g = mha_backward(&q, &k, &v, &dout, p, &Scalar);
         let eps = 1e-3f32;
         let f = |q: &Tensor, k: &Tensor, v: &Tensor| -> f32 {
-            mha_forward(q, k, v, p).output.data().iter().sum()
+            mha_forward(q, k, v, p, &Scalar).output.data().iter().sum()
         };
         // spot-check several coordinates of dq, dk, dv
         for (which, grad) in [("q", &g.dq), ("k", &g.dk), ("v", &g.dv)] {
@@ -349,9 +475,15 @@ mod tests {
     }
 
     #[test]
+    fn witness_self_check_accepts_both_backends() {
+        witness_self_check(&Scalar).unwrap();
+        witness_self_check(&Blocked::new(3)).unwrap();
+    }
+
+    #[test]
     fn lse_is_finite() {
         let (q, k, v) = rand_qkv(1, 16, 8, 6);
-        let r = mha_forward(&q, &k, &v, AttnParams::new(8, false));
+        let r = mha_forward(&q, &k, &v, AttnParams::new(8, false), &Scalar);
         for &x in r.lse.data() {
             assert!(x.is_finite());
         }

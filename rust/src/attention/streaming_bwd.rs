@@ -10,12 +10,20 @@
 //!   transpose), fold `P_dropᵀ·dO` and `dSᵀ·Q` locally (the per-thread-
 //!   block accumulation of Figure 9).
 //!
+//! Both grids are embarrassingly parallel over their outer tiles, so the
+//! whole backward is submitted to the `exec::Backend` pool as one task
+//! set: every `(bh, q-tile)` dq task and every `(bh, k-tile)` dk/dv task
+//! owns a disjoint output slice.  Accumulation order inside a tile is
+//! fixed by the block sizes alone, keeping results bitwise-deterministic
+//! across thread counts.
+//!
 //! Property tests pin this block-streamed backward against the monolithic
 //! oracle for arbitrary tilings — independent evidence that the
 //! recomputation algebra (Equation 4 + dPsum) is tiling-invariant, which
 //! is the correctness core of the paper's backward design.
 
 use super::{mha_forward, AttnParams, Grads, NEG_INF};
+use crate::exec::{self, Backend, Task};
 use crate::tensor::Tensor;
 
 /// Block-streamed backward with forward recomputation from (Q, K, LSE).
@@ -23,7 +31,8 @@ use crate::tensor::Tensor;
 /// `lse` must be the forward's log-sum-exp (e.g. from `mha_forward`).
 pub fn mha_backward_streaming(q: &Tensor, k: &Tensor, v: &Tensor,
                               dout: &Tensor, lse: &Tensor, p: AttnParams,
-                              block_q: usize, block_k: usize) -> Grads {
+                              block_q: usize, block_k: usize,
+                              be: &dyn Backend) -> Grads {
     let (bh, n, d) = match *q.shape() {
         [a, b, c] => (a, b, c),
         ref s => panic!("q must be rank-3, got {s:?}"),
@@ -37,7 +46,7 @@ pub fn mha_backward_streaming(q: &Tensor, k: &Tensor, v: &Tensor,
 
     // Δ = rowsum(dO ∘ O): the dPsum preprocess (recompute O row-block-wise
     // via the forward formula so no O tensor needs to be passed in).
-    let o = recompute_output(q, k, v, lse, p);
+    let o = recompute_output(q, k, v, lse, p, be);
     let od = o.data();
     let mut delta = vec![0.0f32; bh * n];
     for (i, dl) in delta.iter_mut().enumerate() {
@@ -45,108 +54,42 @@ pub fn mha_backward_streaming(q: &Tensor, k: &Tensor, v: &Tensor,
                             &dod[i * d..(i + 1) * d]);
         *dl = orow.iter().zip(drow).map(|(a, b)| a * b).sum();
     }
+    let delta = delta; // freeze for shared capture
 
     let mut dq = vec![0.0f32; bh * n * d];
     let mut dk = vec![0.0f32; bh * n * d];
     let mut dv = vec![0.0f32; bh * n * d];
+    {
+        let dl = &delta[..];
+        let mut dq_rest: &mut [f32] = &mut dq;
+        let mut dk_rest: &mut [f32] = &mut dk;
+        let mut dv_rest: &mut [f32] = &mut dv;
+        let mut tasks: Vec<Task<'_>> = Vec::new();
 
-    // Tile-local recompute of one (r_global, c_global) score entry's P.
-    let p_entry = |b: usize, r: usize, c: usize| -> f32 {
-        if p.causal && c > r {
-            return 0.0;
-        }
-        let qrow = &qd[(b * n + r) * d..(b * n + r + 1) * d];
-        let krow = &kd[(b * n + c) * d..(b * n + c + 1) * d];
-        let mut s = 0.0;
-        for (x, y) in qrow.iter().zip(krow) {
-            s += x * y;
-        }
-        let s = if p.causal && c > r { NEG_INF } else { s * p.scale };
-        (s - ld[b * n + r]).exp()
-    };
-
-    // Kernel 1 — dq: grid over Q tiles, inner sweep over K tiles.
-    for b in 0..bh {
-        for iq in (0..n).step_by(bq) {
-            let mut dq_acc = vec![0.0f32; bq * d];
-            for ik in (0..n).step_by(bk) {
-                if p.causal && ik > iq + bq - 1 {
-                    continue;
-                }
-                for r in 0..bq {
-                    let gr = iq + r;
-                    let dorow = &dod[(b * n + gr) * d..(b * n + gr + 1) * d];
-                    for c in 0..bk {
-                        let gc = ik + c;
-                        let pe = p_entry(b, gr, gc);
-                        if pe == 0.0 {
-                            continue;
-                        }
-                        let vrow = &vd[(b * n + gc) * d
-                                       ..(b * n + gc + 1) * d];
-                        let mut dp = 0.0;
-                        for (x, y) in dorow.iter().zip(vrow) {
-                            dp += x * y;
-                        }
-                        let ds = pe * (dp - delta[b * n + gr]) * p.scale;
-                        let krow = &kd[(b * n + gc) * d
-                                       ..(b * n + gc + 1) * d];
-                        let acc = &mut dq_acc[r * d..(r + 1) * d];
-                        for (a, &kv) in acc.iter_mut().zip(krow) {
-                            *a += ds * kv;
-                        }
-                    }
-                }
-            }
-            dq[(b * n + iq) * d..(b * n + iq + bq) * d]
-                .copy_from_slice(&dq_acc);
-        }
-    }
-
-    // Kernel 2 — dk/dv: grid over K tiles, inner sweep over Q tiles.
-    for b in 0..bh {
-        for ik in (0..n).step_by(bk) {
-            let mut dk_acc = vec![0.0f32; bk * d];
-            let mut dv_acc = vec![0.0f32; bk * d];
+        // Kernel 1 — dq: grid over Q tiles, inner sweep over K tiles.
+        for b in 0..bh {
             for iq in (0..n).step_by(bq) {
-                if p.causal && ik > iq + bq - 1 {
-                    continue;
-                }
-                for r in 0..bq {
-                    let gr = iq + r;
-                    let dorow = &dod[(b * n + gr) * d..(b * n + gr + 1) * d];
-                    let qrow = &qd[(b * n + gr) * d..(b * n + gr + 1) * d];
-                    for c in 0..bk {
-                        let gc = ik + c;
-                        let pe = p_entry(b, gr, gc);
-                        if pe == 0.0 {
-                            continue;
-                        }
-                        // dV += Pᵀ dO
-                        let dvrow = &mut dv_acc[c * d..(c + 1) * d];
-                        for (a, &x) in dvrow.iter_mut().zip(dorow) {
-                            *a += pe * x;
-                        }
-                        let vrow = &vd[(b * n + gc) * d
-                                       ..(b * n + gc + 1) * d];
-                        let mut dp = 0.0;
-                        for (x, y) in dorow.iter().zip(vrow) {
-                            dp += x * y;
-                        }
-                        let ds = pe * (dp - delta[b * n + gr]) * p.scale;
-                        // dK += dSᵀ Q
-                        let dkrow = &mut dk_acc[c * d..(c + 1) * d];
-                        for (a, &x) in dkrow.iter_mut().zip(qrow) {
-                            *a += ds * x;
-                        }
-                    }
-                }
+                let dq_tile = exec::carve(&mut dq_rest, bq * d);
+                tasks.push(Box::new(move || {
+                    dq_tile_task(qd, kd, vd, dod, ld, dl, dq_tile, p,
+                                 b, iq, bq, bk, n, d);
+                }));
             }
-            dk[(b * n + ik) * d..(b * n + ik + bk) * d]
-                .copy_from_slice(&dk_acc);
-            dv[(b * n + ik) * d..(b * n + ik + bk) * d]
-                .copy_from_slice(&dv_acc);
         }
+
+        // Kernel 2 — dk/dv: grid over K tiles, inner sweep over Q tiles.
+        for b in 0..bh {
+            for ik in (0..n).step_by(bk) {
+                let dk_tile = exec::carve(&mut dk_rest, bk * d);
+                let dv_tile = exec::carve(&mut dv_rest, bk * d);
+                tasks.push(Box::new(move || {
+                    dkv_tile_task(qd, kd, vd, dod, ld, dl, dk_tile,
+                                  dv_tile, p, b, ik, bq, bk, n, d);
+                }));
+            }
+        }
+
+        be.run_tasks(tasks);
     }
 
     Grads {
@@ -156,14 +99,105 @@ pub fn mha_backward_streaming(q: &Tensor, k: &Tensor, v: &Tensor,
     }
 }
 
+/// Tile-local recompute of one (r, c) score entry's P from (Q, K, LSE).
+fn p_entry(qd: &[f32], kd: &[f32], ld: &[f32], p: AttnParams, n: usize,
+           d: usize, b: usize, r: usize, c: usize) -> f32 {
+    if p.causal && c > r {
+        return 0.0;
+    }
+    let qrow = &qd[(b * n + r) * d..(b * n + r + 1) * d];
+    let krow = &kd[(b * n + c) * d..(b * n + c + 1) * d];
+    let mut s = 0.0;
+    for (x, y) in qrow.iter().zip(krow) {
+        s += x * y;
+    }
+    let s = if p.causal && c > r { NEG_INF } else { s * p.scale };
+    (s - ld[b * n + r]).exp()
+}
+
+/// dq for one `(bh, q-tile)`: sweep K tiles, fold `dS·K` locally.
+fn dq_tile_task(qd: &[f32], kd: &[f32], vd: &[f32], dod: &[f32],
+                ld: &[f32], delta: &[f32], dq_tile: &mut [f32],
+                p: AttnParams, b: usize, iq: usize, bq: usize, bk: usize,
+                n: usize, d: usize) {
+    for ik in (0..n).step_by(bk) {
+        if p.causal && ik > iq + bq - 1 {
+            continue;
+        }
+        for r in 0..bq {
+            let gr = iq + r;
+            let dorow = &dod[(b * n + gr) * d..(b * n + gr + 1) * d];
+            for c in 0..bk {
+                let gc = ik + c;
+                let pe = p_entry(qd, kd, ld, p, n, d, b, gr, gc);
+                if pe == 0.0 {
+                    continue;
+                }
+                let vrow = &vd[(b * n + gc) * d..(b * n + gc + 1) * d];
+                let mut dp = 0.0;
+                for (x, y) in dorow.iter().zip(vrow) {
+                    dp += x * y;
+                }
+                let ds = pe * (dp - delta[b * n + gr]) * p.scale;
+                let krow = &kd[(b * n + gc) * d..(b * n + gc + 1) * d];
+                let acc = &mut dq_tile[r * d..(r + 1) * d];
+                for (a, &kv) in acc.iter_mut().zip(krow) {
+                    *a += ds * kv;
+                }
+            }
+        }
+    }
+}
+
+/// dk/dv for one `(bh, k-tile)`: sweep Q tiles (the grid transpose),
+/// fold `Pᵀ·dO` and `dSᵀ·Q` locally.
+fn dkv_tile_task(qd: &[f32], kd: &[f32], vd: &[f32], dod: &[f32],
+                 ld: &[f32], delta: &[f32], dk_tile: &mut [f32],
+                 dv_tile: &mut [f32], p: AttnParams, b: usize, ik: usize,
+                 bq: usize, bk: usize, n: usize, d: usize) {
+    for iq in (0..n).step_by(bq) {
+        if p.causal && ik > iq + bq - 1 {
+            continue;
+        }
+        for r in 0..bq {
+            let gr = iq + r;
+            let dorow = &dod[(b * n + gr) * d..(b * n + gr + 1) * d];
+            let qrow = &qd[(b * n + gr) * d..(b * n + gr + 1) * d];
+            for c in 0..bk {
+                let gc = ik + c;
+                let pe = p_entry(qd, kd, ld, p, n, d, b, gr, gc);
+                if pe == 0.0 {
+                    continue;
+                }
+                // dV += Pᵀ dO
+                let dvrow = &mut dv_tile[c * d..(c + 1) * d];
+                for (a, &x) in dvrow.iter_mut().zip(dorow) {
+                    *a += pe * x;
+                }
+                let vrow = &vd[(b * n + gc) * d..(b * n + gc + 1) * d];
+                let mut dp = 0.0;
+                for (x, y) in dorow.iter().zip(vrow) {
+                    dp += x * y;
+                }
+                let ds = pe * (dp - delta[b * n + gr]) * p.scale;
+                // dK += dSᵀ Q
+                let dkrow = &mut dk_tile[c * d..(c + 1) * d];
+                for (a, &x) in dkrow.iter_mut().zip(qrow) {
+                    *a += ds * x;
+                }
+            }
+        }
+    }
+}
+
 /// Recompute O from (Q, K, V, LSE) — what the device backward does with
 /// its saved statistics instead of saving O's N×d… wait, it *does* read O
 /// for dPsum; here we recompute it so the witness needs only the
 /// statistics, demonstrating the stronger memory claim.
 fn recompute_output(q: &Tensor, k: &Tensor, v: &Tensor, lse: &Tensor,
-                    p: AttnParams) -> Tensor {
+                    p: AttnParams, be: &dyn Backend) -> Tensor {
     // numerically identical to the forward given the same lse
-    let f = mha_forward(q, k, v, p);
+    let f = mha_forward(q, k, v, p, be);
     debug_assert!(f.lse.max_abs_diff(lse) < 1e-3,
                   "provided LSE does not match this (q,k) pair");
     f.output
@@ -173,6 +207,7 @@ fn recompute_output(q: &Tensor, k: &Tensor, v: &Tensor, lse: &Tensor,
 mod tests {
     use super::*;
     use crate::attention::mha_backward;
+    use crate::exec::{Blocked, Scalar};
     use crate::tensor::Rng;
 
     fn case(bh: usize, n: usize, d: usize, seed: u64)
@@ -188,11 +223,11 @@ mod tests {
     fn matches_oracle_full() {
         let (q, k, v, dout) = case(2, 32, 8, 1);
         let p = AttnParams::new(8, false);
-        let lse = mha_forward(&q, &k, &v, p).lse;
-        let want = mha_backward(&q, &k, &v, &dout, p);
+        let lse = mha_forward(&q, &k, &v, p, &Scalar).lse;
+        let want = mha_backward(&q, &k, &v, &dout, p, &Scalar);
         for (bq, bk) in [(32, 32), (8, 8), (16, 4)] {
             let got = mha_backward_streaming(&q, &k, &v, &dout, &lse, p,
-                                             bq, bk);
+                                             bq, bk, &Scalar);
             assert!(got.dq.max_abs_diff(&want.dq) < 1e-3, "dq ({bq},{bk})");
             assert!(got.dk.max_abs_diff(&want.dk) < 1e-3, "dk ({bq},{bk})");
             assert!(got.dv.max_abs_diff(&want.dv) < 1e-3, "dv ({bq},{bk})");
@@ -203,14 +238,30 @@ mod tests {
     fn matches_oracle_causal() {
         let (q, k, v, dout) = case(1, 32, 8, 2);
         let p = AttnParams::new(8, true);
-        let lse = mha_forward(&q, &k, &v, p).lse;
-        let want = mha_backward(&q, &k, &v, &dout, p);
+        let lse = mha_forward(&q, &k, &v, p, &Scalar).lse;
+        let want = mha_backward(&q, &k, &v, &dout, p, &Scalar);
         for (bq, bk) in [(8, 8), (16, 8), (8, 16)] {
             let got = mha_backward_streaming(&q, &k, &v, &dout, &lse, p,
-                                             bq, bk);
+                                             bq, bk, &Scalar);
             assert!(got.dq.max_abs_diff(&want.dq) < 1e-3, "dq ({bq},{bk})");
             assert!(got.dk.max_abs_diff(&want.dk) < 1e-3, "dk ({bq},{bk})");
             assert!(got.dv.max_abs_diff(&want.dv) < 1e-3, "dv ({bq},{bk})");
+        }
+    }
+
+    #[test]
+    fn thread_count_invariant() {
+        let (q, k, v, dout) = case(2, 32, 8, 3);
+        let p = AttnParams::new(8, true);
+        let lse = mha_forward(&q, &k, &v, p, &Scalar).lse;
+        let base = mha_backward_streaming(&q, &k, &v, &dout, &lse, p, 8, 8,
+                                          &Blocked::new(1));
+        for threads in [2usize, 8] {
+            let got = mha_backward_streaming(&q, &k, &v, &dout, &lse, p,
+                                             8, 8, &Blocked::new(threads));
+            assert_eq!(base.dq.data(), got.dq.data(), "threads={threads}");
+            assert_eq!(base.dk.data(), got.dk.data());
+            assert_eq!(base.dv.data(), got.dv.data());
         }
     }
 }

@@ -10,6 +10,8 @@ use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::exec::{BackendKind, ExecOptions};
+
 /// A scalar-ish TOML value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Toml {
@@ -184,6 +186,24 @@ fn parse_value(s: &str) -> Result<Toml> {
 // Typed configs
 // ---------------------------------------------------------------------------
 
+/// `[exec]` section → backend selection (shared by train and bench).
+///
+/// ```toml
+/// [exec]
+/// backend = "blocked"   # or "scalar"
+/// threads = 8           # 0 = auto-detect
+/// ```
+pub fn exec_from_doc(doc: &Document) -> Result<ExecOptions> {
+    let d = ExecOptions::default();
+    let kind = match doc.get("exec", "backend") {
+        None => d.kind,
+        Some(v) => BackendKind::parse(v.as_str().ok_or_else(
+            || anyhow!("[exec] backend must be a string"))?)?,
+    };
+    let threads = doc.usize_or("exec", "threads", d.threads)?;
+    Ok(ExecOptions { kind, threads })
+}
+
 /// Training-run configuration (`spark train --config …`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct TrainConfig {
@@ -197,6 +217,8 @@ pub struct TrainConfig {
     pub corpus_zipf: f64,
     pub corpus_tokens: usize,
     pub metrics_out: Option<String>,
+    /// Host execution backend (`[exec]` section).
+    pub exec: ExecOptions,
 }
 
 impl Default for TrainConfig {
@@ -211,6 +233,7 @@ impl Default for TrainConfig {
             corpus_zipf: 1.1,
             corpus_tokens: 1 << 20,
             metrics_out: None,
+            exec: ExecOptions::default(),
         }
     }
 }
@@ -233,6 +256,7 @@ impl TrainConfig {
                                         d.corpus_tokens)?,
             metrics_out: doc.get("train", "metrics_out")
                 .and_then(Toml::as_str).map(String::from),
+            exec: exec_from_doc(doc)?,
         };
         if cfg.steps == 0 {
             bail!("[train] steps must be > 0");
@@ -256,6 +280,8 @@ pub struct BenchConfig {
     /// Emit machine-readable JSON rows alongside the table.
     pub json: bool,
     pub out_path: Option<String>,
+    /// Host execution backend (`[exec]` section).
+    pub exec: ExecOptions,
 }
 
 impl Default for BenchConfig {
@@ -267,6 +293,7 @@ impl Default for BenchConfig {
             mem_budget: 8 << 30,
             json: false,
             out_path: None,
+            exec: ExecOptions::default(),
         }
     }
 }
@@ -284,6 +311,7 @@ impl BenchConfig {
             json: doc.bool_or("bench", "json", d.json)?,
             out_path: doc.get("bench", "out_path")
                 .and_then(Toml::as_str).map(String::from),
+            exec: exec_from_doc(doc)?,
         })
     }
 }
@@ -308,6 +336,10 @@ tokens = 65536
 iters = 5
 json = true
 mem_budget_gb = 4
+
+[exec]
+backend = "blocked"
+threads = 4
 "#;
 
     #[test]
@@ -340,6 +372,27 @@ mem_budget_gb = 4
         assert_eq!(cfg.iters, 5);
         assert!(cfg.json);
         assert_eq!(cfg.mem_budget, 4 << 30);
+        assert_eq!(cfg.exec, ExecOptions::blocked(4));
+    }
+
+    #[test]
+    fn exec_section_parses_and_validates() {
+        let cfg = TrainConfig::from_doc(&Document::parse(SAMPLE).unwrap())
+            .unwrap();
+        assert_eq!(cfg.exec.kind, BackendKind::Blocked);
+        assert_eq!(cfg.exec.threads, 4);
+        let scalar = Document::parse("[exec]\nbackend = \"scalar\"")
+            .unwrap();
+        assert_eq!(exec_from_doc(&scalar).unwrap().kind,
+                   BackendKind::Scalar);
+        // defaults: blocked + auto threads
+        assert_eq!(exec_from_doc(&Document::parse("").unwrap()).unwrap(),
+                   ExecOptions::default());
+        // unknown backend is a hard error
+        let bad = Document::parse("[exec]\nbackend = \"gpu\"").unwrap();
+        assert!(exec_from_doc(&bad).is_err());
+        let bad = Document::parse("[exec]\nbackend = 3").unwrap();
+        assert!(exec_from_doc(&bad).is_err());
     }
 
     #[test]

@@ -16,12 +16,14 @@
 //! Measured CPU numbers demonstrate the *shape* (who wins, how the gap
 //! scales with n); the projection carries the paper-scale magnitudes.
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use log::{info, warn};
 
 use super::inputs::synth_inputs;
-use crate::attention;
-use crate::bench::{measure, skipped_row, Options, Report, Row};
+use crate::attention::{self, AttnParams};
+use crate::bench::{measure, measure_wallclock, skipped_row, Options,
+                   Report, Row};
+use crate::exec::{Backend, ExecOptions, Scalar};
 use crate::iomodel::{self, MhaShape};
 use crate::perfmodel::{self, Bound, Machine};
 use crate::runtime::{ArtifactMeta, Engine, HostValue};
@@ -34,11 +36,17 @@ pub struct HarnessOptions {
     /// Host-memory admission budget (bytes): artifacts whose modeled peak
     /// exceeds it are reported as OOM instead of executed.
     pub mem_budget: usize,
+    /// Host execution backend for the pure-Rust attention path.
+    pub exec: ExecOptions,
 }
 
 impl Default for HarnessOptions {
     fn default() -> Self {
-        HarnessOptions { bench: Options::default(), mem_budget: 8 << 30 }
+        HarnessOptions {
+            bench: Options::default(),
+            mem_budget: 8 << 30,
+            exec: ExecOptions::default(),
+        }
     }
 }
 
@@ -288,7 +296,7 @@ pub fn accuracy_report(eng: &Engine) -> Result<Vec<AccuracyRow>> {
         let d = meta.attr_i64("d").unwrap_or(64) as usize;
         let causal = meta.attr_bool("causal").unwrap_or(false);
         let oracle = attention::mha_forward(
-            &q, &k, &v, attention::AttnParams::new(d, causal)).output;
+            &q, &k, &v, AttnParams::new(d, causal), &Scalar).output;
         rows.push(accuracy_row(&meta.name, &o_dev, &oracle));
     }
 
@@ -305,7 +313,7 @@ pub fn accuracy_report(eng: &Engine) -> Result<Vec<AccuracyRow>> {
         let d = meta.attr_i64("d").unwrap_or(64) as usize;
         let causal = meta.attr_bool("causal").unwrap_or(false);
         let g = attention::mha_backward(
-            &q, &k, &v, &dout, attention::AttnParams::new(d, causal));
+            &q, &k, &v, &dout, AttnParams::new(d, causal), &Scalar);
         for (i, (gname, oracle)) in [("dq", &g.dq), ("dk", &g.dk),
                                      ("dv", &g.dv)].iter().enumerate() {
             let dev = out[i].as_tensor()?;
@@ -402,6 +410,118 @@ pub fn projected_fig12(machine: &Machine) -> Report {
         }
     }
     report
+}
+
+/// Host-path backend comparison: run the pure-Rust attention path
+/// (oracle dataflow and block-streamed dataflow) under the `Scalar`
+/// reference backend and under the configured parallel backend, on the
+/// same inputs, and report both as bench rows.
+///
+/// This is the artifact-free figure: it needs no `make artifacts`, so CI
+/// and fresh checkouts always produce it.  Outputs are cross-checked
+/// between backends before timings are accepted — a bench that silently
+/// drifts numerically is worse than no bench.
+pub fn host_backend_report(ns: &[usize], bh: usize, d: usize,
+                           backward: bool, opts: HarnessOptions)
+                           -> Result<Report> {
+    let pass = if backward { "backward" } else { "forward" };
+    let mut report = Report::new(format!(
+        "Host MHA-{} — exec backends (bh={bh}, d={d})",
+        if backward { "Backward" } else { "Forward" }));
+    let parallel = opts.exec.build();
+    // Scalar is always the baseline row; add the configured backend as
+    // the comparison row unless it *is* scalar (avoid duplicate rows
+    // and a 1.00× self-speedup).
+    let mut backends: Vec<&dyn Backend> = vec![&Scalar];
+    if parallel.name() != Scalar.name() {
+        backends.push(parallel.as_ref());
+    }
+    let block = 64usize;
+    for &n in ns {
+        let group = format!("host/d{d}");
+        let p = AttnParams::new(d, false);
+        let mut rng = Rng::new(0x5A11 + n as u64);
+        let q = Tensor::randn(vec![bh, n, d], &mut rng);
+        let k = Tensor::randn(vec![bh, n, d], &mut rng);
+        let v = Tensor::randn(vec![bh, n, d], &mut rng);
+        let dout = Tensor::randn(vec![bh, n, d], &mut rng);
+        // largest block ≤ 64 that divides n (streaming requires n % bq == 0)
+        let bq = (1..=block.min(n)).rev().find(|b| n % b == 0).unwrap_or(1);
+        let flops = attention::attention_flops(bh, n, d, false, backward);
+        let reference = if backward {
+            let lse = attention::mha_forward(&q, &k, &v, p, &Scalar).lse;
+            attention::mha_backward(&q, &k, &v, &dout, p, &Scalar).dq
+                .add(&attention::mha_backward_streaming(
+                    &q, &k, &v, &dout, &lse, p, bq, bq, &Scalar).dq)
+        } else {
+            attention::mha_forward(&q, &k, &v, p, &Scalar).output
+        };
+        for (bi, &be) in backends.iter().enumerate() {
+            // Numeric cross-check before timing — skipped for the
+            // Scalar entry, which *is* the reference.
+            if bi > 0 {
+                let check = if backward {
+                    let lse =
+                        attention::mha_forward(&q, &k, &v, p, be).lse;
+                    attention::mha_backward(&q, &k, &v, &dout, p, be).dq
+                        .add(&attention::mha_backward_streaming(
+                            &q, &k, &v, &dout, &lse, p, bq, bq, be).dq)
+                } else {
+                    attention::mha_forward(&q, &k, &v, p, be).output
+                };
+                let err = check.max_abs_diff(&reference);
+                if err > 1e-4 {
+                    bail!("backend {} disagrees with scalar on host \
+                           {pass} (n={n}, max err {err})", be.name());
+                }
+            }
+            let time = if backward {
+                let lse = attention::mha_forward(&q, &k, &v, p, be).lse;
+                measure_wallclock(opts.bench, || {
+                    attention::mha_backward_streaming(
+                        &q, &k, &v, &dout, &lse, p, bq, bq, be);
+                    Ok(())
+                })?
+            } else {
+                measure_wallclock(opts.bench, || {
+                    attention::mha_forward(&q, &k, &v, p, be);
+                    Ok(())
+                })?
+            };
+            report.push(Row {
+                group: group.clone(),
+                variant: be.name(),
+                x: n,
+                time,
+                flops,
+                status: "ok".into(),
+            });
+            // the streamed (flash-dataflow) variant of the same pass
+            if !backward {
+                let time = measure_wallclock(opts.bench, || {
+                    attention::mha_forward_streaming(&q, &k, &v, p,
+                                                     bq, bq, be);
+                    Ok(())
+                })?;
+                report.push(Row {
+                    group: group.clone(),
+                    variant: format!("{}_stream", be.name()),
+                    x: n,
+                    time,
+                    flops,
+                    status: "ok".into(),
+                });
+            }
+        }
+    }
+    if backends.len() > 1 {
+        if let Some((mean, max)) =
+            report.speedup_summary(&parallel.name(), "scalar") {
+            info!("host {pass}: {} vs scalar: avg {mean:.2}× \
+                   (max {max:.2}×)", parallel.name());
+        }
+    }
+    Ok(report)
 }
 
 /// V100-projected Fig 10/11 at paper scale (heads = 2048/d, batch =

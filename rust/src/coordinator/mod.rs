@@ -13,6 +13,7 @@ pub mod harness;
 pub mod inputs;
 pub mod trainer;
 
-pub use harness::{accuracy_report, fig10_forward, fig11_backward, projected_fig12,
-                  fig12_e2e, io_report, projected_fig10};
+pub use harness::{accuracy_report, fig10_forward, fig11_backward,
+                  fig12_e2e, host_backend_report, io_report,
+                  projected_fig10, projected_fig12};
 pub use trainer::{TrainOutcome, Trainer};

@@ -1,0 +1,580 @@
+//! Execution backends for the host compute path.
+//!
+//! The pure-Rust attention oracle and algorithm witness (`attention/`)
+//! run their linear algebra through a [`Backend`]:
+//!
+//! * [`Scalar`] — the original single-threaded reference loops from
+//!   `tensor/`.  Ground truth; never changes behaviour.
+//! * [`Blocked`] — cache-blocked (MC×KC×NR) microkernels fanned out over
+//!   a `std::thread::scope` worker pool.  Deterministic by construction:
+//!   every output element accumulates its k-terms in the same ascending
+//!   order as `Scalar`, and the tile partition never depends on the
+//!   thread count, so results are bitwise-identical across
+//!   `exec.threads ∈ {1, 2, 8, …}` (and match `Scalar` exactly).
+//!
+//! The backend seam is what future scaling PRs (sharding, device
+//! backends, batched serving) plug into: anything that can run three
+//! batched matmul flavours and a task pool can host the attention path.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::{self, dims3, Tensor};
+
+/// Row-block assigned to one worker task.
+pub const MC: usize = 64;
+/// k-panel kept hot in cache between row sweeps.
+pub const KC: usize = 256;
+/// Register-tile width (accumulator lanes per row).
+pub const NR: usize = 8;
+/// Register-tile height (rows sharing one B panel load).
+pub const MR: usize = 4;
+
+/// A unit of work for the backend's pool.  Tasks passed to one
+/// [`Backend::run_tasks`] call must touch disjoint data.
+pub type Task<'s> = Box<dyn FnOnce() + Send + 's>;
+
+/// An execution backend for host-side batched linear algebra.
+pub trait Backend: Sync {
+    /// Label used in bench reports (e.g. `scalar`, `blocked_t8`).
+    fn name(&self) -> String;
+
+    /// Worker-pool width (1 for serial backends).
+    fn threads(&self) -> usize;
+
+    /// (b, m, k) × (b, k, n) → (b, m, n).
+    fn batch_matmul(&self, a: &Tensor, b: &Tensor) -> Tensor;
+
+    /// (b, m, k) × (b, n, k) → (b, m, n)  (B transposed).
+    fn batch_matmul_nt(&self, a: &Tensor, b: &Tensor) -> Tensor;
+
+    /// (b, k, m) × (b, k, n) → (b, m, n)  (A transposed).
+    fn batch_matmul_tn(&self, a: &Tensor, b: &Tensor) -> Tensor;
+
+    /// Execute independent tasks, possibly in parallel.  Completion of
+    /// every task is guaranteed on return; ordering is not.
+    fn run_tasks<'s>(&self, tasks: Vec<Task<'s>>);
+}
+
+/// Carve `count` elements off the front of `*rest`, shrinking it in
+/// place — how output buffers are handed out as disjoint task tiles.
+pub fn carve<'a>(rest: &mut &'a mut [f32], count: usize) -> &'a mut [f32] {
+    let tmp = std::mem::take(rest);
+    let (head, tail) = tmp.split_at_mut(count);
+    *rest = tail;
+    head
+}
+
+/// Split `data` into contiguous chunks of `rows_per_task` rows of length
+/// `row_len` and run `f(chunk_index, chunk)` over the backend's pool.
+/// Chunk `i` starts at global row `i * rows_per_task`.
+pub fn par_row_chunks<F>(be: &dyn Backend, data: &mut [f32], row_len: usize,
+                         rows_per_task: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    if data.is_empty() || row_len == 0 {
+        return;
+    }
+    debug_assert_eq!(data.len() % row_len, 0);
+    let chunk = rows_per_task.max(1) * row_len;
+    let fr = &f;
+    let mut tasks: Vec<Task<'_>> = Vec::new();
+    for (i, c) in data.chunks_mut(chunk).enumerate() {
+        tasks.push(Box::new(move || fr(i, c)));
+    }
+    be.run_tasks(tasks);
+}
+
+// ---------------------------------------------------------------------------
+// Scalar — the single-threaded reference
+// ---------------------------------------------------------------------------
+
+/// The original single-threaded loops from `tensor/`; the oracle backend.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Scalar;
+
+impl Backend for Scalar {
+    fn name(&self) -> String {
+        "scalar".into()
+    }
+
+    fn threads(&self) -> usize {
+        1
+    }
+
+    fn batch_matmul(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        tensor::batch_matmul(a, b)
+    }
+
+    fn batch_matmul_nt(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        tensor::batch_matmul_nt(a, b)
+    }
+
+    fn batch_matmul_tn(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        tensor::batch_matmul_tn(a, b)
+    }
+
+    fn run_tasks<'s>(&self, tasks: Vec<Task<'s>>) {
+        for task in tasks {
+            task();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Blocked — cache-blocked microkernels + scoped worker pool
+// ---------------------------------------------------------------------------
+
+/// Parallel cache-blocked backend.
+#[derive(Debug, Clone, Copy)]
+pub struct Blocked {
+    threads: usize,
+    mc: usize,
+    kc: usize,
+}
+
+impl Blocked {
+    /// `threads == 0` resolves to the machine's available parallelism.
+    pub fn new(threads: usize) -> Self {
+        Blocked::with_blocks(threads, MC, KC)
+    }
+
+    /// Custom block sizes (property tests sweep these).
+    pub fn with_blocks(threads: usize, mc: usize, kc: usize) -> Self {
+        let threads = if threads == 0 {
+            available_threads()
+        } else {
+            threads
+        };
+        Blocked { threads, mc: mc.max(1), kc: kc.max(1) }
+    }
+}
+
+/// Detected worker count (≥ 1).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+impl Backend for Blocked {
+    fn name(&self) -> String {
+        format!("blocked_t{}", self.threads)
+    }
+
+    fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn batch_matmul(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        let (ba, m, ka) = dims3(a);
+        let (bb, kb, n) = dims3(b);
+        assert_eq!(ba, bb, "batch mismatch");
+        assert_eq!(ka, kb, "inner dim mismatch");
+        let mut out = vec![0.0f32; ba * m * n];
+        let (ad, bd) = (a.data(), b.data());
+        let (mc, kc) = (self.mc, self.kc);
+        {
+            let mut tasks: Vec<Task<'_>> = Vec::new();
+            let mut rest: &mut [f32] = &mut out;
+            for bi in 0..ba {
+                let ap = &ad[bi * m * ka..(bi + 1) * m * ka];
+                let bp = &bd[bi * ka * n..(bi + 1) * ka * n];
+                for i0 in (0..m).step_by(mc) {
+                    let rows = mc.min(m - i0);
+                    let tile = carve(&mut rest, rows * n);
+                    tasks.push(Box::new(move || {
+                        nn_tile(ap, bp, tile, i0, rows, ka, n, kc);
+                    }));
+                }
+            }
+            self.run_tasks(tasks);
+        }
+        Tensor::new(vec![ba, m, n], out)
+    }
+
+    fn batch_matmul_nt(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        let (ba, m, ka) = dims3(a);
+        let (bb, n, kb) = dims3(b);
+        assert_eq!(ba, bb, "batch mismatch");
+        assert_eq!(ka, kb, "inner dim mismatch");
+        let mut out = vec![0.0f32; ba * m * n];
+        let (ad, bd) = (a.data(), b.data());
+        let (mc, kc) = (self.mc, self.kc);
+        {
+            let mut tasks: Vec<Task<'_>> = Vec::new();
+            let mut rest: &mut [f32] = &mut out;
+            for bi in 0..ba {
+                let ap = &ad[bi * m * ka..(bi + 1) * m * ka];
+                let bp = &bd[bi * n * ka..(bi + 1) * n * ka];
+                for i0 in (0..m).step_by(mc) {
+                    let rows = mc.min(m - i0);
+                    let tile = carve(&mut rest, rows * n);
+                    tasks.push(Box::new(move || {
+                        nt_tile(ap, bp, tile, i0, rows, ka, n, kc);
+                    }));
+                }
+            }
+            self.run_tasks(tasks);
+        }
+        Tensor::new(vec![ba, m, n], out)
+    }
+
+    fn batch_matmul_tn(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        let (ba, ka, m) = dims3(a);
+        let (bb, kb, n) = dims3(b);
+        assert_eq!(ba, bb, "batch mismatch");
+        assert_eq!(ka, kb, "inner dim mismatch");
+        let mut out = vec![0.0f32; ba * m * n];
+        let (ad, bd) = (a.data(), b.data());
+        let mc = self.mc;
+        {
+            let mut tasks: Vec<Task<'_>> = Vec::new();
+            let mut rest: &mut [f32] = &mut out;
+            for bi in 0..ba {
+                let ap = &ad[bi * ka * m..(bi + 1) * ka * m];
+                let bp = &bd[bi * ka * n..(bi + 1) * ka * n];
+                for i0 in (0..m).step_by(mc) {
+                    let rows = mc.min(m - i0);
+                    let tile = carve(&mut rest, rows * n);
+                    tasks.push(Box::new(move || {
+                        tn_tile(ap, bp, tile, i0, rows, ka, m, n);
+                    }));
+                }
+            }
+            self.run_tasks(tasks);
+        }
+        Tensor::new(vec![ba, m, n], out)
+    }
+
+    fn run_tasks<'s>(&self, tasks: Vec<Task<'s>>) {
+        let t = self.threads.min(tasks.len()).max(1);
+        if t == 1 {
+            for task in tasks {
+                task();
+            }
+            return;
+        }
+        // Static round-robin keeps the partition independent of timing;
+        // tiles are uniform so this balances well without a work queue.
+        let mut buckets: Vec<Vec<Task<'s>>> =
+            (0..t).map(|_| Vec::new()).collect();
+        for (i, task) in tasks.into_iter().enumerate() {
+            buckets[i % t].push(task);
+        }
+        let mine = buckets.remove(0);
+        std::thread::scope(|scope| {
+            for bucket in buckets {
+                scope.spawn(move || {
+                    for task in bucket {
+                        task();
+                    }
+                });
+            }
+            for task in mine {
+                task();
+            }
+        });
+    }
+}
+
+/// NN tile: rows `i0..i0+rows` of A·B, k-blocked, axpy inner loop.
+/// Accumulation order per output element matches `tensor::batch_matmul`
+/// (k ascending, zero-skip), so results are bitwise-equal to Scalar.
+fn nn_tile(ap: &[f32], bp: &[f32], tile: &mut [f32], i0: usize, rows: usize,
+           ka: usize, n: usize, kc: usize) {
+    for kk in (0..ka).step_by(kc) {
+        let kend = (kk + kc).min(ka);
+        for r in 0..rows {
+            let arow = &ap[(i0 + r) * ka + kk..(i0 + r) * ka + kend];
+            let orow = &mut tile[r * n..(r + 1) * n];
+            for (k, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &bp[(kk + k) * n..(kk + k + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+}
+
+/// NT tile: rows `i0..i0+rows` of A·Bᵀ with an MR×NR register tile —
+/// `NR` independent accumulator lanes per row so the dot products
+/// vectorise, `MR` rows sharing each B panel load.  Per-element k order
+/// is ascending, matching `tensor::batch_matmul_nt` bitwise.
+fn nt_tile(ap: &[f32], bp: &[f32], tile: &mut [f32], i0: usize, rows: usize,
+           ka: usize, n: usize, kc: usize) {
+    let mut r0 = 0;
+    while r0 < rows {
+        let mr = MR.min(rows - r0);
+        let mut j0 = 0;
+        while j0 < n {
+            let nr = NR.min(n - j0);
+            let mut acc = [[0.0f32; NR]; MR];
+            for kk in (0..ka).step_by(kc) {
+                let kend = (kk + kc).min(ka);
+                for k in kk..kend {
+                    let mut bvals = [0.0f32; NR];
+                    for (jj, bv) in bvals[..nr].iter_mut().enumerate() {
+                        *bv = bp[(j0 + jj) * ka + k];
+                    }
+                    for (ri, accrow) in acc[..mr].iter_mut().enumerate() {
+                        let av = ap[(i0 + r0 + ri) * ka + k];
+                        for (jj, acc1) in accrow[..nr].iter_mut()
+                            .enumerate()
+                        {
+                            *acc1 += av * bvals[jj];
+                        }
+                    }
+                }
+            }
+            for (ri, accrow) in acc[..mr].iter().enumerate() {
+                let orow = &mut tile[(r0 + ri) * n + j0
+                                     ..(r0 + ri) * n + j0 + nr];
+                orow.copy_from_slice(&accrow[..nr]);
+            }
+            j0 += nr;
+        }
+        r0 += mr;
+    }
+}
+
+/// TN tile: output rows `i0..i0+rows` (columns of A), k-ascending axpy —
+/// bitwise-equal to `tensor::batch_matmul_tn`.
+fn tn_tile(ap: &[f32], bp: &[f32], tile: &mut [f32], i0: usize, rows: usize,
+           ka: usize, m: usize, n: usize) {
+    for k in 0..ka {
+        let arow = &ap[k * m..(k + 1) * m];
+        let brow = &bp[k * n..(k + 1) * n];
+        for r in 0..rows {
+            let av = arow[i0 + r];
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut tile[r * n..(r + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Configuration plumbing
+// ---------------------------------------------------------------------------
+
+/// Which backend family to instantiate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Scalar,
+    Blocked,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "scalar" => Ok(BackendKind::Scalar),
+            "blocked" => Ok(BackendKind::Blocked),
+            other => bail!("unknown exec backend {other:?} \
+                            (expected \"scalar\" or \"blocked\")"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Scalar => "scalar",
+            BackendKind::Blocked => "blocked",
+        }
+    }
+}
+
+/// Backend selection carried through config / CLI / harness options.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecOptions {
+    pub kind: BackendKind,
+    /// Worker threads; 0 = auto-detect.  Ignored by `Scalar`.
+    pub threads: usize,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        ExecOptions { kind: BackendKind::Blocked, threads: 0 }
+    }
+}
+
+impl ExecOptions {
+    pub fn scalar() -> Self {
+        ExecOptions { kind: BackendKind::Scalar, threads: 1 }
+    }
+
+    pub fn blocked(threads: usize) -> Self {
+        ExecOptions { kind: BackendKind::Blocked, threads }
+    }
+
+    /// Instantiate the configured backend.
+    pub fn build(self) -> Box<dyn Backend> {
+        match self.kind {
+            BackendKind::Scalar => Box::new(Scalar),
+            BackendKind::Blocked => Box::new(Blocked::new(self.threads)),
+        }
+    }
+}
+
+/// Cheap startup self-check: the backend's three matmul flavours must
+/// reproduce the Scalar reference on a non-trivial case.  Run by
+/// `spark train` before committing to a long run.
+pub fn self_check(be: &dyn Backend) -> Result<()> {
+    let mut rng = crate::tensor::Rng::new(0xC0FFEE);
+    let a = Tensor::randn(vec![3, 37, 19], &mut rng);
+    let b = Tensor::randn(vec![3, 19, 23], &mut rng);
+    let bt = Tensor::randn(vec![3, 23, 19], &mut rng);
+    let at = Tensor::randn(vec![3, 19, 37], &mut rng);
+    let checks = [
+        ("nn", be.batch_matmul(&a, &b), Scalar.batch_matmul(&a, &b)),
+        ("nt", be.batch_matmul_nt(&a, &bt),
+         Scalar.batch_matmul_nt(&a, &bt)),
+        ("tn", be.batch_matmul_tn(&at, &b),
+         Scalar.batch_matmul_tn(&at, &b)),
+    ];
+    for (name, got, want) in &checks {
+        let err = got.max_abs_diff(want);
+        if err > 1e-5 {
+            bail!("backend {} failed the {name} self-check (max err {err})",
+                  be.name());
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn randn(shape: &[usize], seed: u64) -> Tensor {
+        let mut r = Rng::new(seed);
+        Tensor::randn(shape.to_vec(), &mut r)
+    }
+
+    #[test]
+    fn blocked_nn_matches_scalar_bitwise() {
+        for (ba, m, k, n, seed) in [(1, 1, 1, 1, 1u64), (2, 7, 13, 5, 2),
+                                    (3, 64, 96, 33, 3), (1, 130, 17, 9, 4)] {
+            let a = randn(&[ba, m, k], seed);
+            let b = randn(&[ba, k, n], seed + 100);
+            let want = Scalar.batch_matmul(&a, &b);
+            for be in [Blocked::with_blocks(2, 3, 4),
+                       Blocked::with_blocks(4, 64, 256)] {
+                let got = be.batch_matmul(&a, &b);
+                assert_eq!(got.data(), want.data(),
+                           "nn ({ba},{m},{k},{n}) via {}", be.name());
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_nt_matches_scalar_bitwise() {
+        for (ba, m, k, n, seed) in [(1, 1, 3, 1, 1u64), (2, 9, 13, 7, 2),
+                                    (2, 65, 40, 31, 3), (1, 4, 1, 21, 4)] {
+            let a = randn(&[ba, m, k], seed);
+            let b = randn(&[ba, n, k], seed + 100);
+            let want = Scalar.batch_matmul_nt(&a, &b);
+            for be in [Blocked::with_blocks(2, 5, 3),
+                       Blocked::with_blocks(8, 64, 256)] {
+                let got = be.batch_matmul_nt(&a, &b);
+                assert_eq!(got.data(), want.data(),
+                           "nt ({ba},{m},{k},{n}) via {}", be.name());
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_tn_matches_scalar_bitwise() {
+        for (ba, m, k, n, seed) in [(1, 2, 3, 4, 1u64), (2, 11, 6, 13, 2),
+                                    (2, 70, 24, 18, 3)] {
+            let a = randn(&[ba, k, m], seed);
+            let b = randn(&[ba, k, n], seed + 100);
+            let want = Scalar.batch_matmul_tn(&a, &b);
+            for be in [Blocked::with_blocks(3, 7, 2),
+                       Blocked::with_blocks(2, 64, 256)] {
+                let got = be.batch_matmul_tn(&a, &b);
+                assert_eq!(got.data(), want.data(),
+                           "tn ({ba},{m},{k},{n}) via {}", be.name());
+            }
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_bits() {
+        let a = randn(&[2, 50, 30], 7);
+        let b = randn(&[2, 30, 41], 8);
+        let base = Blocked::with_blocks(1, 16, 8).batch_matmul(&a, &b);
+        for t in [2, 3, 8, 32] {
+            let got = Blocked::with_blocks(t, 16, 8).batch_matmul(&a, &b);
+            assert_eq!(got.data(), base.data(), "threads={t}");
+        }
+    }
+
+    #[test]
+    fn run_tasks_executes_everything() {
+        let mut hits = vec![0u8; 23];
+        {
+            let be = Blocked::new(4);
+            let mut tasks: Vec<Task<'_>> = Vec::new();
+            for h in hits.iter_mut() {
+                tasks.push(Box::new(move || {
+                    *h += 1;
+                }));
+            }
+            be.run_tasks(tasks);
+        }
+        assert!(hits.iter().all(|&h| h == 1));
+    }
+
+    #[test]
+    fn par_row_chunks_covers_all_rows() {
+        let mut data = vec![0.0f32; 7 * 5];
+        par_row_chunks(&Blocked::new(3), &mut data, 5, 2, |ci, chunk| {
+            for (r, row) in chunk.chunks_exact_mut(5).enumerate() {
+                for x in row.iter_mut() {
+                    *x = (ci * 2 + r) as f32;
+                }
+            }
+        });
+        for (r, row) in data.chunks_exact(5).enumerate() {
+            assert!(row.iter().all(|&x| x == r as f32), "row {r}");
+        }
+    }
+
+    #[test]
+    fn empty_shapes_are_fine() {
+        let a = Tensor::zeros(vec![0, 4, 3]);
+        let b = Tensor::zeros(vec![0, 3, 2]);
+        assert_eq!(Blocked::new(2).batch_matmul(&a, &b).shape(),
+                   &[0, 4, 2]);
+        let a = Tensor::zeros(vec![2, 0, 3]);
+        let b = Tensor::zeros(vec![2, 3, 4]);
+        assert_eq!(Blocked::new(2).batch_matmul(&a, &b).len(), 0);
+    }
+
+    #[test]
+    fn options_build_and_parse() {
+        assert_eq!(BackendKind::parse("scalar").unwrap(),
+                   BackendKind::Scalar);
+        assert_eq!(BackendKind::parse("blocked").unwrap(),
+                   BackendKind::Blocked);
+        assert!(BackendKind::parse("gpu").is_err());
+        let be = ExecOptions::blocked(2).build();
+        assert_eq!(be.threads(), 2);
+        assert_eq!(be.name(), "blocked_t2");
+        assert_eq!(ExecOptions::scalar().build().name(), "scalar");
+        assert!(ExecOptions::default().build().threads() >= 1);
+    }
+
+    #[test]
+    fn self_check_passes_for_both() {
+        self_check(&Scalar).unwrap();
+        self_check(&Blocked::new(0)).unwrap();
+    }
+}

@@ -7,6 +7,7 @@
 //! spark bench-forward      Fig 10 sweep (E1)
 //! spark bench-backward     Fig 11 sweep (E2)
 //! spark bench-e2e          Fig 12 encoder latency (E4)
+//! spark bench-host         host attention path: scalar vs blocked backend
 //! spark accuracy           §4.2.3 error table (E3)
 //! spark io-report          §2.3 HBM traffic claim (E5)
 //! spark project            V100-projected Fig 10/11 at paper scale
@@ -14,10 +15,12 @@
 //! ```
 
 use anyhow::{bail, Result};
+use log::info;
 use sparkattention::bench::Options;
-use sparkattention::cli::Command;
+use sparkattention::cli::{Command, Parsed};
 use sparkattention::config::TrainConfig;
 use sparkattention::coordinator::{self, harness::HarnessOptions, Trainer};
+use sparkattention::exec::{self, BackendKind, ExecOptions};
 use sparkattention::jsonio;
 use sparkattention::perfmodel::V100;
 use sparkattention::runtime::Engine;
@@ -39,6 +42,7 @@ fn top_usage() -> String {
          \x20 bench-forward      Fig 10: MHA-Forward sweep (E1)\n\
          \x20 bench-backward     Fig 11: MHA-Backward sweep (E2)\n\
          \x20 bench-e2e          Fig 12: encoder-forward latency (E4)\n\
+         \x20 bench-host         host attention: exec-backend comparison\n\
          \x20 accuracy           §4.2.3 accuracy table (E3)\n\
          \x20 io-report          §2.3 HBM traffic model (E5)\n\
          \x20 project            V100-projected figures at paper scale\n\
@@ -58,6 +62,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "bench-forward" => cmd_bench(rest, Figure::Forward),
         "bench-backward" => cmd_bench(rest, Figure::Backward),
         "bench-e2e" => cmd_bench(rest, Figure::E2e),
+        "bench-host" => cmd_bench_host(rest),
         "accuracy" => cmd_accuracy(rest),
         "io-report" => cmd_io_report(rest),
         "project" => cmd_project(rest),
@@ -74,6 +79,18 @@ fn dispatch(args: &[String]) -> Result<()> {
     }
 }
 
+/// Apply `--backend` / `--threads` overrides on top of a base selection.
+fn exec_from_flags(p: &Parsed, base: ExecOptions) -> Result<ExecOptions> {
+    let mut e = base;
+    if let Some(b) = p.get("backend") {
+        e.kind = BackendKind::parse(b)?;
+    }
+    if let Some(t) = p.get_usize("threads")? {
+        e.threads = t;
+    }
+    Ok(e)
+}
+
 fn cmd_train(args: &[String]) -> Result<()> {
     let cmd = Command::new("train", "train the LM via the train_step artifact")
         .flag("config", "TOML config path", None)
@@ -81,7 +98,9 @@ fn cmd_train(args: &[String]) -> Result<()> {
         .flag("steps", "training steps", None)
         .flag("seed", "run seed", None)
         .flag("checkpoint-every", "steps between checkpoints (0 = off)", None)
-        .flag("metrics-out", "write metrics JSON here", None);
+        .flag("metrics-out", "write metrics JSON here", None)
+        .flag("backend", "host exec backend: scalar | blocked", None)
+        .flag("threads", "host exec worker threads (0 = auto)", None);
     let p = cmd.parse(args)?;
     let mut cfg = match p.get("config") {
         Some(path) => TrainConfig::load(path)?,
@@ -102,6 +121,18 @@ fn cmd_train(args: &[String]) -> Result<()> {
     if let Some(m) = p.get("metrics-out") {
         cfg.metrics_out = Some(m.to_string());
     }
+    cfg.exec = exec_from_flags(&p, cfg.exec)?;
+
+    // Training compute runs inside the device artifacts; the host
+    // backend serves the surrounding oracle/witness paths.  Exercise it
+    // end-to-end up front (matmul self-check + the full streaming
+    // attention witness vs the oracle) so a broken backend aborts here,
+    // not mid-evaluation.
+    let backend = cfg.exec.build();
+    exec::self_check(backend.as_ref())?;
+    sparkattention::attention::witness_self_check(backend.as_ref())?;
+    info!("host exec backend {} ({} threads): matmul self-check and \
+           attention witness passed", backend.name(), backend.threads());
 
     let engine = Engine::new(&cfg.artifact_dir)?;
     let metrics_out = cfg.metrics_out.clone();
@@ -154,6 +185,10 @@ fn cmd_bench(args: &[String], fig: Figure) -> Result<()> {
             iters: p.get_usize("iters")?.unwrap_or(3),
         },
         mem_budget: (p.get_usize("mem-budget-gb")?.unwrap_or(8)) << 30,
+        // The artifact sweeps execute on the device engine; the host
+        // backend only matters for `bench-host` and the bench binaries'
+        // host sections, so no --backend/--threads flags here.
+        exec: ExecOptions::default(),
     };
     let report = match fig {
         Figure::Forward => coordinator::fig10_forward(&engine, opts)?,
@@ -174,6 +209,48 @@ fn cmd_bench(args: &[String], fig: Figure) -> Result<()> {
     for (v, b) in pairs {
         if let Some((mean, max)) = report.speedup_summary(v, b) {
             println!("speedup {v} vs {b}: avg {mean:.2}× (max {max:.2}×)");
+        }
+    }
+    Ok(())
+}
+
+/// `spark bench-host` — the artifact-free figure: scalar vs blocked
+/// execution of the pure-Rust attention path.
+fn cmd_bench_host(args: &[String]) -> Result<()> {
+    let cmd = Command::new("bench-host",
+                           "host attention path: exec-backend comparison")
+        .flag("ns", "comma-separated sequence lengths", Some("256,512"))
+        .flag("bh", "batch × heads", Some("8"))
+        .flag("d", "head dimension", Some("64"))
+        .flag("iters", "measured iterations", Some("3"))
+        .flag("warmup", "warmup iterations", Some("1"))
+        .flag("backend", "host exec backend: scalar | blocked", None)
+        .flag("threads", "host exec worker threads (0 = auto)", None)
+        .flag("json-out", "write JSON report here", None)
+        .switch("backward", "bench the backward pass instead");
+    let p = cmd.parse(args)?;
+    let ns = p.get("ns").unwrap_or("256,512").split(',')
+        .map(|s| s.trim().parse::<usize>().map_err(
+            |_| anyhow::anyhow!("--ns expects integers, got {s:?}")))
+        .collect::<Result<Vec<_>>>()?;
+    let opts = HarnessOptions {
+        bench: Options {
+            warmup_iters: p.get_usize("warmup")?.unwrap_or(1),
+            iters: p.get_usize("iters")?.unwrap_or(3),
+        },
+        exec: exec_from_flags(&p, ExecOptions::default())?,
+        ..HarnessOptions::default()
+    };
+    let report = coordinator::host_backend_report(
+        &ns, p.get_usize("bh")?.unwrap_or(8),
+        p.get_usize("d")?.unwrap_or(64), p.switch("backward"), opts)?;
+    print!("{}", report.emit(p.get("json-out"))?);
+    let blocked = opts.exec.build().name();
+    if blocked != "scalar" {
+        if let Some((mean, max)) =
+            report.speedup_summary(&blocked, "scalar") {
+            println!("host speedup {blocked} vs scalar: avg {mean:.2}× \
+                      (max {max:.2}×)");
         }
     }
     Ok(())

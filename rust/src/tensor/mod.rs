@@ -285,7 +285,8 @@ pub fn softmax_lastdim(t: &mut Tensor) {
     }
 }
 
-fn dims3(t: &Tensor) -> (usize, usize, usize) {
+/// Destructure a rank-3 shape (shared with the `exec` backends).
+pub(crate) fn dims3(t: &Tensor) -> (usize, usize, usize) {
     match *t.shape() {
         [a, b, c] => (a, b, c),
         ref s => panic!("expected rank-3 tensor, got {s:?}"),

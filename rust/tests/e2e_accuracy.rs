@@ -103,6 +103,7 @@ fn fig12_reports_all_variants() {
     let opts = HarnessOptions {
         bench: sparkattention::bench::Options { warmup_iters: 0, iters: 1 },
         mem_budget: 8 << 30,
+        ..HarnessOptions::default()
     };
     let report = fig12_e2e(&eng, opts).expect("fig12");
     let variants: std::collections::BTreeSet<&str> =

@@ -1,0 +1,188 @@
+//! Property tests for the execution-backend layer: the `Blocked` backend
+//! must agree with the `Scalar` reference elementwise on randomized
+//! shapes and block sizes, and must be bitwise-identical to itself
+//! across worker-thread counts (1, 2, 8) — the determinism contract the
+//! harness and the streaming attention paths rely on.
+
+use sparkattention::attention::{self, AttnParams};
+use sparkattention::exec::{Backend, Blocked, Scalar};
+use sparkattention::proptest::{check, default_cases, Gen, OneOf, USize};
+use sparkattention::tensor::{Rng, Tensor};
+
+/// Random batched-matmul problem: shape + block sizes + threads.
+#[derive(Debug, Clone)]
+struct MatmulCase {
+    ba: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    mc: usize,
+    kc: usize,
+    seed: u64,
+}
+
+struct MatmulGen;
+
+impl Gen for MatmulGen {
+    type Value = MatmulCase;
+
+    fn generate(&self, rng: &mut Rng) -> MatmulCase {
+        MatmulCase {
+            ba: USize { lo: 1, hi: 3 }.generate(rng),
+            m: USize { lo: 1, hi: 70 }.generate(rng),
+            k: USize { lo: 1, hi: 40 }.generate(rng),
+            n: USize { lo: 1, hi: 50 }.generate(rng),
+            mc: OneOf(vec![1usize, 3, 8, 64]).generate(rng),
+            kc: OneOf(vec![2usize, 7, 256]).generate(rng),
+            seed: rng.next_u64(),
+        }
+    }
+}
+
+#[test]
+fn blocked_matmuls_match_scalar_for_any_blocking() {
+    check("blocked=scalar", &MatmulGen, default_cases(), |c| {
+        let mut r = Rng::new(c.seed);
+        let a_nn = Tensor::randn(vec![c.ba, c.m, c.k], &mut r);
+        let b_nn = Tensor::randn(vec![c.ba, c.k, c.n], &mut r);
+        let b_nt = Tensor::randn(vec![c.ba, c.n, c.k], &mut r);
+        let a_tn = Tensor::randn(vec![c.ba, c.k, c.m], &mut r);
+        let be = Blocked::with_blocks(2, c.mc, c.kc);
+        let pairs = [
+            ("nn", be.batch_matmul(&a_nn, &b_nn),
+             Scalar.batch_matmul(&a_nn, &b_nn)),
+            ("nt", be.batch_matmul_nt(&a_nn, &b_nt),
+             Scalar.batch_matmul_nt(&a_nn, &b_nt)),
+            ("tn", be.batch_matmul_tn(&a_tn, &b_nn),
+             Scalar.batch_matmul_tn(&a_tn, &b_nn)),
+        ];
+        for (name, got, want) in &pairs {
+            let err = got.max_abs_diff(want);
+            if err > 1e-5 {
+                return Err(format!("{name} err {err} for {c:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn blocked_matmuls_identical_across_threads() {
+    check("thread-invariance", &MatmulGen, default_cases() / 2, |c| {
+        let mut r = Rng::new(c.seed);
+        let a = Tensor::randn(vec![c.ba, c.m, c.k], &mut r);
+        let b = Tensor::randn(vec![c.ba, c.k, c.n], &mut r);
+        let bt = Tensor::randn(vec![c.ba, c.n, c.k], &mut r);
+        let base = Blocked::with_blocks(1, c.mc, c.kc);
+        let want_nn = base.batch_matmul(&a, &b);
+        let want_nt = base.batch_matmul_nt(&a, &bt);
+        for threads in [2usize, 8] {
+            let be = Blocked::with_blocks(threads, c.mc, c.kc);
+            if be.batch_matmul(&a, &b).data() != want_nn.data() {
+                return Err(format!("nn bits differ at t={threads}: {c:?}"));
+            }
+            if be.batch_matmul_nt(&a, &bt).data() != want_nt.data() {
+                return Err(format!("nt bits differ at t={threads}: {c:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Random attention problem with valid streaming blocks.
+#[derive(Debug, Clone)]
+struct AttnCase {
+    bh: usize,
+    n: usize,
+    d: usize,
+    block_q: usize,
+    block_k: usize,
+    causal: bool,
+    seed: u64,
+}
+
+struct AttnGen;
+
+impl Gen for AttnGen {
+    type Value = AttnCase;
+
+    fn generate(&self, rng: &mut Rng) -> AttnCase {
+        let n = OneOf(vec![4usize, 8, 16, 32, 48]).generate(rng);
+        let divisors: Vec<usize> = (1..=n).filter(|b| n % b == 0).collect();
+        let blocks = OneOf(divisors);
+        AttnCase {
+            bh: USize { lo: 1, hi: 3 }.generate(rng),
+            n,
+            d: OneOf(vec![2usize, 4, 8, 16]).generate(rng),
+            block_q: blocks.generate(rng),
+            block_k: blocks.generate(rng),
+            causal: rng.uniform() < 0.5,
+            seed: rng.next_u64(),
+        }
+    }
+}
+
+fn qkv(c: &AttnCase) -> (Tensor, Tensor, Tensor, Tensor) {
+    let mut r = Rng::new(c.seed);
+    (Tensor::randn(vec![c.bh, c.n, c.d], &mut r),
+     Tensor::randn(vec![c.bh, c.n, c.d], &mut r),
+     Tensor::randn(vec![c.bh, c.n, c.d], &mut r),
+     Tensor::randn(vec![c.bh, c.n, c.d], &mut r))
+}
+
+/// The full attention path (oracle fwd/bwd + streamed fwd/bwd) computed
+/// under `Blocked` must agree with `Scalar` — for any shape, any block
+/// size, and be bitwise-stable across thread counts.
+#[test]
+fn attention_path_backend_parity_and_thread_invariance() {
+    check("attn-backend-parity", &AttnGen, default_cases() / 2, |c| {
+        let (q, k, v, dout) = qkv(&c);
+        let p = AttnParams::new(c.d, c.causal);
+
+        let fwd_s = attention::mha_forward(&q, &k, &v, p, &Scalar);
+        let stream_s = attention::mha_forward_streaming(
+            &q, &k, &v, p, c.block_q, c.block_k, &Scalar);
+        let bwd_s = attention::mha_backward_streaming(
+            &q, &k, &v, &dout, &fwd_s.lse, p, c.block_q, c.block_k,
+            &Scalar);
+
+        let mut last: Option<(Tensor, Tensor, Tensor)> = None;
+        for threads in [1usize, 2, 8] {
+            let be = Blocked::new(threads);
+            let fwd = attention::mha_forward(&q, &k, &v, p, &be);
+            if fwd.output.max_abs_diff(&fwd_s.output) > 1e-5 {
+                return Err(format!("fwd mismatch t={threads}: {c:?}"));
+            }
+            let stream = attention::mha_forward_streaming(
+                &q, &k, &v, p, c.block_q, c.block_k, &be);
+            if stream.output.data() != stream_s.output.data()
+                || stream.lse.data() != stream_s.lse.data()
+            {
+                return Err(format!(
+                    "streamed fwd bits differ t={threads}: {c:?}"));
+            }
+            let bwd = attention::mha_backward_streaming(
+                &q, &k, &v, &dout, &fwd_s.lse, p, c.block_q, c.block_k,
+                &be);
+            for (name, got, want) in [("dq", &bwd.dq, &bwd_s.dq),
+                                      ("dk", &bwd.dk, &bwd_s.dk),
+                                      ("dv", &bwd.dv, &bwd_s.dv)] {
+                let err = got.max_abs_diff(want);
+                if err > 1e-4 {
+                    return Err(format!(
+                        "{name} err {err} t={threads}: {c:?}"));
+                }
+            }
+            if let Some((dq, dk, dv)) = &last {
+                if bwd.dq.data() != dq.data() || bwd.dk.data() != dk.data()
+                    || bwd.dv.data() != dv.data()
+                {
+                    return Err(format!(
+                        "bwd bits differ across threads: {c:?}"));
+                }
+            }
+            last = Some((bwd.dq, bwd.dk, bwd.dv));
+        }
+        Ok(())
+    });
+}

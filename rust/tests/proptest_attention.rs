@@ -3,6 +3,7 @@
 
 use sparkattention::attention::{self, AttnParams};
 use sparkattention::data::Batcher;
+use sparkattention::exec::Scalar;
 use sparkattention::iomodel::{self, MhaShape};
 use sparkattention::proptest::{check, default_cases, Gen, OneOf, USize};
 use sparkattention::tensor::{bf16, Rng, Tensor};
@@ -56,9 +57,9 @@ fn streaming_equals_oracle_for_any_blocks() {
     check("streaming=oracle", &MhaGen, default_cases(), |c| {
         let (q, k, v) = qkv(&c);
         let p = AttnParams::new(c.d, c.causal);
-        let a = attention::mha_forward(&q, &k, &v, p);
-        let b = attention::mha_forward_streaming(&q, &k, &v, p,
-                                                 c.block_q, c.block_k);
+        let a = attention::mha_forward(&q, &k, &v, p, &Scalar);
+        let b = attention::mha_forward_streaming(
+            &q, &k, &v, p, c.block_q, c.block_k, &Scalar);
         let err = a.output.max_abs_diff(&b.output);
         if err > 1e-3 {
             return Err(format!("output err {err} for {c:?}"));
@@ -78,7 +79,7 @@ fn output_within_v_hull() {
     check("output-in-hull", &MhaGen, default_cases(), |c| {
         let (q, k, v) = qkv(&c);
         let p = AttnParams::new(c.d, c.causal);
-        let o = attention::mha_forward(&q, &k, &v, p).output;
+        let o = attention::mha_forward(&q, &k, &v, p, &Scalar).output;
         for b in 0..c.bh {
             for col in 0..c.d {
                 let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
@@ -107,7 +108,7 @@ fn causal_ignores_future() {
         c.causal = true;
         let (q, k, v) = qkv(&c);
         let p = AttnParams::new(c.d, true);
-        let o1 = attention::mha_forward(&q, &k, &v, p).output;
+        let o1 = attention::mha_forward(&q, &k, &v, p, &Scalar).output;
         // perturb the last K/V row; everything before must be unchanged
         let mut k2 = k.clone();
         let mut v2 = v.clone();
@@ -117,7 +118,7 @@ fn causal_ignores_future() {
                 v2.set(&[b, c.n - 1, col], -9.0);
             }
         }
-        let o2 = attention::mha_forward(&q, &k2, &v2, p).output;
+        let o2 = attention::mha_forward(&q, &k2, &v2, p, &Scalar).output;
         for b in 0..c.bh {
             for i in 0..c.n - 1 {
                 for col in 0..c.d {
@@ -140,7 +141,7 @@ fn zero_cotangent_zero_grads() {
         let (q, k, v) = qkv(&c);
         let p = AttnParams::new(c.d, c.causal);
         let dout = Tensor::zeros(vec![c.bh, c.n, c.d]);
-        let g = attention::mha_backward(&q, &k, &v, &dout, p);
+        let g = attention::mha_backward(&q, &k, &v, &dout, p, &Scalar);
         for (nm, t) in [("dq", &g.dq), ("dk", &g.dk), ("dv", &g.dv)] {
             if t.data().iter().any(|&x| x != 0.0) {
                 return Err(format!("{nm} nonzero under zero cotangent"));

@@ -5,6 +5,7 @@
 //! stays green on a fresh checkout.
 
 use sparkattention::attention;
+use sparkattention::exec::Scalar;
 use sparkattention::runtime::{Engine, HostValue};
 use sparkattention::tensor::{Rng, Tensor};
 
@@ -46,7 +47,7 @@ fn fused_fwd_matches_rust_oracle() {
     let o_ref = attention::mha_forward(&q, &k, &v, attention::AttnParams {
         causal: false,
         scale: 1.0 / (d as f32).sqrt(),
-    }).output;
+    }, &Scalar).output;
     let err = o_dev.max_abs_diff(&o_ref);
     assert!(err < 0.05, "device vs oracle max err {err}");
 }
@@ -74,7 +75,7 @@ fn fused_fwd_causal_matches_rust_oracle() {
     let o_ref = attention::mha_forward(&q, &k, &v, attention::AttnParams {
         causal: true,
         scale: 1.0 / (d as f32).sqrt(),
-    }).output;
+    }, &Scalar).output;
     let err = o_dev.max_abs_diff(&o_ref);
     assert!(err < 0.05, "causal device vs oracle max err {err}");
 }
@@ -108,7 +109,8 @@ fn fused_bwd_matches_rust_oracle() {
     ]).expect("bwd");
     let params = attention::AttnParams { causal: false,
                                          scale: 1.0 / (d as f32).sqrt() };
-    let grads = attention::mha_backward(&q, &k, &v, &dout, params);
+    let grads = attention::mha_backward(&q, &k, &v, &dout, params,
+                                        &Scalar);
     for (dev, oracle, nm) in [(&b[0], &grads.dq, "dq"),
                               (&b[1], &grads.dk, "dk"),
                               (&b[2], &grads.dv, "dv")] {

@@ -1,0 +1,451 @@
+//! Typed stub of the `xla` PJRT binding.
+//!
+//! The runtime layer (`sparkattention::runtime`) is written against the
+//! PJRT C-API wrapper crate.  That crate needs a libxla build which this
+//! environment does not ship, so this path dependency provides the same
+//! type surface with two behaviours:
+//!
+//! * **Literals are real.**  `Literal` is a faithful host-side container
+//!   (element type + dims + little-endian bytes) with working encode /
+//!   decode / convert, so `HostValue ⇄ Literal` round-trips — and the unit
+//!   tests exercising them — behave exactly as with the real binding.
+//! * **The device is absent.**  `PjRtClient::cpu()` returns a descriptive
+//!   error, so anything needing artifact execution fails fast with an
+//!   actionable message instead of segfaulting on a missing shared object.
+//!   Integration tests skip before reaching this (no `manifest.json`).
+//!
+//! Swapping in a real PJRT binding is a Cargo.toml change; no runtime
+//! source edits are required as long as this surface is kept in sync.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` closely enough for `anyhow` interop.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Self {
+        Error { msg: msg.into() }
+    }
+
+    fn backend_unavailable() -> Self {
+        Error::new(
+            "PJRT backend unavailable: this build uses the offline xla \
+             stub (rust/vendor/xla); artifact execution requires a real \
+             PJRT binding")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types accepted when building literals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    Bf16,
+    F16,
+    F32,
+    F64,
+    S32,
+    S64,
+    U32,
+    U64,
+}
+
+/// Primitive types reported by array shapes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    Pred,
+    Bf16,
+    F16,
+    F32,
+    F64,
+    S32,
+    S64,
+    U32,
+    U64,
+    Tuple,
+}
+
+impl ElementType {
+    fn primitive(self) -> PrimitiveType {
+        match self {
+            ElementType::Pred => PrimitiveType::Pred,
+            ElementType::Bf16 => PrimitiveType::Bf16,
+            ElementType::F16 => PrimitiveType::F16,
+            ElementType::F32 => PrimitiveType::F32,
+            ElementType::F64 => PrimitiveType::F64,
+            ElementType::S32 => PrimitiveType::S32,
+            ElementType::S64 => PrimitiveType::S64,
+            ElementType::U32 => PrimitiveType::U32,
+            ElementType::U64 => PrimitiveType::U64,
+        }
+    }
+}
+
+fn byte_size(ty: PrimitiveType) -> Result<usize> {
+    Ok(match ty {
+        PrimitiveType::Pred => 1,
+        PrimitiveType::Bf16 | PrimitiveType::F16 => 2,
+        PrimitiveType::F32 | PrimitiveType::S32 | PrimitiveType::U32 => 4,
+        PrimitiveType::F64 | PrimitiveType::S64 | PrimitiveType::U64 => 8,
+        PrimitiveType::Tuple => {
+            return Err(Error::new("tuples have no element byte size"))
+        }
+    })
+}
+
+/// Shape of an array literal: primitive type + dimensions.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayShape {
+    ty: PrimitiveType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn primitive_type(&self) -> PrimitiveType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Host types a literal can decode into.
+pub trait NativeType: Sized {
+    const PRIMITIVE: PrimitiveType;
+    fn read_le(bytes: &[u8]) -> Self;
+}
+
+macro_rules! native {
+    ($t:ty, $prim:expr, $n:expr) => {
+        impl NativeType for $t {
+            const PRIMITIVE: PrimitiveType = $prim;
+            fn read_le(bytes: &[u8]) -> Self {
+                let mut buf = [0u8; $n];
+                buf.copy_from_slice(bytes);
+                <$t>::from_le_bytes(buf)
+            }
+        }
+    };
+}
+
+native!(f32, PrimitiveType::F32, 4);
+native!(f64, PrimitiveType::F64, 8);
+native!(i32, PrimitiveType::S32, 4);
+native!(i64, PrimitiveType::S64, 8);
+native!(u32, PrimitiveType::U32, 4);
+native!(u64, PrimitiveType::U64, 8);
+
+fn bf16_bits_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h >> 15) as u32) << 31;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let frac = (h & 0x3FF) as u32;
+    let bits = match (exp, frac) {
+        (0, 0) => sign,
+        (0, f) => {
+            // subnormal: value = f × 2⁻²⁴; renormalise for f32.  The top
+            // set bit of f sits at position p = 10 − shift, so the f32
+            // exponent is 127 + (p − 24) = 113 − shift and the mantissa is
+            // the remainder shifted to fill 23 bits (leading 1 masked off).
+            let shift = f.leading_zeros() - 21;
+            let exp32 = 113 - shift;
+            let frac32 = (f << (13 + shift)) & 0x007F_FFFF;
+            sign | (exp32 << 23) | frac32
+        }
+        (0x1F, 0) => sign | 0x7F80_0000,
+        (0x1F, f) => sign | 0x7F80_0000 | (f << 13) | 0x0040_0000,
+        (e, f) => sign | ((e + 127 - 15) << 23) | (f << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// A host-resident XLA literal: array payload or tuple of literals.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Literal {
+    Array {
+        ty: PrimitiveType,
+        dims: Vec<i64>,
+        /// Little-endian element bytes, row-major.
+        data: Vec<u8>,
+    },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// Build an array literal from raw little-endian bytes.
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType, dims: &[usize], data: &[u8]) -> Result<Literal>
+    {
+        let prim = ty.primitive();
+        let count: usize = dims.iter().product();
+        let want = count * byte_size(prim)?;
+        if data.len() != want {
+            return Err(Error::new(format!(
+                "literal {dims:?} of {prim:?} needs {want} bytes, got {}",
+                data.len())));
+        }
+        Ok(Literal::Array {
+            ty: prim,
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            data: data.to_vec(),
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self {
+            Literal::Array { ty, dims, .. } => Ok(ArrayShape {
+                ty: *ty,
+                dims: dims.clone(),
+            }),
+            Literal::Tuple(_) => {
+                Err(Error::new("tuple literal has no array shape"))
+            }
+        }
+    }
+
+    /// Decode into a host vector; the requested type must match exactly.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match self {
+            Literal::Array { ty, data, .. } => {
+                if *ty != T::PRIMITIVE {
+                    return Err(Error::new(format!(
+                        "literal is {ty:?}, requested {:?}", T::PRIMITIVE)));
+                }
+                let n = byte_size(*ty)?;
+                Ok(data.chunks_exact(n).map(T::read_le).collect())
+            }
+            Literal::Tuple(_) => Err(Error::new("cannot to_vec a tuple")),
+        }
+    }
+
+    /// Convert to another primitive type (the upcasts the runtime uses).
+    pub fn convert(&self, target: PrimitiveType) -> Result<Literal> {
+        let Literal::Array { ty, dims, data } = self else {
+            return Err(Error::new("cannot convert a tuple literal"));
+        };
+        if *ty == target {
+            return Ok(self.clone());
+        }
+        match (ty, target) {
+            (PrimitiveType::Bf16, PrimitiveType::F32) => {
+                let out: Vec<u8> = data.chunks_exact(2)
+                    .flat_map(|c| {
+                        let v = bf16_bits_to_f32(
+                            u16::from_le_bytes([c[0], c[1]]));
+                        v.to_le_bytes()
+                    })
+                    .collect();
+                Ok(Literal::Array {
+                    ty: PrimitiveType::F32,
+                    dims: dims.clone(),
+                    data: out,
+                })
+            }
+            (PrimitiveType::F16, PrimitiveType::F32) => {
+                let out: Vec<u8> = data.chunks_exact(2)
+                    .flat_map(|c| {
+                        let v = f16_bits_to_f32(
+                            u16::from_le_bytes([c[0], c[1]]));
+                        v.to_le_bytes()
+                    })
+                    .collect();
+                Ok(Literal::Array {
+                    ty: PrimitiveType::F32,
+                    dims: dims.clone(),
+                    data: out,
+                })
+            }
+            (a, b) => Err(Error::new(format!(
+                "conversion {a:?} → {b:?} not supported by the stub"))),
+        }
+    }
+
+    /// Destructure a tuple literal into its parts.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(parts) => Ok(parts.clone()),
+            Literal::Array { .. } => {
+                Err(Error::new("literal is not a tuple"))
+            }
+        }
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+/// Parsed HLO module (text form only in the stub).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Read an HLO text file; parsing is deferred to compile time (which
+    /// the stub cannot reach), so this only validates readability.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::new(format!("reading {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+
+    pub fn text(&self) -> &str {
+        &self.text
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { proto: proto.clone() }
+    }
+
+    pub fn proto(&self) -> &HloModuleProto {
+        &self.proto
+    }
+}
+
+/// Device-resident buffer handle.  Unreachable through the stub client.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::backend_unavailable())
+    }
+}
+
+/// Compiled executable handle.  Unreachable through the stub client.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: AsRef<Literal>>(&self, _args: &[L])
+        -> Result<Vec<Vec<PjRtBuffer>>>
+    {
+        Err(Error::backend_unavailable())
+    }
+}
+
+/// PJRT client.  `cpu()` reports the backend absent in this build.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::backend_unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation)
+        -> Result<PjRtLoadedExecutable>
+    {
+        Err(Error::backend_unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let vals = [1.0f32, -2.5, 0.0, 3.25e8];
+        let bytes: Vec<u8> =
+            vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32, &[2, 2], &bytes).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vals);
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 2]);
+        assert_eq!(shape.primitive_type(), PrimitiveType::F32);
+    }
+
+    #[test]
+    fn byte_length_checked() {
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::F32, &[3], &[0u8; 11]).is_err());
+    }
+
+    #[test]
+    fn bf16_converts_to_f32() {
+        // 1.0 in bf16 is 0x3F80; -2.0 is 0xC000
+        let bytes = [0x80u8, 0x3F, 0x00, 0xC0];
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::Bf16, &[2], &bytes).unwrap();
+        let f = lit.convert(PrimitiveType::F32).unwrap();
+        assert_eq!(f.to_vec::<f32>().unwrap(), vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn f16_converts_to_f32() {
+        // 1.0 = 0x3C00, -0.5 = 0xB800, +inf = 0x7C00
+        let bytes = [0x00u8, 0x3C, 0x00, 0xB8, 0x00, 0x7C];
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::F16, &[3], &bytes).unwrap();
+        let f = lit.convert(PrimitiveType::F32).unwrap();
+        let got = f.to_vec::<f32>().unwrap();
+        assert_eq!(got[0], 1.0);
+        assert_eq!(got[1], -0.5);
+        assert!(got[2].is_infinite() && got[2] > 0.0);
+    }
+
+    #[test]
+    fn f16_subnormals_convert() {
+        // 0x0001 is the smallest f16 subnormal, 2⁻²⁴; 0x03FF the largest.
+        let bytes = [0x01u8, 0x00, 0xFF, 0x03];
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::F16, &[2], &bytes).unwrap();
+        let got = lit.convert(PrimitiveType::F32).unwrap()
+            .to_vec::<f32>().unwrap();
+        assert_eq!(got[0], 2.0f32.powi(-24));
+        assert_eq!(got[1], 1023.0 * 2.0f32.powi(-24));
+    }
+
+    #[test]
+    fn type_mismatch_rejected() {
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::S32, &[1], &1i32.to_le_bytes()).unwrap();
+        assert!(lit.to_vec::<f32>().is_err());
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(err.contains("PJRT backend unavailable"), "{err}");
+    }
+}
