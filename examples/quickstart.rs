@@ -1,67 +1,46 @@
-//! Quickstart: load the AOT artifacts, run one fused MHA forward+backward
-//! through PJRT, verify against the pure-Rust oracle, and print the I/O
-//! story that motivates the paper.
+//! Quickstart: tour the host attention path (oracle forward, streaming
+//! witness, execution backends incl. the mixed-precision TCU emulation),
+//! then — when the AOT artifacts are present — run one fused MHA
+//! forward+backward through PJRT and verify it against the oracle.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart          # host path only
+//! make artifacts && cargo run --release --example quickstart  # + device
 //! ```
 
 use anyhow::{Context, Result};
 use sparkattention::attention::{self, AttnParams};
-use sparkattention::exec::Scalar;
+use sparkattention::exec::{self, Scalar};
 use sparkattention::iomodel::{self, MhaShape};
 use sparkattention::runtime::{Engine, HostValue};
 use sparkattention::tensor::{Rng, Tensor};
 
 fn main() -> Result<()> {
     sparkattention::logging::init();
-    let dir = std::env::var("SPARK_ARTIFACTS")
-        .unwrap_or_else(|_| "artifacts".into());
-    let engine = Engine::new(&dir)
-        .context("run `make artifacts` first")?;
-    println!("platform: {} ({} artifacts)\n",
-             engine.platform(), engine.manifest().len());
-
-    // --- fused forward -----------------------------------------------------
-    let name = "mha_fwd_fused_f32_d64_n256_bh2_c0_p0";
     let (bh, n, d) = (2usize, 256usize, 64usize);
-    println!("1. fused MHA forward ({name})");
     let mut rng = Rng::new(1);
     let q = Tensor::randn_bf16(vec![bh, n, d], &mut rng);
     let k = Tensor::randn_bf16(vec![bh, n, d], &mut rng);
     let v = Tensor::randn_bf16(vec![bh, n, d], &mut rng);
-    let seed = HostValue::scalar_f32(0.0);
-    let fwd = engine.execute(name, &[
-        seed.clone(), HostValue::from_tensor(&q),
-        HostValue::from_tensor(&k), HostValue::from_tensor(&v),
-    ])?;
-    let o_dev = fwd[0].as_tensor()?;
+    let p = AttnParams::new(d, false);
 
-    let oracle = attention::mha_forward(&q, &k, &v,
-                                        AttnParams::new(d, false), &Scalar);
-    println!("   device vs oracle: max |Δ| = {:.5}  (bf16 regime)\n",
-             o_dev.max_abs_diff(&oracle.output));
-
-    // --- fused backward (recomputation) ------------------------------------
-    let bwd_name = "mha_bwd_fused_f32_d64_n256_bh2_c0_p0";
-    println!("2. fused MHA backward with recomputation ({bwd_name})");
-    let dout = Tensor::randn_bf16(vec![bh, n, d], &mut rng);
-    let grads = engine.execute(bwd_name, &[
-        seed, HostValue::from_tensor(&q), HostValue::from_tensor(&k),
-        HostValue::from_tensor(&v), fwd[0].clone(), fwd[1].clone(),
-        HostValue::from_tensor(&dout),
-    ])?;
-    let g_oracle = attention::mha_backward(
-        &q, &k, &v, &dout, AttnParams::new(d, false), &Scalar);
-    for (hv, (oracle, nm)) in grads.iter().zip([
-        (&g_oracle.dq, "dq"), (&g_oracle.dk, "dk"), (&g_oracle.dv, "dv"),
-    ]) {
-        println!("   {nm}: max |Δ| = {:.5}",
-                 hv.as_tensor()?.max_abs_diff(oracle));
+    // --- host path: oracle, streaming witness, backends --------------------
+    println!("1. host attention path (no artifacts needed)");
+    let oracle = attention::mha_forward(&q, &k, &v, p, &Scalar);
+    let stream = attention::mha_forward_streaming(&q, &k, &v, p, 64, 64,
+                                                  &Scalar);
+    println!("   streaming witness vs oracle: max |Δ| = {:.6}",
+             stream.output.max_abs_diff(&oracle.output));
+    for be in exec::roster(exec::ExecOptions::default()) {
+        let got = attention::mha_forward(&q, &k, &v, p, be.as_ref());
+        println!("   backend {:<16} max |Δ| vs scalar = {:.6}  \
+                  (max ulp {})",
+                 be.name(), got.output.max_abs_diff(&oracle.output),
+                 got.output.max_ulp_diff(&oracle.output));
     }
 
     // --- why fusion matters -------------------------------------------------
-    println!("\n3. the I/O story (paper §2.3 / §3.2), at this shape:");
+    println!("\n2. the I/O story (paper §2.3 / §3.2), at this shape:");
     let s = MhaShape::new(bh, n, d);
     let u = iomodel::analytic_unfused_fwd(s);
     let f = iomodel::analytic_fused_fwd(s);
@@ -71,6 +50,47 @@ fn main() -> Result<()> {
               ({:.1}× less traffic)",
              f.tensor_reads, f.tensor_writes, f.total_bytes(),
              u.total_bytes() as f64 / f.total_bytes() as f64);
+
+    // --- device artifacts (optional) ----------------------------------------
+    let dir = std::env::var("SPARK_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        println!("\n(no artifacts at {dir}; run `make artifacts` for the \
+                  device sections)");
+        return Ok(());
+    }
+    // artifacts exist: a load failure here is a real error, not a skip
+    let engine = Engine::new(&dir)
+        .with_context(|| format!("loading artifacts at {dir}"))?;
+    println!("\nplatform: {} ({} artifacts)",
+             engine.platform(), engine.manifest().len());
+
+    let name = "mha_fwd_fused_f32_d64_n256_bh2_c0_p0";
+    println!("3. fused MHA forward ({name})");
+    let seed = HostValue::scalar_f32(0.0);
+    let fwd = engine.execute(name, &[
+        seed.clone(), HostValue::from_tensor(&q),
+        HostValue::from_tensor(&k), HostValue::from_tensor(&v),
+    ])?;
+    let o_dev = fwd[0].as_tensor()?;
+    println!("   device vs oracle: max |Δ| = {:.5}  (bf16 regime)\n",
+             o_dev.max_abs_diff(&oracle.output));
+
+    let bwd_name = "mha_bwd_fused_f32_d64_n256_bh2_c0_p0";
+    println!("4. fused MHA backward with recomputation ({bwd_name})");
+    let dout = Tensor::randn_bf16(vec![bh, n, d], &mut rng);
+    let grads = engine.execute(bwd_name, &[
+        seed, HostValue::from_tensor(&q), HostValue::from_tensor(&k),
+        HostValue::from_tensor(&v), fwd[0].clone(), fwd[1].clone(),
+        HostValue::from_tensor(&dout),
+    ])?;
+    let g_oracle = attention::mha_backward(&q, &k, &v, &dout, p, &Scalar);
+    for (hv, (oracle, nm)) in grads.iter().zip([
+        (&g_oracle.dq, "dq"), (&g_oracle.dk, "dk"), (&g_oracle.dv, "dv"),
+    ]) {
+        println!("   {nm}: max |Δ| = {:.5}",
+                 hv.as_tensor()?.max_abs_diff(oracle));
+    }
 
     let st = engine.stats();
     println!("\nengine: {} compiles ({:.0} ms), {} executions",

@@ -3,25 +3,26 @@
 //! block_k) tiles.
 //!
 //! Section 1 (always runs): the **host** streaming forward across a
-//! (block_q, block_k) grid on the configured exec backend — block shape
-//! changes the tile schedule and the per-tile working set, which is the
-//! same trade the device kernel makes.  Section 2 (needs the ablation
-//! artifact profile): measured CPU time next to the static VMEM footprint
-//! and MXU-occupancy estimate.
+//! (block_q, block_k) grid under every exec backend — scalar, blocked,
+//! simd, and simd-mixed side by side — block shape changes the tile
+//! schedule and the per-tile working set, which is the same trade the
+//! device kernel makes.  Section 2 (needs the ablation artifact
+//! profile): measured CPU time next to the static VMEM footprint and
+//! MXU-occupancy estimate.
 
 mod common;
 
 use sparkattention::attention::{self, AttnParams};
 use sparkattention::bench::{measure, measure_wallclock};
 use sparkattention::coordinator::inputs::synth_inputs;
+use sparkattention::coordinator::report_roster;
 use sparkattention::tensor::{Rng, Tensor};
 
 fn main() {
     sparkattention::logging::init();
     let opts = common::harness_options();
 
-    // --- host block-shape ablation ---------------------------------------
-    let be = opts.exec.build();
+    // --- host block-shape ablation, one table per exec backend -----------
     let (ns, bh, d) = common::host_shape();
     let n = ns.last().copied().unwrap_or(512);
     let p = AttnParams::new(d, false);
@@ -29,23 +30,26 @@ fn main() {
     let q = Tensor::randn(vec![bh, n, d], &mut rng);
     let k = Tensor::randn(vec![bh, n, d], &mut rng);
     let v = Tensor::randn(vec![bh, n, d], &mut rng);
-    println!("== Host block-shape ablation (bh={bh}, n={n}, d={d}, \
-              backend {}) ==", be.name());
-    println!("{:>8} {:>8} {:>12} {:>10}", "block_q", "block_k", "mean_ms",
-             "tiles");
     let blocks: Vec<usize> =
         [16usize, 32, 64, 128].iter().copied().filter(|b| n % b == 0)
         .collect();
-    for &bq in &blocks {
-        for &bk in &blocks {
-            let time = measure_wallclock(opts.bench, || {
-                attention::mha_forward_streaming(&q, &k, &v, p, bq, bk,
-                                                 be.as_ref());
-                Ok(())
-            }).expect("host ablation");
-            println!("{:>8} {:>8} {:>12.3} {:>10}", bq, bk,
-                     time.mean() * 1e3, bh * (n / bq) * (n / bk));
+    for be in report_roster(opts) {
+        println!("== Host block-shape ablation (bh={bh}, n={n}, d={d}, \
+                  backend {}) ==", be.name());
+        println!("{:>8} {:>8} {:>12} {:>10}", "block_q", "block_k",
+                 "mean_ms", "tiles");
+        for &bq in &blocks {
+            for &bk in &blocks {
+                let time = measure_wallclock(opts.bench, || {
+                    attention::mha_forward_streaming(&q, &k, &v, p, bq, bk,
+                                                     be.as_ref());
+                    Ok(())
+                }).expect("host ablation");
+                println!("{:>8} {:>8} {:>12.3} {:>10}", bq, bk,
+                         time.mean() * 1e3, bh * (n / bq) * (n / bk));
+            }
         }
+        println!();
     }
     println!("reading: wider q-blocks amortise K/V streaming; the pool \
               parallelises over (bh × n/block_q) tiles, so tiny q-blocks \

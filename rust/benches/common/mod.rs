@@ -7,8 +7,12 @@
 //! * `SPARK_BENCH_WARMUP`   — warmup iterations (default 1)
 //! * `SPARK_BENCH_JSON_DIR` — JSON report directory (default
 //!   `bench-results/`, always written so CI can upload it)
-//! * `SPARK_EXEC_BACKEND`   — host backend: `scalar` | `blocked`
+//! * `SPARK_EXEC_BACKEND`   — host backend: `scalar` | `blocked` | `simd`;
+//!   setting it (or `SPARK_EXEC_PRECISION`) pins the host figures to
+//!   scalar + that backend instead of sweeping the full roster
 //! * `SPARK_EXEC_THREADS`   — host worker threads (default 8; 0 = auto)
+//! * `SPARK_EXEC_PRECISION` — simd numeric mode: `f32` | `mixed`
+//!   (`mixed` implies the simd backend when none is set)
 //! * `SPARK_HOST_NS`        — host-path sequence lengths (default 256,512)
 //! * `SPARK_HOST_BH`        — host-path batch × heads (default 8)
 //! * `SPARK_HOST_D`         — host-path head dim (default 64)
@@ -18,7 +22,7 @@
 
 use sparkattention::bench::{Options, Report};
 use sparkattention::coordinator::harness::HarnessOptions;
-use sparkattention::exec::{BackendKind, ExecOptions};
+use sparkattention::exec::{BackendKind, ExecOptions, Precision};
 use sparkattention::runtime::Engine;
 
 pub fn engine_or_skip() -> Option<Engine> {
@@ -37,23 +41,50 @@ fn envnum(k: &str, d: usize) -> usize {
 
 /// Host execution backend selection from the environment.  The default is
 /// the blocked backend at 8 threads — the configuration the recorded
-/// speedup numbers refer to.
+/// speedup numbers refer to.  Setting `SPARK_EXEC_BACKEND` or
+/// `SPARK_EXEC_PRECISION` explicitly pins the host figures to scalar +
+/// the configured backend (see `HarnessOptions::exec_pinned`).
 pub fn exec_options() -> ExecOptions {
-    let kind = match std::env::var("SPARK_EXEC_BACKEND").ok().as_deref() {
-        Some(name) => BackendKind::parse(name).expect("SPARK_EXEC_BACKEND"),
-        None => BackendKind::Blocked,
+    exec_selection().0
+}
+
+/// One derivation of both the backend selection and the "was it
+/// explicitly pinned" fact (the second drives `exec_pinned`): the env
+/// vars are read exactly here, so the two can never drift.
+fn exec_selection() -> (ExecOptions, bool) {
+    let backend = std::env::var("SPARK_EXEC_BACKEND").ok();
+    let precision = std::env::var("SPARK_EXEC_PRECISION").ok();
+    let pinned = backend.is_some() || precision.is_some();
+    let mut opts = ExecOptions {
+        kind: match backend.as_deref() {
+            Some(name) => {
+                BackendKind::parse(name).expect("SPARK_EXEC_BACKEND")
+            }
+            None => BackendKind::Blocked,
+        },
+        threads: envnum("SPARK_EXEC_THREADS", 8),
+        precision: Precision::F32,
     };
-    ExecOptions { kind, threads: envnum("SPARK_EXEC_THREADS", 8) }
+    if let Some(name) = precision.as_deref() {
+        // shared "mixed implies simd" rule (ExecOptions::with_precision)
+        opts = opts.with_precision(
+            Precision::parse(name).expect("SPARK_EXEC_PRECISION"),
+            backend.is_some());
+    }
+    opts.validate().expect("exec options");
+    (opts, pinned)
 }
 
 pub fn harness_options() -> HarnessOptions {
+    let (exec, exec_pinned) = exec_selection();
     HarnessOptions {
         bench: Options {
             warmup_iters: envnum("SPARK_BENCH_WARMUP", 1),
             iters: envnum("SPARK_BENCH_ITERS", 3),
         },
         mem_budget: envnum("SPARK_BENCH_MEM_GB", 8) << 30,
-        exec: exec_options(),
+        exec,
+        exec_pinned,
     }
 }
 

@@ -5,9 +5,11 @@
 //! Three sections, most portable first:
 //!
 //! 1. **Host backend sweep** (always runs, no artifacts needed): the
-//!    pure-Rust attention forward under the `scalar` reference backend vs
-//!    the parallel `blocked` backend — the host-path speedup this repo's
-//!    execution layer is accountable for.  JSON → `fig10_host.json`.
+//!    pure-Rust attention forward under every exec backend side by side
+//!    — `scalar` reference, parallel `blocked`, vectorized `simd`, and
+//!    `simd_mixed` (the TCU-numerics emulation) — with per-backend
+//!    speedups and the mixed-vs-f32 max-ULP accuracy summary in the
+//!    report notes.  JSON → `fig10_host.json`.
 //! 2. **Measured artifact sweep** (needs `make artifacts`).
 //! 3. **V100 projection** at paper scale.
 //!
@@ -24,18 +26,13 @@ fn main() {
     sparkattention::logging::init();
 
     // --- host backend sweep (the execution-layer figure) ----------------
+    // Per-backend speedups and the mixed-vs-f32 accuracy summary are
+    // emitted as report notes (table + JSON).
     let (ns, bh, d) = common::host_shape();
     let opts = common::harness_options();
     let host = host_backend_report(&ns, bh, d, false, opts)
         .expect("host backend report");
     common::emit(&host, "fig10_host");
-    let blocked = opts.exec.build().name();
-    if blocked != "scalar" {
-        if let Some((mean, max)) = host.speedup_summary(&blocked, "scalar") {
-            println!("host speedup {blocked} vs scalar: avg {mean:.2}× \
-                      (max {max:.2}×)");
-        }
-    }
 
     // --- measured artifact sweep ----------------------------------------
     if let Some(engine) = common::engine_or_skip() {

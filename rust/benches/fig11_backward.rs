@@ -3,7 +3,8 @@
 //! (reported as t(fwd+bwd) − t(fwd)), plus the V100 projection.
 //!
 //! Opens with the host backend sweep of the block-streamed backward
-//! (`scalar` vs `blocked` execution; always runs, no artifacts needed).
+//! (every exec backend side by side — scalar/blocked/simd/simd-mixed —
+//! with mixed-vs-f32 accuracy notes; always runs, no artifacts needed).
 //! See EXPERIMENTS.md §E2.
 
 mod common;
@@ -16,18 +17,13 @@ fn main() {
     sparkattention::logging::init();
 
     // --- host backend sweep: streamed backward ---------------------------
+    // Per-backend speedups and the mixed-vs-f32 accuracy summary are
+    // emitted as report notes (table + JSON).
     let (ns, bh, d) = common::host_shape();
     let opts = common::harness_options();
     let host = host_backend_report(&ns, bh, d, true, opts)
         .expect("host backward report");
     common::emit(&host, "fig11_host");
-    let blocked = opts.exec.build().name();
-    if blocked != "scalar" {
-        if let Some((mean, max)) = host.speedup_summary(&blocked, "scalar") {
-            println!("host backward speedup {blocked} vs scalar: avg \
-                      {mean:.2}× (max {max:.2}×)");
-        }
-    }
 
     // --- measured artifact sweep ----------------------------------------
     if let Some(engine) = common::engine_or_skip() {

@@ -1,9 +1,10 @@
 //! `cargo bench --bench fig12_e2e` — regenerates Fig 12 (E4): single
 //! encoder-layer forward latency across fusion scopes (PyTorch-JIT analog,
 //! SparkAttention, FasterTransformer analog), with OOM cells from the
-//! memory budget.  Opens with the projection and a host-latency row for
-//! the attention sub-block (scalar vs blocked execution), so the binary
-//! reports something useful without artifacts.  See EXPERIMENTS.md §E4.
+//! memory budget.  Opens with the projection and host-latency rows for
+//! the attention sub-block (scalar/blocked/simd/simd-mixed side by
+//! side), so the binary reports something useful without artifacts.
+//! See EXPERIMENTS.md §E4.
 
 mod common;
 

@@ -8,8 +8,8 @@
 mod common;
 
 use sparkattention::bench::measure_wallclock;
-use sparkattention::coordinator::io_report;
-use sparkattention::exec::{Backend, Scalar};
+use sparkattention::coordinator::{io_report, report_roster};
+use sparkattention::exec::{Backend, Precision, Scalar};
 use sparkattention::iomodel::{self, MhaShape};
 use sparkattention::perfmodel::{self, V100};
 use sparkattention::tensor::{Rng, Tensor};
@@ -68,23 +68,38 @@ fn main() {
         }
     }
 
-    // Achieved host GEMM throughput per backend: the measured compute
-    // ceiling the host-path figures (fig10_host etc.) run against.
+    // Achieved host GEMM throughput per backend (the report roster —
+    // scalar, blocked, simd, simd-mixed unless pinned): the measured
+    // compute ceiling the host-path figures (fig10_host etc.) run
+    // against.
     let opts = common::harness_options();
-    let parallel = opts.exec.build();
     let (bh, n, d) = (8usize, 512usize, 64usize);
     let mut rng = Rng::new(0x10F);
     let a = Tensor::randn(vec![bh, n, d], &mut rng);
     let b = Tensor::randn(vec![bh, n, d], &mut rng);
     let flops = 2.0 * (bh * n * n * d) as f64;
     println!("\nachieved host QKᵀ throughput ({bh}×{n}×{d}):");
-    let backends: [&dyn Backend; 2] = [&Scalar, parallel.as_ref()];
-    for be in backends {
+    let backends = report_roster(opts);
+    for be in &backends {
         let time = measure_wallclock(opts.bench, || {
             be.batch_matmul_nt(&a, &b);
             Ok(())
         }).expect("gemm measure");
-        println!("  {:<12} {:>8.2} GFLOP/s", be.name(),
+        println!("  {:<16} {:>8.2} GFLOP/s", be.name(),
                  flops / time.mean() / 1e9);
+    }
+
+    // Mixed-vs-f32 numerics on that same GEMM (the §4.2.3-style
+    // summary for the host path).
+    if let Some(mixed) =
+        backends.iter().find(|be| be.precision() == Precision::Mixed)
+    {
+        let f32_out = Scalar.batch_matmul_nt(&a, &b);
+        let mixed_out = mixed.batch_matmul_nt(&a, &b);
+        println!("mixed vs f32 on QKᵀ: max ulp {}, max abs {:.6}, \
+                  mean rel {:.5}%",
+                 mixed_out.max_ulp_diff(&f32_out),
+                 mixed_out.max_abs_diff(&f32_out),
+                 mixed_out.mean_rel_err(&f32_out, 1e-3) * 100.0);
     }
 }

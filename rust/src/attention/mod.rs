@@ -21,6 +21,17 @@
 //! statistics — so for a fixed block size the result is bitwise-identical
 //! for any thread count (each tile's accumulation order never changes).
 //!
+//! **Precision.**  The streaming paths also honour the backend's
+//! [`exec::Precision`]: under a mixed-precision backend the leaf
+//! operands (Q, K, V, dO) are quantized to bf16 once at entry — the
+//! host analogue of packing fp16 fragments — and the recomputed P / dS
+//! tiles are quantized before they feed the second GEMM of each pass,
+//! exactly where a Volta kernel converts registers for the next `mma`.
+//! Softmax statistics (m, l, LSE, Δ) and every accumulator stay f32,
+//! the paper's FP32-accumulate contract.  Under an f32 backend nothing
+//! is quantized and the bitwise determinism contract above holds
+//! unchanged.
+//!
 //! Dropout is intentionally absent here: masks are derived from the device
 //! RNG (`python/compile/kernels/rng.py`), so cross-checking dropout paths
 //! happens in the Python test suite where both sides share the RNG.
@@ -29,8 +40,8 @@ pub mod streaming_bwd;
 
 pub use streaming_bwd::mha_backward_streaming;
 
-use crate::exec::{self, Backend, Task};
-use crate::tensor::Tensor;
+use crate::exec::{self, Backend, ExecOptions, Precision, Task};
+use crate::tensor::{bf16, Tensor};
 
 /// Value used for masked-out logits (matches the kernels' `NEG_INF`).
 pub const NEG_INF: f32 = -1e30;
@@ -43,12 +54,15 @@ const SOFTMAX_ROWS_PER_TASK: usize = 16;
 /// Static attention parameters.
 #[derive(Debug, Clone, Copy)]
 pub struct AttnParams {
+    /// Mask out future positions (autoregressive attention).
     pub causal: bool,
     /// Softmax temperature; the standard choice is `1/sqrt(d)`.
     pub scale: f32,
 }
 
 impl AttnParams {
+    /// Parameters for head dimension `d` with the standard `1/sqrt(d)`
+    /// temperature.
     pub fn new(d: usize, causal: bool) -> Self {
         AttnParams { causal, scale: 1.0 / (d as f32).sqrt() }
     }
@@ -57,6 +71,7 @@ impl AttnParams {
 /// Forward outputs: attention output + log-sum-exp statistics.
 #[derive(Debug, Clone)]
 pub struct ForwardResult {
+    /// (bh, n, d) attention output.
     pub output: Tensor,
     /// (bh, n) row-wise log-sum-exp — the paper's "LES" record.
     pub lse: Tensor,
@@ -65,8 +80,11 @@ pub struct ForwardResult {
 /// Backward outputs (Equation 4).
 #[derive(Debug, Clone)]
 pub struct Grads {
+    /// Gradient w.r.t. the queries, (bh, n, d).
     pub dq: Tensor,
+    /// Gradient w.r.t. the keys, (bh, n, d).
     pub dk: Tensor,
+    /// Gradient w.r.t. the values, (bh, n, d).
     pub dv: Tensor,
 }
 
@@ -131,40 +149,97 @@ fn finish_scores(s: &mut Tensor, lse: &mut [f32], p: AttnParams,
     be.run_tasks(tasks);
 }
 
-/// Run the full algorithm witness through `be` and pin it against the
-/// Scalar oracle: streaming forward and streaming backward on a small
-/// shape must reproduce the monolithic results.  `spark train` runs this
-/// at startup so a miscompiled or misconfigured backend aborts before
-/// any long run (the witness is what grounds trust in the fused
-/// artifacts' dataflow).
-pub fn witness_self_check(be: &dyn Backend) -> anyhow::Result<()> {
+/// Run the full algorithm witness through **every** available backend
+/// (the `exec::roster` of `opts`, not just the configured one) and
+/// cross-check the results pairwise, so a failure names the diverging
+/// pair.  Each backend's streaming forward/backward is additionally
+/// anchored against the monolithic Scalar oracle.  Pure-f32 backends
+/// must agree with each other to ~1 ulp (the determinism contract);
+/// pairs involving the mixed-precision backend get a loose
+/// bf16-derived bound — the point there is catching a broken kernel,
+/// not re-proving the quantization error analysis (which lives in
+/// `rust/tests/exec_backend.rs`).  `spark train` runs this at startup
+/// so a miscompiled or misconfigured backend aborts before any long
+/// run (the witness is what grounds trust in the fused artifacts'
+/// dataflow).
+pub fn witness_self_check(opts: ExecOptions) -> anyhow::Result<()> {
+    let backends = exec::roster(opts);
     let (bh, n, d) = (2usize, 32usize, 8usize);
     let mut rng = crate::tensor::Rng::new(0xBEAC);
     let q = Tensor::randn(vec![bh, n, d], &mut rng);
     let k = Tensor::randn(vec![bh, n, d], &mut rng);
     let v = Tensor::randn(vec![bh, n, d], &mut rng);
     let dout = Tensor::randn(vec![bh, n, d], &mut rng);
+    // loose sanity bounds for anything involving the mixed backend
+    let (mixed_ftol, mixed_btol) = (0.5f32, 1.0f32);
     for causal in [false, true] {
         let p = AttnParams::new(d, causal);
         let oracle = mha_forward(&q, &k, &v, p, &exec::Scalar);
-        let fwd = mha_forward_streaming(&q, &k, &v, p, 8, 16, be);
-        let err = fwd.output.max_abs_diff(&oracle.output);
-        if err > 1e-4 {
-            anyhow::bail!("backend {}: streaming forward deviates from \
-                           the oracle (causal={causal}, max err {err})",
-                          be.name());
+        let oracle_bwd = mha_backward(&q, &k, &v, &dout, p, &exec::Scalar);
+        let mut results: Vec<(String, Precision, ForwardResult, Grads)> =
+            Vec::new();
+        for be in &backends {
+            let fwd = mha_forward_streaming(&q, &k, &v, p, 8, 16,
+                                            be.as_ref());
+            let bwd = mha_backward_streaming(&q, &k, &v, &dout,
+                                             &oracle.lse, p, 8, 16,
+                                             be.as_ref());
+            results.push((be.name(), be.precision(), fwd, bwd));
         }
-        let want = mha_backward(&q, &k, &v, &dout, p, &exec::Scalar);
-        let got = mha_backward_streaming(&q, &k, &v, &dout, &oracle.lse,
-                                         p, 8, 16, be);
-        for (name, g, w) in [("dq", &got.dq, &want.dq),
-                             ("dk", &got.dk, &want.dk),
-                             ("dv", &got.dv, &want.dv)] {
-            let err = g.max_abs_diff(w);
-            if err > 1e-3 {
-                anyhow::bail!("backend {}: streaming backward {name} \
-                               deviates (causal={causal}, max err {err})",
-                              be.name());
+        // anchor: every backend against the monolithic Scalar oracle
+        for (name, prec, fwd, bwd) in &results {
+            let (ftol, btol) = if *prec == Precision::Mixed {
+                (mixed_ftol, mixed_btol)
+            } else {
+                (1e-4, 1e-3)
+            };
+            let err = fwd.output.max_abs_diff(&oracle.output);
+            if err > ftol {
+                anyhow::bail!("backend {name}: streaming forward \
+                               deviates from the oracle (causal={causal}, \
+                               max err {err}, tol {ftol})");
+            }
+            for (gname, g, w) in [("dq", &bwd.dq, &oracle_bwd.dq),
+                                  ("dk", &bwd.dk, &oracle_bwd.dk),
+                                  ("dv", &bwd.dv, &oracle_bwd.dv)] {
+                let err = g.max_abs_diff(w);
+                if err > btol {
+                    anyhow::bail!("backend {name}: streaming backward \
+                                   {gname} deviates (causal={causal}, \
+                                   max err {err}, tol {btol})");
+                }
+            }
+        }
+        // pairwise: which pair diverged?
+        for i in 0..results.len() {
+            for j in i + 1..results.len() {
+                let same_mode = results[i].1 == results[j].1;
+                let (ftol, btol) = if same_mode {
+                    (1e-6, 1e-6)
+                } else {
+                    (mixed_ftol, mixed_btol)
+                };
+                let err = results[i].2.output
+                    .max_abs_diff(&results[j].2.output);
+                if err > ftol {
+                    anyhow::bail!("witness self-check: backends {} and {} \
+                                   diverge on the streaming forward \
+                                   (causal={causal}, max err {err})",
+                                  results[i].0, results[j].0);
+                }
+                for (gname, gi, gj) in
+                    [("dq", &results[i].3.dq, &results[j].3.dq),
+                     ("dk", &results[i].3.dk, &results[j].3.dk),
+                     ("dv", &results[i].3.dv, &results[j].3.dv)]
+                {
+                    let err = gi.max_abs_diff(gj);
+                    if err > btol {
+                        anyhow::bail!("witness self-check: backends {} \
+                                       and {} diverge on streaming {gname} \
+                                       (causal={causal}, max err {err})",
+                                      results[i].0, results[j].0);
+                    }
+                }
             }
         }
     }
@@ -189,10 +264,25 @@ pub fn mha_forward(q: &Tensor, k: &Tensor, v: &Tensor, p: AttnParams,
 /// Iterates K/V in `block_k` tiles per `block_q` row tile, carrying
 /// (m, l, acc) and rescaling by `exp(m_prev − m_cur)` — Equation 3.
 /// Tiles are independent `(bh, q-block)` units fanned out over the
-/// backend's pool.
+/// backend's pool.  Under a mixed-precision backend, Q/K/V are
+/// quantized to bf16 once here and the P tiles are quantized before
+/// the P·V accumulation (see the module docs); statistics and
+/// accumulators stay f32.
 pub fn mha_forward_streaming(q: &Tensor, k: &Tensor, v: &Tensor,
                              p: AttnParams, block_q: usize, block_k: usize,
                              be: &dyn Backend) -> ForwardResult {
+    let mixed = be.precision() == Precision::Mixed;
+    let qx;
+    let kx;
+    let vx;
+    let (q, k, v) = if mixed {
+        qx = q.clone().quantize_bf16();
+        kx = k.clone().quantize_bf16();
+        vx = v.clone().quantize_bf16();
+        (&qx, &kx, &vx)
+    } else {
+        (q, k, v)
+    };
     let (bh, n, d) = dims(q, k, v);
     let bq = block_q.min(n).max(1);
     let bk = block_k.min(n).max(1);
@@ -213,7 +303,7 @@ pub fn mha_forward_streaming(q: &Tensor, k: &Tensor, v: &Tensor,
                 let ltile = exec::carve(&mut lrest, bq);
                 tasks.push(Box::new(move || {
                     streaming_fwd_tile(qd, kd, vd, otile, ltile, p,
-                                       b, iq, bq, bk, n, d);
+                                       b, iq, bq, bk, n, d, mixed);
                 }));
             }
         }
@@ -227,9 +317,13 @@ pub fn mha_forward_streaming(q: &Tensor, k: &Tensor, v: &Tensor,
 
 /// One `(bh, q-block)` tile of the streaming forward: sweeps K/V blocks
 /// carrying per-row (m, l) statistics and a rescaled accumulator.
+/// `mixed` quantizes each P value to bf16 before it enters the P·V
+/// accumulation (its operand role in the second GEMM); the (m, l)
+/// statistics and the accumulator itself stay f32.
 fn streaming_fwd_tile(qd: &[f32], kd: &[f32], vd: &[f32], otile: &mut [f32],
                       ltile: &mut [f32], p: AttnParams, b: usize, iq: usize,
-                      bq: usize, bk: usize, n: usize, d: usize) {
+                      bq: usize, bk: usize, n: usize, d: usize,
+                      mixed: bool) {
     let mut m = vec![f32::NEG_INFINITY; bq];
     let mut l = vec![0.0f32; bq];
     let mut acc = vec![0.0f32; bq * d];
@@ -268,6 +362,7 @@ fn streaming_fwd_tile(qd: &[f32], kd: &[f32], vd: &[f32], otile: &mut [f32],
             }
             for (c, &sv) in srow.iter().enumerate() {
                 let pv = (sv - m_cur).exp();
+                let pv = if mixed { bf16::quantize(pv) } else { pv };
                 psum += pv;
                 if pv != 0.0 {
                     let vrow = &vd[(b * n + ik + c) * d
@@ -475,9 +570,54 @@ mod tests {
     }
 
     #[test]
-    fn witness_self_check_accepts_both_backends() {
-        witness_self_check(&Scalar).unwrap();
-        witness_self_check(&Blocked::new(3)).unwrap();
+    fn witness_self_check_passes_pairwise() {
+        witness_self_check(ExecOptions::scalar()).unwrap();
+        witness_self_check(ExecOptions::default()).unwrap();
+        witness_self_check(
+            ExecOptions::simd(3, exec::Precision::Mixed)).unwrap();
+    }
+
+    #[test]
+    fn simd_f32_forward_is_bitwise_scalar() {
+        let (q, k, v) = rand_qkv(2, 32, 8, 11);
+        for causal in [false, true] {
+            let p = AttnParams::new(8, causal);
+            let want = mha_forward(&q, &k, &v, p, &Scalar);
+            for threads in [1usize, 2, 8] {
+                let be = exec::Simd::new(threads, exec::Precision::F32);
+                let got = mha_forward(&q, &k, &v, p, &be);
+                assert_eq!(want.output.data(), got.output.data(),
+                           "causal={causal} threads={threads}");
+                assert_eq!(want.lse.data(), got.lse.data());
+                let stream = mha_forward_streaming(&q, &k, &v, p, 8, 8,
+                                                   &be);
+                let stream_s = mha_forward_streaming(&q, &k, &v, p, 8, 8,
+                                                     &Scalar);
+                assert_eq!(stream_s.output.data(), stream.output.data());
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_streaming_matches_quantized_scalar_reference() {
+        // Under the mixed backend the streaming forward must equal the
+        // f32 streaming forward of bf16-quantized inputs, up to the
+        // P-tile quantization: |Δout| ≤ ~3·ε_bf16·max|v| per element.
+        let (q, k, v) = rand_qkv(2, 32, 8, 12);
+        let qq = q.clone().quantize_bf16();
+        let kq = k.clone().quantize_bf16();
+        let vq = v.clone().quantize_bf16();
+        let vmax = v.data().iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let tol = 16.0 * crate::tensor::bf16::EPSILON * (1.0 + vmax);
+        for causal in [false, true] {
+            let p = AttnParams::new(8, causal);
+            let want = mha_forward_streaming(&qq, &kq, &vq, p, 8, 8,
+                                             &Scalar);
+            let be = exec::Simd::new(2, exec::Precision::Mixed);
+            let got = mha_forward_streaming(&q, &k, &v, p, 8, 8, &be);
+            let err = got.output.max_abs_diff(&want.output);
+            assert!(err < tol, "causal={causal}: err {err} ≥ tol {tol}");
+        }
     }
 
     #[test]

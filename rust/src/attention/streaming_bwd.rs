@@ -22,17 +22,35 @@
 //! recomputation algebra (Equation 4 + dPsum) is tiling-invariant, which
 //! is the correctness core of the paper's backward design.
 
-use super::{mha_forward, AttnParams, Grads, NEG_INF};
-use crate::exec::{self, Backend, Task};
-use crate::tensor::Tensor;
+use super::{mha_forward, AttnParams, Grads};
+use crate::exec::{self, Backend, Precision, Task};
+use crate::tensor::{bf16, Tensor};
 
 /// Block-streamed backward with forward recomputation from (Q, K, LSE).
 ///
 /// `lse` must be the forward's log-sum-exp (e.g. from `mha_forward`).
+/// Under a mixed-precision backend, Q/K/V/dO are quantized to bf16
+/// once at entry and the recomputed P and dS tiles are quantized
+/// before their GEMM-operand roles (P → dV fold, dS → dQ/dK folds);
+/// the Δ statistics and every gradient accumulator stay f32.
 pub fn mha_backward_streaming(q: &Tensor, k: &Tensor, v: &Tensor,
                               dout: &Tensor, lse: &Tensor, p: AttnParams,
                               block_q: usize, block_k: usize,
                               be: &dyn Backend) -> Grads {
+    let mixed = be.precision() == Precision::Mixed;
+    let qx;
+    let kx;
+    let vx;
+    let dx;
+    let (q, k, v, dout) = if mixed {
+        qx = q.clone().quantize_bf16();
+        kx = k.clone().quantize_bf16();
+        vx = v.clone().quantize_bf16();
+        dx = dout.clone().quantize_bf16();
+        (&qx, &kx, &vx, &dx)
+    } else {
+        (q, k, v, dout)
+    };
     let (bh, n, d) = match *q.shape() {
         [a, b, c] => (a, b, c),
         ref s => panic!("q must be rank-3, got {s:?}"),
@@ -72,7 +90,7 @@ pub fn mha_backward_streaming(q: &Tensor, k: &Tensor, v: &Tensor,
                 let dq_tile = exec::carve(&mut dq_rest, bq * d);
                 tasks.push(Box::new(move || {
                     dq_tile_task(qd, kd, vd, dod, ld, dl, dq_tile, p,
-                                 b, iq, bq, bk, n, d);
+                                 b, iq, bq, bk, n, d, mixed);
                 }));
             }
         }
@@ -84,7 +102,7 @@ pub fn mha_backward_streaming(q: &Tensor, k: &Tensor, v: &Tensor,
                 let dv_tile = exec::carve(&mut dv_rest, bk * d);
                 tasks.push(Box::new(move || {
                     dkv_tile_task(qd, kd, vd, dod, ld, dl, dk_tile,
-                                  dv_tile, p, b, ik, bq, bk, n, d);
+                                  dv_tile, p, b, ik, bq, bk, n, d, mixed);
                 }));
             }
         }
@@ -100,8 +118,10 @@ pub fn mha_backward_streaming(q: &Tensor, k: &Tensor, v: &Tensor,
 }
 
 /// Tile-local recompute of one (r, c) score entry's P from (Q, K, LSE).
+/// `mixed` quantizes the result to bf16 — P's operand role in the
+/// dV/dP GEMMs (the statistics in `ld` stay f32).
 fn p_entry(qd: &[f32], kd: &[f32], ld: &[f32], p: AttnParams, n: usize,
-           d: usize, b: usize, r: usize, c: usize) -> f32 {
+           d: usize, b: usize, r: usize, c: usize, mixed: bool) -> f32 {
     if p.causal && c > r {
         return 0.0;
     }
@@ -111,15 +131,18 @@ fn p_entry(qd: &[f32], kd: &[f32], ld: &[f32], p: AttnParams, n: usize,
     for (x, y) in qrow.iter().zip(krow) {
         s += x * y;
     }
-    let s = if p.causal && c > r { NEG_INF } else { s * p.scale };
-    (s - ld[b * n + r]).exp()
+    // (masked entries already returned 0.0 above)
+    let pe = (s * p.scale - ld[b * n + r]).exp();
+    if mixed { bf16::quantize(pe) } else { pe }
 }
 
 /// dq for one `(bh, q-tile)`: sweep K tiles, fold `dS·K` locally.
+/// `mixed` quantizes the recomputed P and the dS value at their
+/// GEMM-operand boundaries; the fold accumulator stays f32.
 fn dq_tile_task(qd: &[f32], kd: &[f32], vd: &[f32], dod: &[f32],
                 ld: &[f32], delta: &[f32], dq_tile: &mut [f32],
                 p: AttnParams, b: usize, iq: usize, bq: usize, bk: usize,
-                n: usize, d: usize) {
+                n: usize, d: usize, mixed: bool) {
     for ik in (0..n).step_by(bk) {
         if p.causal && ik > iq + bq - 1 {
             continue;
@@ -129,7 +152,7 @@ fn dq_tile_task(qd: &[f32], kd: &[f32], vd: &[f32], dod: &[f32],
             let dorow = &dod[(b * n + gr) * d..(b * n + gr + 1) * d];
             for c in 0..bk {
                 let gc = ik + c;
-                let pe = p_entry(qd, kd, ld, p, n, d, b, gr, gc);
+                let pe = p_entry(qd, kd, ld, p, n, d, b, gr, gc, mixed);
                 if pe == 0.0 {
                     continue;
                 }
@@ -139,6 +162,7 @@ fn dq_tile_task(qd: &[f32], kd: &[f32], vd: &[f32], dod: &[f32],
                     dp += x * y;
                 }
                 let ds = pe * (dp - delta[b * n + gr]) * p.scale;
+                let ds = if mixed { bf16::quantize(ds) } else { ds };
                 let krow = &kd[(b * n + gc) * d..(b * n + gc + 1) * d];
                 let acc = &mut dq_tile[r * d..(r + 1) * d];
                 for (a, &kv) in acc.iter_mut().zip(krow) {
@@ -150,11 +174,12 @@ fn dq_tile_task(qd: &[f32], kd: &[f32], vd: &[f32], dod: &[f32],
 }
 
 /// dk/dv for one `(bh, k-tile)`: sweep Q tiles (the grid transpose),
-/// fold `Pᵀ·dO` and `dSᵀ·Q` locally.
+/// fold `Pᵀ·dO` and `dSᵀ·Q` locally.  `mixed` quantizes P and dS at
+/// their GEMM-operand boundaries; both fold accumulators stay f32.
 fn dkv_tile_task(qd: &[f32], kd: &[f32], vd: &[f32], dod: &[f32],
                  ld: &[f32], delta: &[f32], dk_tile: &mut [f32],
                  dv_tile: &mut [f32], p: AttnParams, b: usize, ik: usize,
-                 bq: usize, bk: usize, n: usize, d: usize) {
+                 bq: usize, bk: usize, n: usize, d: usize, mixed: bool) {
     for iq in (0..n).step_by(bq) {
         if p.causal && ik > iq + bq - 1 {
             continue;
@@ -165,7 +190,7 @@ fn dkv_tile_task(qd: &[f32], kd: &[f32], vd: &[f32], dod: &[f32],
             let qrow = &qd[(b * n + gr) * d..(b * n + gr + 1) * d];
             for c in 0..bk {
                 let gc = ik + c;
-                let pe = p_entry(qd, kd, ld, p, n, d, b, gr, gc);
+                let pe = p_entry(qd, kd, ld, p, n, d, b, gr, gc, mixed);
                 if pe == 0.0 {
                     continue;
                 }
@@ -180,6 +205,7 @@ fn dkv_tile_task(qd: &[f32], kd: &[f32], vd: &[f32], dod: &[f32],
                     dp += x * y;
                 }
                 let ds = pe * (dp - delta[b * n + gr]) * p.scale;
+                let ds = if mixed { bf16::quantize(ds) } else { ds };
                 // dK += dSᵀ Q
                 let dkrow = &mut dk_tile[c * d..(c + 1) * d];
                 for (a, &x) in dkrow.iter_mut().zip(qrow) {
@@ -196,9 +222,12 @@ fn dkv_tile_task(qd: &[f32], kd: &[f32], vd: &[f32], dod: &[f32],
 /// statistics, demonstrating the stronger memory claim.
 fn recompute_output(q: &Tensor, k: &Tensor, v: &Tensor, lse: &Tensor,
                     p: AttnParams, be: &dyn Backend) -> Tensor {
-    // numerically identical to the forward given the same lse
+    // numerically identical to the forward given the same lse (a
+    // mixed-precision backend recomputes from quantized operands, so
+    // its statistics may sit a bf16-sized step away from an f32 lse)
     let f = mha_forward(q, k, v, p, be);
-    debug_assert!(f.lse.max_abs_diff(lse) < 1e-3,
+    let tol = if be.precision() == Precision::Mixed { 0.5 } else { 1e-3 };
+    debug_assert!(f.lse.max_abs_diff(lse) < tol,
                   "provided LSE does not match this (q,k) pair");
     f.output
 }

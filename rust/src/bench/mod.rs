@@ -13,7 +13,9 @@ use crate::metrics::Series;
 /// Measurement policy.
 #[derive(Debug, Clone, Copy)]
 pub struct Options {
+    /// Unrecorded runs before measurement starts.
     pub warmup_iters: usize,
+    /// Recorded runs per configuration.
     pub iters: usize,
 }
 
@@ -41,6 +43,7 @@ pub struct Row {
 }
 
 impl Row {
+    /// Achieved TFLOP/s from the mean time (0 for latency-only rows).
     pub fn tflops(&self) -> f64 {
         let m = self.time.mean();
         if m <= 0.0 || self.flops == 0 {
@@ -50,6 +53,7 @@ impl Row {
         }
     }
 
+    /// One row as a JSON object (a `rows` element of the report JSON).
     pub fn to_json(&self) -> Value {
         jsonio::obj(vec![
             ("group", jsonio::s(self.group.clone())),
@@ -96,20 +100,33 @@ where
     })
 }
 
-/// A figure/table in progress: rows + emitters.
+/// A figure/table in progress: rows + summary notes + emitters.
 #[derive(Debug, Default)]
 pub struct Report {
+    /// Figure/table heading.
     pub title: String,
+    /// Measured configurations.
     pub rows: Vec<Row>,
+    /// Free-form `(label, value)` summary lines — speedup summaries,
+    /// mixed-vs-f32 accuracy numbers — rendered after the table and
+    /// included in the JSON under `"notes"`.
+    pub notes: Vec<(String, f64)>,
 }
 
 impl Report {
+    /// Empty report with a title.
     pub fn new(title: impl Into<String>) -> Self {
-        Report { title: title.into(), rows: Vec::new() }
+        Report { title: title.into(), rows: Vec::new(), notes: Vec::new() }
     }
 
+    /// Append a measured row.
     pub fn push(&mut self, row: Row) {
         self.rows.push(row);
+    }
+
+    /// Attach a `(label, value)` summary note.
+    pub fn note(&mut self, label: impl Into<String>, value: f64) {
+        self.notes.push((label.into(), value));
     }
 
     /// Human-readable table, grouped like the paper's subplots.
@@ -132,6 +149,12 @@ impl Report {
                     "{:<22} {:>8} {:>12.3} {:>12.3} {:>10.3}  {}\n",
                     r.variant, r.x, r.time.mean() * 1e3,
                     r.time.p95() * 1e3, r.tflops(), r.status));
+            }
+        }
+        if !self.notes.is_empty() {
+            out.push_str("-- notes --\n");
+            for (label, value) in &self.notes {
+                out.push_str(&format!("{label:<52} {value:.6}\n"));
             }
         }
         out
@@ -168,14 +191,22 @@ impl Report {
         Some((mean, max))
     }
 
+    /// Whole report as a JSON value (what `emit` writes to disk).
     pub fn to_json(&self) -> Value {
         jsonio::obj(vec![
             ("title", jsonio::s(self.title.clone())),
             ("rows", Value::Arr(self.rows.iter().map(Row::to_json)
                                 .collect())),
+            ("notes", Value::Arr(self.notes.iter().map(|(label, value)| {
+                jsonio::obj(vec![
+                    ("label", jsonio::s(label.clone())),
+                    ("value", jsonio::num(*value)),
+                ])
+            }).collect())),
         ])
     }
 
+    /// Rows as CSV (one header + one line per row; notes are omitted).
     pub fn csv(&self) -> String {
         let mut out = String::from(
             "group,variant,x,status,mean_s,p50_s,p95_s,tflops\n");
@@ -278,9 +309,28 @@ mod tests {
         let table = rep.table();
         assert!(table.contains("Fig X"));
         assert!(table.contains("fused"));
+        assert!(!table.contains("-- notes --"), "no notes section yet");
         let csv = rep.csv();
         assert!(csv.lines().count() == 2);
         let j = rep.to_json();
         assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn notes_render_and_serialize() {
+        let mut rep = Report::new("Fig Y");
+        rep.push(row("g", "v", 1, 0.5, 0));
+        rep.note("speedup simd_t8 vs scalar (mean)", 2.5);
+        rep.note("simd_t8_mixed vs f32 max_ulp", 12345.0);
+        let table = rep.table();
+        assert!(table.contains("-- notes --"));
+        assert!(table.contains("speedup simd_t8 vs scalar"));
+        let j = rep.to_json();
+        let notes = j.get("notes").unwrap().as_arr().unwrap();
+        assert_eq!(notes.len(), 2);
+        assert_eq!(notes[0].get("label").unwrap().as_str().unwrap(),
+                   "speedup simd_t8 vs scalar (mean)");
+        assert_eq!(notes[1].get("value").unwrap().as_f64().unwrap(),
+                   12345.0);
     }
 }

@@ -11,10 +11,13 @@ use anyhow::{anyhow, bail, Result};
 /// Declared flag (with `--help` metadata).
 #[derive(Debug, Clone)]
 pub struct FlagSpec {
+    /// Flag name without the leading `--`.
     pub name: &'static str,
+    /// One-line description shown by `--help`.
     pub help: &'static str,
     /// true = boolean switch; false = takes a value.
     pub is_switch: bool,
+    /// Default value substituted when the flag is absent.
     pub default: Option<&'static str>,
 }
 
@@ -23,24 +26,29 @@ pub struct FlagSpec {
 pub struct Parsed {
     values: BTreeMap<String, String>,
     switches: BTreeMap<String, bool>,
+    /// Non-flag arguments, in order of appearance.
     pub positional: Vec<String>,
 }
 
 impl Parsed {
+    /// Value of flag `name` (its default if declared, else None).
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(String::as_str)
     }
 
+    /// Value of flag `name` parsed as an integer (loud parse error).
     pub fn get_usize(&self, name: &str) -> Result<Option<usize>> {
         self.get(name).map(|v| v.parse::<usize>().map_err(
             |_| anyhow!("--{name} expects an integer, got {v:?}"))).transpose()
     }
 
+    /// Value of flag `name` parsed as a number (loud parse error).
     pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
         self.get(name).map(|v| v.parse::<f64>().map_err(
             |_| anyhow!("--{name} expects a number, got {v:?}"))).transpose()
     }
 
+    /// Whether boolean switch `name` was passed.
     pub fn switch(&self, name: &str) -> bool {
         self.switches.get(name).copied().unwrap_or(false)
     }
@@ -49,28 +57,34 @@ impl Parsed {
 /// A command parser: declared flags + positional arity.
 #[derive(Debug)]
 pub struct Command {
+    /// Subcommand word (`spark <name> …`).
     pub name: &'static str,
+    /// One-line description shown in usage.
     pub about: &'static str,
     flags: Vec<FlagSpec>,
 }
 
 impl Command {
+    /// New command with no declared flags.
     pub fn new(name: &'static str, about: &'static str) -> Self {
         Command { name, about, flags: Vec::new() }
     }
 
+    /// Declare a value-taking flag.
     pub fn flag(mut self, name: &'static str, help: &'static str,
                 default: Option<&'static str>) -> Self {
         self.flags.push(FlagSpec { name, help, is_switch: false, default });
         self
     }
 
+    /// Declare a boolean switch.
     pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
         self.flags.push(FlagSpec { name, help, is_switch: true,
                                    default: None });
         self
     }
 
+    /// Generated `--help` text (command, flags, defaults).
     pub fn usage(&self) -> String {
         let mut s = format!("spark {} — {}\n\nflags:\n", self.name, self.about);
         for f in &self.flags {

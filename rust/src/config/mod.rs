@@ -10,19 +10,25 @@ use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::exec::{BackendKind, ExecOptions};
+use crate::exec::{BackendKind, ExecOptions, Precision};
 
 /// A scalar-ish TOML value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Toml {
+    /// A double-quoted string.
     Str(String),
+    /// A base-10 integer.
     Int(i64),
+    /// A floating-point number.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// A bracketed array of scalars.
     Arr(Vec<Toml>),
 }
 
 impl Toml {
+    /// String payload, if this value is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Toml::Str(s) => Some(s),
@@ -30,6 +36,7 @@ impl Toml {
         }
     }
 
+    /// Integer payload, if this value is an integer.
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Toml::Int(i) => Some(*i),
@@ -37,6 +44,7 @@ impl Toml {
         }
     }
 
+    /// Numeric payload (floats and integers both qualify).
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Toml::Float(f) => Some(*f),
@@ -45,6 +53,7 @@ impl Toml {
         }
     }
 
+    /// Boolean payload, if this value is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Toml::Bool(b) => Some(*b),
@@ -60,6 +69,8 @@ pub struct Document {
 }
 
 impl Document {
+    /// Parse TOML-subset text into sections (hard error with a line
+    /// number on anything malformed).
     pub fn parse(text: &str) -> Result<Self> {
         let mut doc = Document::default();
         let mut section = String::new();
@@ -85,16 +96,19 @@ impl Document {
         Ok(doc)
     }
 
+    /// Read and parse a config file.
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         let text = std::fs::read_to_string(path.as_ref()).with_context(
             || format!("reading config {}", path.as_ref().display()))?;
         Self::parse(&text)
     }
 
+    /// Look up `key` in `section` ("" = top level).
     pub fn get(&self, section: &str, key: &str) -> Option<&Toml> {
         self.sections.get(section).and_then(|s| s.get(key))
     }
 
+    /// Iterate the section names present in the document.
     pub fn sections(&self) -> impl Iterator<Item = &String> {
         self.sections.keys()
     }
@@ -190,32 +204,60 @@ fn parse_value(s: &str) -> Result<Toml> {
 ///
 /// ```toml
 /// [exec]
-/// backend = "blocked"   # or "scalar"
+/// backend = "simd"      # or "scalar" | "blocked"
 /// threads = 8           # 0 = auto-detect
+/// precision = "mixed"   # or "f32"; "mixed" implies backend = "simd"
+///                       # unless a different backend is set explicitly
+///                       # (that combination is a hard error)
 /// ```
 pub fn exec_from_doc(doc: &Document) -> Result<ExecOptions> {
     let d = ExecOptions::default();
+    let backend_explicit = exec_backend_explicit(doc);
     let kind = match doc.get("exec", "backend") {
         None => d.kind,
         Some(v) => BackendKind::parse(v.as_str().ok_or_else(
             || anyhow!("[exec] backend must be a string"))?)?,
     };
     let threads = doc.usize_or("exec", "threads", d.threads)?;
-    Ok(ExecOptions { kind, threads })
+    let mut opts = ExecOptions { kind, threads, precision: d.precision };
+    if let Some(v) = doc.get("exec", "precision") {
+        // same "mixed implies simd" rule as the CLI / bench env
+        opts = opts.with_precision(
+            Precision::parse(v.as_str().ok_or_else(
+                || anyhow!("[exec] precision must be a string"))?)?,
+            backend_explicit);
+    }
+    opts.validate()?;
+    Ok(opts)
+}
+
+/// Whether a document explicitly chooses an exec backend — the one
+/// derivation of the fact that gates the "mixed implies simd" rule and
+/// CLI override behaviour (`spark train` consults it for flag merging).
+pub fn exec_backend_explicit(doc: &Document) -> bool {
+    doc.get("exec", "backend").is_some()
 }
 
 /// Training-run configuration (`spark train --config …`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct TrainConfig {
+    /// Directory holding the AOT artifact set (`manifest.json`).
     pub artifact_dir: String,
+    /// Number of optimizer steps to run.
     pub steps: usize,
+    /// Run seed (corpus synthesis + parameter init).
     pub seed: u64,
+    /// Steps between progress log lines.
     pub log_every: usize,
+    /// Steps between checkpoints (0 = checkpointing disabled).
     pub checkpoint_every: usize,
+    /// Directory checkpoints are written into.
     pub checkpoint_dir: String,
     /// zipf exponent of the synthetic corpus token distribution.
     pub corpus_zipf: f64,
+    /// Size of the synthetic corpus in tokens.
     pub corpus_tokens: usize,
+    /// Optional path for the metrics JSON dump.
     pub metrics_out: Option<String>,
     /// Host execution backend (`[exec]` section).
     pub exec: ExecOptions,
@@ -239,6 +281,7 @@ impl Default for TrainConfig {
 }
 
 impl TrainConfig {
+    /// Typed view of a parsed document (defaults fill absent keys).
     pub fn from_doc(doc: &Document) -> Result<Self> {
         let d = TrainConfig::default();
         let cfg = TrainConfig {
@@ -264,6 +307,7 @@ impl TrainConfig {
         Ok(cfg)
     }
 
+    /// Load and validate a config file.
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         Self::from_doc(&Document::load(path)?)
     }
@@ -272,13 +316,17 @@ impl TrainConfig {
 /// Benchmark-harness configuration (shared by `spark bench-*`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct BenchConfig {
+    /// Directory holding the AOT artifact set.
     pub artifact_dir: String,
+    /// Unrecorded warmup iterations per configuration.
     pub warmup_iters: usize,
+    /// Recorded iterations per configuration (min 1).
     pub iters: usize,
     /// Host memory budget for admitting artifact executions (bytes).
     pub mem_budget: usize,
     /// Emit machine-readable JSON rows alongside the table.
     pub json: bool,
+    /// Optional path the JSON report is written to.
     pub out_path: Option<String>,
     /// Host execution backend (`[exec]` section).
     pub exec: ExecOptions,
@@ -299,6 +347,7 @@ impl Default for BenchConfig {
 }
 
 impl BenchConfig {
+    /// Typed view of a parsed document (defaults fill absent keys).
     pub fn from_doc(doc: &Document) -> Result<Self> {
         let d = BenchConfig::default();
         Ok(BenchConfig {
@@ -381,6 +430,7 @@ threads = 4
             .unwrap();
         assert_eq!(cfg.exec.kind, BackendKind::Blocked);
         assert_eq!(cfg.exec.threads, 4);
+        assert_eq!(cfg.exec.precision, Precision::F32);
         let scalar = Document::parse("[exec]\nbackend = \"scalar\"")
             .unwrap();
         assert_eq!(exec_from_doc(&scalar).unwrap().kind,
@@ -392,6 +442,33 @@ threads = 4
         let bad = Document::parse("[exec]\nbackend = \"gpu\"").unwrap();
         assert!(exec_from_doc(&bad).is_err());
         let bad = Document::parse("[exec]\nbackend = 3").unwrap();
+        assert!(exec_from_doc(&bad).is_err());
+    }
+
+    #[test]
+    fn exec_precision_parses_and_validates() {
+        let doc = Document::parse(
+            "[exec]\nbackend = \"simd\"\nprecision = \"mixed\"\n\
+             threads = 2").unwrap();
+        assert_eq!(exec_from_doc(&doc).unwrap(),
+                   ExecOptions::simd(2, Precision::Mixed));
+        let doc = Document::parse("[exec]\nbackend = \"simd\"").unwrap();
+        assert_eq!(exec_from_doc(&doc).unwrap().precision, Precision::F32);
+        // mixed without an explicit backend implies simd (CLI parity)
+        let doc = Document::parse("[exec]\nprecision = \"mixed\"").unwrap();
+        assert_eq!(exec_from_doc(&doc).unwrap().kind, BackendKind::Simd);
+        // mixed against an explicitly chosen non-simd backend is a
+        // hard error, never a silent override
+        let bad = Document::parse(
+            "[exec]\nbackend = \"blocked\"\nprecision = \"mixed\"")
+            .unwrap();
+        assert!(exec_from_doc(&bad).is_err());
+        // unknown precision is a hard error
+        let bad = Document::parse(
+            "[exec]\nbackend = \"simd\"\nprecision = \"fp64\"").unwrap();
+        assert!(exec_from_doc(&bad).is_err());
+        let bad = Document::parse(
+            "[exec]\nbackend = \"simd\"\nprecision = 16").unwrap();
         assert!(exec_from_doc(&bad).is_err());
     }
 

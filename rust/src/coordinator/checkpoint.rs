@@ -15,13 +15,16 @@ use crate::runtime::HostValue;
 /// Saved training state.
 #[derive(Debug, Clone)]
 pub struct Checkpoint {
+    /// Step the state was captured at.
     pub step: usize,
+    /// Loss at that step.
     pub loss: f64,
     /// (name, value) in artifact input order.
     pub buffers: Vec<(String, HostValue)>,
 }
 
 impl Checkpoint {
+    /// Write header + payload to `path` (see module docs for format).
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let mut header_entries = Vec::new();
         let mut payload: Vec<u8> = Vec::new();
@@ -52,6 +55,7 @@ impl Checkpoint {
         Ok(())
     }
 
+    /// Read and validate a checkpoint written by [`Checkpoint::save`].
     pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
         let mut f = std::fs::File::open(path.as_ref()).with_context(
             || format!("opening checkpoint {}", path.as_ref().display()))?;

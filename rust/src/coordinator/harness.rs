@@ -23,7 +23,7 @@ use super::inputs::synth_inputs;
 use crate::attention::{self, AttnParams};
 use crate::bench::{measure, measure_wallclock, skipped_row, Options,
                    Report, Row};
-use crate::exec::{Backend, ExecOptions, Scalar};
+use crate::exec::{self, Backend, ExecOptions, Scalar};
 use crate::iomodel::{self, MhaShape};
 use crate::perfmodel::{self, Bound, Machine};
 use crate::runtime::{ArtifactMeta, Engine, HostValue};
@@ -32,12 +32,18 @@ use crate::tensor::{Rng, Tensor};
 /// Harness knobs shared by the figure generators.
 #[derive(Debug, Clone, Copy)]
 pub struct HarnessOptions {
+    /// Warmup/measurement iteration policy.
     pub bench: Options,
     /// Host-memory admission budget (bytes): artifacts whose modeled peak
     /// exceeds it are reported as OOM instead of executed.
     pub mem_budget: usize,
     /// Host execution backend for the pure-Rust attention path.
     pub exec: ExecOptions,
+    /// The user explicitly pinned a backend (`--backend`/`--precision`
+    /// or `SPARK_EXEC_BACKEND`/`SPARK_EXEC_PRECISION`): the host
+    /// figures then bench only `scalar` + the configured backend
+    /// instead of sweeping the full roster.
+    pub exec_pinned: bool,
 }
 
 impl Default for HarnessOptions {
@@ -46,7 +52,24 @@ impl Default for HarnessOptions {
             bench: Options::default(),
             mem_budget: 8 << 30,
             exec: ExecOptions::default(),
+            exec_pinned: false,
         }
+    }
+}
+
+/// The backend set a host figure sweeps: the full `exec::roster`
+/// (scalar, blocked, simd, simd-mixed at the configured thread count)
+/// by default, or just `Scalar` + the configured backend when the user
+/// explicitly pinned one ([`HarnessOptions::exec_pinned`]).
+pub fn report_roster(opts: HarnessOptions) -> Vec<Box<dyn Backend>> {
+    if !opts.exec_pinned {
+        return exec::roster(opts.exec);
+    }
+    let configured = opts.exec.build();
+    if configured.name() == Scalar.name() {
+        vec![Box::new(Scalar)]
+    } else {
+        vec![Box::new(Scalar), configured]
     }
 }
 
@@ -273,9 +296,13 @@ pub fn fig12_e2e(eng: &Engine, opts: HarnessOptions) -> Result<Report> {
 /// One row of the §4.2.3 accuracy table.
 #[derive(Debug, Clone)]
 pub struct AccuracyRow {
+    /// Artifact (or artifact/gradient) being scored.
     pub name: String,
+    /// Mean relative error vs the f32 oracle.
     pub mean_rel_err: f64,
+    /// Mean absolute error vs the f32 oracle.
     pub mean_abs_err: f64,
+    /// Worst-case absolute error vs the f32 oracle.
     pub max_abs_err: f64,
 }
 
@@ -413,14 +440,21 @@ pub fn projected_fig12(machine: &Machine) -> Report {
 }
 
 /// Host-path backend comparison: run the pure-Rust attention path
-/// (oracle dataflow and block-streamed dataflow) under the `Scalar`
-/// reference backend and under the configured parallel backend, on the
-/// same inputs, and report both as bench rows.
+/// (oracle dataflow and block-streamed dataflow) under every execution
+/// backend of [`report_roster`] — by default the `Scalar` reference,
+/// `Blocked`, and `Simd` in both numeric modes at the configured
+/// thread count; just `Scalar` + the configured backend when pinned —
+/// on the same inputs, and report them side by side as bench rows.
 ///
 /// This is the artifact-free figure: it needs no `make artifacts`, so CI
-/// and fresh checkouts always produce it.  Outputs are cross-checked
-/// between backends before timings are accepted — a bench that silently
-/// drifts numerically is worse than no bench.
+/// and fresh checkouts always produce it.  Full-precision outputs are
+/// cross-checked against the Scalar reference before timings are
+/// accepted — a bench that silently drifts numerically is worse than no
+/// bench.  The mixed-precision backend deviates *by design*, so instead
+/// of a pass/fail gate its error against the f32 reference is recorded
+/// as report notes (max ULP distance + max abs error, mirroring the
+/// paper's §4.2.3 accuracy table), alongside per-backend speedup
+/// summaries.
 pub fn host_backend_report(ns: &[usize], bh: usize, d: usize,
                            backward: bool, opts: HarnessOptions)
                            -> Result<Report> {
@@ -428,14 +462,7 @@ pub fn host_backend_report(ns: &[usize], bh: usize, d: usize,
     let mut report = Report::new(format!(
         "Host MHA-{} — exec backends (bh={bh}, d={d})",
         if backward { "Backward" } else { "Forward" }));
-    let parallel = opts.exec.build();
-    // Scalar is always the baseline row; add the configured backend as
-    // the comparison row unless it *is* scalar (avoid duplicate rows
-    // and a 1.00× self-speedup).
-    let mut backends: Vec<&dyn Backend> = vec![&Scalar];
-    if parallel.name() != Scalar.name() {
-        backends.push(parallel.as_ref());
-    }
+    let backends = report_roster(opts);
     let block = 64usize;
     for &n in ns {
         let group = format!("host/d{d}");
@@ -448,29 +475,44 @@ pub fn host_backend_report(ns: &[usize], bh: usize, d: usize,
         // largest block ≤ 64 that divides n (streaming requires n % bq == 0)
         let bq = (1..=block.min(n)).rev().find(|b| n % b == 0).unwrap_or(1);
         let flops = attention::attention_flops(bh, n, d, false, backward);
-        let reference = if backward {
-            let lse = attention::mha_forward(&q, &k, &v, p, &Scalar).lse;
-            attention::mha_backward(&q, &k, &v, &dout, p, &Scalar).dq
-                .add(&attention::mha_backward_streaming(
-                    &q, &k, &v, &dout, &lse, p, bq, bq, &Scalar).dq)
-        } else {
-            attention::mha_forward(&q, &k, &v, p, &Scalar).output
+        // the pass under one backend, for cross-checking
+        let run_pass = |be: &dyn Backend| -> Tensor {
+            if backward {
+                let lse = attention::mha_forward(&q, &k, &v, p, be).lse;
+                attention::mha_backward(&q, &k, &v, &dout, p, be).dq
+                    .add(&attention::mha_backward_streaming(
+                        &q, &k, &v, &dout, &lse, p, bq, bq, be).dq)
+            } else {
+                attention::mha_forward(&q, &k, &v, p, be).output
+            }
         };
-        for (bi, &be) in backends.iter().enumerate() {
+        // only needed when there is a second backend to cross-check
+        let reference = if backends.len() > 1 {
+            Some(run_pass(&Scalar))
+        } else {
+            None
+        };
+        for (bi, be) in backends.iter().enumerate() {
+            let be = be.as_ref();
+            let mixed = be.precision() == exec::Precision::Mixed;
             // Numeric cross-check before timing — skipped for the
             // Scalar entry, which *is* the reference.
             if bi > 0 {
-                let check = if backward {
-                    let lse =
-                        attention::mha_forward(&q, &k, &v, p, be).lse;
-                    attention::mha_backward(&q, &k, &v, &dout, p, be).dq
-                        .add(&attention::mha_backward_streaming(
-                            &q, &k, &v, &dout, &lse, p, bq, bq, be).dq)
-                } else {
-                    attention::mha_forward(&q, &k, &v, p, be).output
-                };
-                let err = check.max_abs_diff(&reference);
-                if err > 1e-4 {
+                let reference = reference.as_ref()
+                    .expect("reference exists when roster > 1");
+                let check = run_pass(be);
+                let err = check.max_abs_diff(reference);
+                if mixed {
+                    // deviates by design: record, don't gate
+                    report.note(
+                        format!("{} vs f32 max_ulp ({pass}, n={n})",
+                                be.name()),
+                        check.max_ulp_diff(reference) as f64);
+                    report.note(
+                        format!("{} vs f32 max_abs ({pass}, n={n})",
+                                be.name()),
+                        err as f64);
+                } else if err > 1e-4 {
                     bail!("backend {} disagrees with scalar on host \
                            {pass} (n={n}, max err {err})", be.name());
                 }
@@ -514,11 +556,13 @@ pub fn host_backend_report(ns: &[usize], bh: usize, d: usize,
             }
         }
     }
-    if backends.len() > 1 {
-        if let Some((mean, max)) =
-            report.speedup_summary(&parallel.name(), "scalar") {
-            info!("host {pass}: {} vs scalar: avg {mean:.2}× \
-                   (max {max:.2}×)", parallel.name());
+    for be in backends.iter().skip(1) {
+        let name = be.name();
+        if let Some((mean, max)) = report.speedup_summary(&name, "scalar") {
+            report.note(format!("speedup {name} vs scalar (mean)"), mean);
+            report.note(format!("speedup {name} vs scalar (max)"), max);
+            info!("host {pass}: {name} vs scalar: avg {mean:.2}× \
+                   (max {max:.2}×)");
         }
     }
     Ok(report)

@@ -15,5 +15,5 @@ pub mod trainer;
 
 pub use harness::{accuracy_report, fig10_forward, fig11_backward,
                   fig12_e2e, host_backend_report, io_report,
-                  projected_fig10, projected_fig12};
+                  projected_fig10, projected_fig12, report_roster};
 pub use trainer::{TrainOutcome, Trainer};

@@ -18,17 +18,23 @@ use crate::runtime::{Engine, HostValue};
 /// Summary of a finished run.
 #[derive(Debug, Clone)]
 pub struct TrainOutcome {
+    /// Optimizer steps executed.
     pub steps: usize,
+    /// Per-step loss history.
     pub losses: Vec<f64>,
+    /// Tokens consumed per step (batch × seq).
     pub tokens_per_step: usize,
+    /// Mean wallclock per step, seconds.
     pub mean_step_seconds: f64,
 }
 
 impl TrainOutcome {
+    /// Loss at step 1 (NaN if no steps ran).
     pub fn first_loss(&self) -> f64 {
         self.losses.first().copied().unwrap_or(f64::NAN)
     }
 
+    /// Loss at the final step (NaN if no steps ran).
     pub fn last_loss(&self) -> f64 {
         self.losses.last().copied().unwrap_or(f64::NAN)
     }
@@ -45,10 +51,12 @@ impl TrainOutcome {
 pub struct Trainer<'e> {
     engine: &'e Engine,
     cfg: TrainConfig,
+    /// Run-time counters/timings, dumped by `--metrics-out`.
     pub metrics: Registry,
 }
 
 impl<'e> Trainer<'e> {
+    /// Trainer bound to an engine and a validated config.
     pub fn new(engine: &'e Engine, cfg: TrainConfig) -> Self {
         Trainer { engine, cfg, metrics: Registry::new() }
     }

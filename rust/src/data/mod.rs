@@ -29,6 +29,8 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// Batcher over `tokens` with `batch` rows of `seq + 1` tokens each
+    /// (panics if the corpus holds fewer than `batch` windows).
     pub fn new(tokens: Vec<i32>, batch: usize, seq: usize, seed: u64)
                -> Self {
         let window = seq + 1;
@@ -81,6 +83,7 @@ impl Batcher {
         out
     }
 
+    /// Window length in tokens (seq + 1).
     pub fn window(&self) -> usize {
         self.window
     }

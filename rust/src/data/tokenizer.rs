@@ -9,20 +9,25 @@
 pub struct ByteTokenizer;
 
 impl ByteTokenizer {
+    /// Vocabulary size (one id per byte value).
     pub const VOCAB: usize = 256;
 
+    /// The (stateless) tokenizer.
     pub fn new() -> Self {
         ByteTokenizer
     }
 
+    /// Bytes → token ids (identity embedding into i32).
     pub fn encode(&self, text: &[u8]) -> Vec<i32> {
         text.iter().map(|&b| b as i32).collect()
     }
 
+    /// UTF-8 text → token ids over its bytes.
     pub fn encode_str(&self, text: &str) -> Vec<i32> {
         self.encode(text.as_bytes())
     }
 
+    /// Token ids → bytes (ids are masked to 0..=255).
     pub fn decode(&self, tokens: &[i32]) -> Vec<u8> {
         tokens.iter().map(|&t| {
             debug_assert!((0..256).contains(&t), "token {t} out of range");
@@ -30,6 +35,7 @@ impl ByteTokenizer {
         }).collect()
     }
 
+    /// Token ids → text, replacing invalid UTF-8 sequences.
     pub fn decode_lossy(&self, tokens: &[i32]) -> String {
         String::from_utf8_lossy(&self.decode(tokens)).into_owned()
     }

@@ -11,14 +11,25 @@
 //!   order as `Scalar`, and the tile partition never depends on the
 //!   thread count, so results are bitwise-identical across
 //!   `exec.threads ∈ {1, 2, 8, …}` (and match `Scalar` exactly).
+//! * [`Simd`] — the `Blocked` tiling vectorized with AVX2/FMA
+//!   (runtime-detected, portable fallback elsewhere), with a numeric
+//!   mode switch: [`Precision::F32`] keeps the bitwise contract above,
+//!   [`Precision::Mixed`] emulates the paper's TCU numerics (bf16
+//!   operands quantized at tile-pack time, f32 accumulators).
 //!
 //! The backend seam is what future scaling PRs (sharding, device
 //! backends, batched serving) plug into: anything that can run three
 //! batched matmul flavours and a task pool can host the attention path.
+//! `Simd`'s [`Precision`] is likewise the seam future quantized
+//! backends (int8, fp8) thread their numerics through.
+
+pub mod simd;
+
+pub use simd::{Precision, Simd};
 
 use anyhow::{bail, Result};
 
-use crate::tensor::{self, dims3, Tensor};
+use crate::tensor::{self, bf16, dims3, Tensor};
 
 /// Row-block assigned to one worker task.
 pub const MC: usize = 64;
@@ -40,6 +51,14 @@ pub trait Backend: Sync {
 
     /// Worker-pool width (1 for serial backends).
     fn threads(&self) -> usize;
+
+    /// Numeric mode this backend computes in.  Everything except the
+    /// mixed-precision `Simd` runs full f32; consumers (the streaming
+    /// attention paths) use this to decide whether to quantize their
+    /// tile operands the way the backend's own matmuls do.
+    fn precision(&self) -> Precision {
+        Precision::F32
+    }
 
     /// (b, m, k) × (b, k, n) → (b, m, n).
     fn batch_matmul(&self, a: &Tensor, b: &Tensor) -> Tensor;
@@ -171,23 +190,13 @@ impl Backend for Blocked {
         assert_eq!(ka, kb, "inner dim mismatch");
         let mut out = vec![0.0f32; ba * m * n];
         let (ad, bd) = (a.data(), b.data());
-        let (mc, kc) = (self.mc, self.kc);
-        {
-            let mut tasks: Vec<Task<'_>> = Vec::new();
-            let mut rest: &mut [f32] = &mut out;
-            for bi in 0..ba {
-                let ap = &ad[bi * m * ka..(bi + 1) * m * ka];
-                let bp = &bd[bi * ka * n..(bi + 1) * ka * n];
-                for i0 in (0..m).step_by(mc) {
-                    let rows = mc.min(m - i0);
-                    let tile = carve(&mut rest, rows * n);
-                    tasks.push(Box::new(move || {
-                        nn_tile(ap, bp, tile, i0, rows, ka, n, kc);
-                    }));
-                }
-            }
-            self.run_tasks(tasks);
-        }
+        let kc = self.kc;
+        par_batch_row_tiles(self.threads, ba, m, n, self.mc, &mut out,
+                            |bi, i0, rows, tile| {
+            let ap = &ad[bi * m * ka..(bi + 1) * m * ka];
+            let bp = &bd[bi * ka * n..(bi + 1) * ka * n];
+            nn_tile(ap, bp, tile, i0, rows, ka, n, kc);
+        });
         Tensor::new(vec![ba, m, n], out)
     }
 
@@ -198,23 +207,13 @@ impl Backend for Blocked {
         assert_eq!(ka, kb, "inner dim mismatch");
         let mut out = vec![0.0f32; ba * m * n];
         let (ad, bd) = (a.data(), b.data());
-        let (mc, kc) = (self.mc, self.kc);
-        {
-            let mut tasks: Vec<Task<'_>> = Vec::new();
-            let mut rest: &mut [f32] = &mut out;
-            for bi in 0..ba {
-                let ap = &ad[bi * m * ka..(bi + 1) * m * ka];
-                let bp = &bd[bi * n * ka..(bi + 1) * n * ka];
-                for i0 in (0..m).step_by(mc) {
-                    let rows = mc.min(m - i0);
-                    let tile = carve(&mut rest, rows * n);
-                    tasks.push(Box::new(move || {
-                        nt_tile(ap, bp, tile, i0, rows, ka, n, kc);
-                    }));
-                }
-            }
-            self.run_tasks(tasks);
-        }
+        let kc = self.kc;
+        par_batch_row_tiles(self.threads, ba, m, n, self.mc, &mut out,
+                            |bi, i0, rows, tile| {
+            let ap = &ad[bi * m * ka..(bi + 1) * m * ka];
+            let bp = &bd[bi * n * ka..(bi + 1) * n * ka];
+            nt_tile(ap, bp, tile, i0, rows, ka, n, kc);
+        });
         Tensor::new(vec![ba, m, n], out)
     }
 
@@ -225,55 +224,76 @@ impl Backend for Blocked {
         assert_eq!(ka, kb, "inner dim mismatch");
         let mut out = vec![0.0f32; ba * m * n];
         let (ad, bd) = (a.data(), b.data());
-        let mc = self.mc;
-        {
-            let mut tasks: Vec<Task<'_>> = Vec::new();
-            let mut rest: &mut [f32] = &mut out;
-            for bi in 0..ba {
-                let ap = &ad[bi * ka * m..(bi + 1) * ka * m];
-                let bp = &bd[bi * ka * n..(bi + 1) * ka * n];
-                for i0 in (0..m).step_by(mc) {
-                    let rows = mc.min(m - i0);
-                    let tile = carve(&mut rest, rows * n);
-                    tasks.push(Box::new(move || {
-                        tn_tile(ap, bp, tile, i0, rows, ka, m, n);
-                    }));
-                }
-            }
-            self.run_tasks(tasks);
-        }
+        par_batch_row_tiles(self.threads, ba, m, n, self.mc, &mut out,
+                            |bi, i0, rows, tile| {
+            let ap = &ad[bi * ka * m..(bi + 1) * ka * m];
+            let bp = &bd[bi * ka * n..(bi + 1) * ka * n];
+            tn_tile(ap, bp, tile, i0, rows, ka, m, n);
+        });
         Tensor::new(vec![ba, m, n], out)
     }
 
     fn run_tasks<'s>(&self, tasks: Vec<Task<'s>>) {
-        let t = self.threads.min(tasks.len()).max(1);
-        if t == 1 {
-            for task in tasks {
-                task();
-            }
-            return;
-        }
-        // Static round-robin keeps the partition independent of timing;
-        // tiles are uniform so this balances well without a work queue.
-        let mut buckets: Vec<Vec<Task<'s>>> =
-            (0..t).map(|_| Vec::new()).collect();
-        for (i, task) in tasks.into_iter().enumerate() {
-            buckets[i % t].push(task);
-        }
-        let mine = buckets.remove(0);
-        std::thread::scope(|scope| {
-            for bucket in buckets {
-                scope.spawn(move || {
-                    for task in bucket {
-                        task();
-                    }
-                });
-            }
-            for task in mine {
-                task();
-            }
-        });
+        run_pool(self.threads, tasks);
     }
+}
+
+/// Execute `tasks` on a transient scoped pool of up to `threads`
+/// workers (shared by the parallel backends).  Static round-robin
+/// assignment keeps the partition independent of timing; tiles are
+/// uniform so this balances well without a work queue.
+pub fn run_pool<'s>(threads: usize, tasks: Vec<Task<'s>>) {
+    let t = threads.min(tasks.len()).max(1);
+    if t == 1 {
+        for task in tasks {
+            task();
+        }
+        return;
+    }
+    let mut buckets: Vec<Vec<Task<'s>>> =
+        (0..t).map(|_| Vec::new()).collect();
+    for (i, task) in tasks.into_iter().enumerate() {
+        buckets[i % t].push(task);
+    }
+    let mine = buckets.remove(0);
+    std::thread::scope(|scope| {
+        for bucket in buckets {
+            scope.spawn(move || {
+                for task in bucket {
+                    task();
+                }
+            });
+        }
+        for task in mine {
+            task();
+        }
+    });
+}
+
+/// The shared matmul fan-out of the parallel backends: partition a
+/// `(ba, m, n)` output into `mc`-row tiles per batch entry and run
+/// `tile_fn(bi, i0, rows, tile)` over a `run_pool` of `threads`
+/// workers.  Tile creation order (batch-major, rows ascending) and the
+/// `carve` hand-out never depend on the thread count, which is half of
+/// the backends' determinism contract (the other half is each tile
+/// kernel's fixed accumulation order).
+pub fn par_batch_row_tiles<F>(threads: usize, ba: usize, m: usize,
+                              n: usize, mc: usize, out: &mut [f32],
+                              tile_fn: F)
+where
+    F: Fn(usize, usize, usize, &mut [f32]) + Sync,
+{
+    let mut tasks: Vec<Task<'_>> = Vec::new();
+    let mut rest: &mut [f32] = out;
+    let f = &tile_fn;
+    for bi in 0..ba {
+        for i0 in (0..m).step_by(mc.max(1)) {
+            let rows = mc.min(m - i0);
+            let tile = carve(&mut rest, rows * n);
+            tasks.push(Box::new(move || f(bi, i0, rows, tile)));
+        }
+    }
+    run_pool(threads, tasks);
 }
 
 /// NN tile: rows `i0..i0+rows` of A·B, k-blocked, axpy inner loop.
@@ -367,24 +387,34 @@ fn tn_tile(ap: &[f32], bp: &[f32], tile: &mut [f32], i0: usize, rows: usize,
 /// Which backend family to instantiate.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BackendKind {
+    /// The single-threaded reference loops ([`Scalar`]).
     Scalar,
+    /// The parallel cache-blocked backend ([`Blocked`]).
     Blocked,
+    /// The vectorized backend with selectable numerics ([`Simd`]).
+    Simd,
 }
 
 impl BackendKind {
+    /// Parse the config/CLI spelling (`"scalar"`, `"blocked"`, or
+    /// `"simd"`).
     pub fn parse(s: &str) -> Result<BackendKind> {
         match s {
             "scalar" => Ok(BackendKind::Scalar),
             "blocked" => Ok(BackendKind::Blocked),
+            "simd" => Ok(BackendKind::Simd),
             other => bail!("unknown exec backend {other:?} \
-                            (expected \"scalar\" or \"blocked\")"),
+                            (expected \"scalar\", \"blocked\", or \
+                            \"simd\")"),
         }
     }
 
+    /// Canonical config spelling (inverse of [`BackendKind::parse`]).
     pub fn name(self) -> &'static str {
         match self {
             BackendKind::Scalar => "scalar",
             BackendKind::Blocked => "blocked",
+            BackendKind::Simd => "simd",
         }
     }
 }
@@ -392,24 +422,78 @@ impl BackendKind {
 /// Backend selection carried through config / CLI / harness options.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ExecOptions {
+    /// Backend family to instantiate.
     pub kind: BackendKind,
     /// Worker threads; 0 = auto-detect.  Ignored by `Scalar`.
     pub threads: usize,
+    /// Numeric mode; `Mixed` is only honoured by the `Simd` backend
+    /// (see [`ExecOptions::validate`]).
+    pub precision: Precision,
 }
 
 impl Default for ExecOptions {
     fn default() -> Self {
-        ExecOptions { kind: BackendKind::Blocked, threads: 0 }
+        ExecOptions {
+            kind: BackendKind::Blocked,
+            threads: 0,
+            precision: Precision::F32,
+        }
     }
 }
 
 impl ExecOptions {
+    /// The single-threaded reference selection.
     pub fn scalar() -> Self {
-        ExecOptions { kind: BackendKind::Scalar, threads: 1 }
+        ExecOptions {
+            kind: BackendKind::Scalar,
+            threads: 1,
+            precision: Precision::F32,
+        }
     }
 
+    /// The parallel cache-blocked selection (0 = auto threads).
     pub fn blocked(threads: usize) -> Self {
-        ExecOptions { kind: BackendKind::Blocked, threads }
+        ExecOptions {
+            kind: BackendKind::Blocked,
+            threads,
+            precision: Precision::F32,
+        }
+    }
+
+    /// The vectorized selection at a given numeric mode.
+    pub fn simd(threads: usize, precision: Precision) -> Self {
+        ExecOptions { kind: BackendKind::Simd, threads, precision }
+    }
+
+    /// Apply an explicit `precision` choice to this selection — the one
+    /// shared implementation of the "mixed implies simd" rule for the
+    /// CLI and the bench environment.  `Mixed` exists only in the
+    /// `Simd` backend, so when the backend itself was **not**
+    /// explicitly chosen (`backend_explicit == false`) a mixed request
+    /// selects `Simd` instead of erroring against a default nobody
+    /// picked; an explicitly chosen non-simd backend is left alone and
+    /// fails [`ExecOptions::validate`].
+    pub fn with_precision(mut self, precision: Precision,
+                          backend_explicit: bool) -> Self {
+        self.precision = precision;
+        if !backend_explicit && precision == Precision::Mixed {
+            self.kind = BackendKind::Simd;
+        }
+        self
+    }
+
+    /// Reject combinations the backends cannot honour: mixed precision
+    /// is a property of the `Simd` kernels, so `precision = "mixed"`
+    /// with any other backend is a configuration error rather than a
+    /// silent full-precision run.
+    pub fn validate(self) -> Result<()> {
+        if self.precision == Precision::Mixed
+            && self.kind != BackendKind::Simd
+        {
+            bail!("precision \"mixed\" requires backend = \"simd\" \
+                   (got backend = {:?})", self.kind.name());
+        }
+        Ok(())
     }
 
     /// Instantiate the configured backend.
@@ -417,31 +501,67 @@ impl ExecOptions {
         match self.kind {
             BackendKind::Scalar => Box::new(Scalar),
             BackendKind::Blocked => Box::new(Blocked::new(self.threads)),
+            BackendKind::Simd => {
+                Box::new(Simd::new(self.threads, self.precision))
+            }
         }
     }
 }
 
-/// Cheap startup self-check: the backend's three matmul flavours must
-/// reproduce the Scalar reference on a non-trivial case.  Run by
-/// `spark train` before committing to a long run.
-pub fn self_check(be: &dyn Backend) -> Result<()> {
+/// One instance of every available backend at the configured thread
+/// count: the `Scalar` reference, `Blocked`, and `Simd` in both
+/// numeric modes.  This is the cross-check set of [`self_check`] /
+/// `attention::witness_self_check`, and the side-by-side roster of the
+/// host bench figures — whatever `opts.kind` selects is always a
+/// member.
+pub fn roster(opts: ExecOptions) -> Vec<Box<dyn Backend>> {
+    vec![
+        Box::new(Scalar),
+        Box::new(Blocked::new(opts.threads)),
+        Box::new(Simd::new(opts.threads, Precision::F32)),
+        Box::new(Simd::new(opts.threads, Precision::Mixed)),
+    ]
+}
+
+/// Cheap startup cross-check: every available backend (the full
+/// [`roster`], not just the configured one) runs the three matmul
+/// flavours on a non-trivial case, and all results are compared
+/// **pairwise** so a failure names the diverging pair.  Pure-f32 pairs
+/// must agree to ~1 ulp; pairs involving the mixed backend get a loose
+/// bf16-scaled sanity bound (the rigorous per-element bound lives in
+/// `rust/tests/exec_backend.rs`).  Run by `spark train` before
+/// committing to a long run.
+pub fn self_check(opts: ExecOptions) -> Result<()> {
+    let backends = roster(opts);
     let mut rng = crate::tensor::Rng::new(0xC0FFEE);
     let a = Tensor::randn(vec![3, 37, 19], &mut rng);
     let b = Tensor::randn(vec![3, 19, 23], &mut rng);
     let bt = Tensor::randn(vec![3, 23, 19], &mut rng);
     let at = Tensor::randn(vec![3, 19, 37], &mut rng);
-    let checks = [
-        ("nn", be.batch_matmul(&a, &b), Scalar.batch_matmul(&a, &b)),
-        ("nt", be.batch_matmul_nt(&a, &bt),
-         Scalar.batch_matmul_nt(&a, &bt)),
-        ("tn", be.batch_matmul_tn(&at, &b),
-         Scalar.batch_matmul_tn(&at, &b)),
-    ];
-    for (name, got, want) in &checks {
-        let err = got.max_abs_diff(want);
-        if err > 1e-5 {
-            bail!("backend {} failed the {name} self-check (max err {err})",
-                  be.name());
+    for flavour in ["nn", "nt", "tn"] {
+        let outs: Vec<Tensor> = backends
+            .iter()
+            .map(|be| match flavour {
+                "nn" => be.batch_matmul(&a, &b),
+                "nt" => be.batch_matmul_nt(&a, &bt),
+                _ => be.batch_matmul_tn(&at, &b),
+            })
+            .collect();
+        let scale = outs[0].data().iter()
+            .fold(0.0f32, |m, &x| m.max(x.abs()));
+        let mixed_tol = scale * bf16::EPSILON * 16.0 + 1e-6;
+        for i in 0..backends.len() {
+            for j in i + 1..backends.len() {
+                let same_mode =
+                    backends[i].precision() == backends[j].precision();
+                let tol = if same_mode { 1e-5 } else { mixed_tol };
+                let err = outs[i].max_abs_diff(&outs[j]);
+                if err > tol {
+                    bail!("exec self-check: backends {} and {} diverge \
+                           on {flavour} (max err {err}, tol {tol})",
+                          backends[i].name(), backends[j].name());
+                }
+            }
         }
     }
     Ok(())
@@ -564,17 +684,71 @@ mod tests {
                    BackendKind::Scalar);
         assert_eq!(BackendKind::parse("blocked").unwrap(),
                    BackendKind::Blocked);
+        assert_eq!(BackendKind::parse("simd").unwrap(), BackendKind::Simd);
         assert!(BackendKind::parse("gpu").is_err());
         let be = ExecOptions::blocked(2).build();
         assert_eq!(be.threads(), 2);
         assert_eq!(be.name(), "blocked_t2");
         assert_eq!(ExecOptions::scalar().build().name(), "scalar");
+        assert_eq!(ExecOptions::simd(4, Precision::F32).build().name(),
+                   "simd_t4");
+        assert_eq!(ExecOptions::simd(4, Precision::Mixed).build().name(),
+                   "simd_t4_mixed");
         assert!(ExecOptions::default().build().threads() >= 1);
     }
 
     #[test]
-    fn self_check_passes_for_both() {
-        self_check(&Scalar).unwrap();
-        self_check(&Blocked::new(0)).unwrap();
+    fn validate_rejects_mixed_on_non_simd() {
+        assert!(ExecOptions::simd(2, Precision::Mixed).validate().is_ok());
+        assert!(ExecOptions::blocked(2).validate().is_ok());
+        let bad = ExecOptions {
+            precision: Precision::Mixed,
+            ..ExecOptions::blocked(2)
+        };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn with_precision_implies_simd_only_for_implicit_backends() {
+        // default backend + mixed → simd is implied
+        let opts = ExecOptions::default()
+            .with_precision(Precision::Mixed, false);
+        assert_eq!(opts.kind, BackendKind::Simd);
+        assert!(opts.validate().is_ok());
+        // explicitly chosen blocked + mixed → left alone, fails validate
+        let opts = ExecOptions::blocked(2)
+            .with_precision(Precision::Mixed, true);
+        assert_eq!(opts.kind, BackendKind::Blocked);
+        assert!(opts.validate().is_err());
+        // f32 never rewrites the backend
+        let opts = ExecOptions::blocked(2)
+            .with_precision(Precision::F32, false);
+        assert_eq!(opts.kind, BackendKind::Blocked);
+    }
+
+    #[test]
+    fn backend_precision_defaults_to_f32() {
+        assert_eq!(Scalar.precision(), Precision::F32);
+        assert_eq!(Blocked::new(1).precision(), Precision::F32);
+        assert_eq!(Simd::new(1, Precision::Mixed).precision(),
+                   Precision::Mixed);
+    }
+
+    #[test]
+    fn roster_covers_every_configured_kind() {
+        for opts in [ExecOptions::scalar(), ExecOptions::blocked(2),
+                     ExecOptions::simd(2, Precision::F32),
+                     ExecOptions::simd(2, Precision::Mixed)] {
+            let names: Vec<String> =
+                roster(opts).iter().map(|b| b.name()).collect();
+            assert!(names.contains(&opts.build().name()),
+                    "{names:?} missing {}", opts.build().name());
+        }
+    }
+
+    #[test]
+    fn self_check_passes_for_all_backends_pairwise() {
+        self_check(ExecOptions::default()).unwrap();
+        self_check(ExecOptions::simd(2, Precision::Mixed)).unwrap();
     }
 }

@@ -1,0 +1,542 @@
+//! Vectorized, mixed-precision execution backend — the host-side
+//! emulation of the paper's Tensor-Core numerics.
+//!
+//! [`Simd`] vectorizes the `Blocked` microkernels with AVX2/FMA
+//! intrinsics (runtime `is_x86_feature_detected!` dispatch, with a
+//! portable chunked-unrolled fallback on every other target) and
+//! supports two numeric modes, selected by [`Precision`]:
+//!
+//! * **`f32`** — full-precision operands and the exact per-element
+//!   operation order of the `Scalar` reference (multiply, then add,
+//!   k ascending, same zero-skips).  Results are **bitwise identical**
+//!   to `Scalar` and `Blocked` on every target: the AVX path uses
+//!   separate `mul`/`add` instructions (never FMA, which would skip the
+//!   intermediate rounding), and lanes never reassociate the k-chain.
+//! * **`mixed`** — the paper's TCU contract (§3.1): every GEMM operand
+//!   is quantized to bf16 (`tensor::bf16::quantize`, round-to-nearest-
+//!   even) as it is staged for the kernels, while every accumulator
+//!   stays f32.  The FMA form is used where available.  Results deviate
+//!   from f32 by a bounded, bf16-epsilon-derived error (see
+//!   `rust/tests/exec_backend.rs`) but remain bitwise-deterministic
+//!   across thread counts, because quantization is elementwise and the
+//!   accumulation order is fixed by the tile partition alone.
+//!
+//! The quantization point mirrors where a Volta kernel converts to
+//! fp16 fragments before an `mma` issue: once per operand element
+//! before it enters a kernel (quantization is elementwise, so staging
+//! a whole operand up front equals quantizing per tile while doing the
+//! conversion once), never on accumulators, never on softmax
+//! statistics.
+
+use anyhow::{bail, Result};
+
+use super::{available_threads, par_batch_row_tiles, run_pool, Backend,
+            Task, KC, MC};
+use crate::tensor::{bf16, dims3, Tensor};
+
+/// Lane width of the packed panels (AVX2 = 8 × f32).
+const LANES: usize = 8;
+
+/// Numeric mode of the [`Simd`] backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// Full-precision f32 operands and accumulators; bitwise-matching
+    /// the `Scalar` reference (the existing accumulation-order
+    /// determinism contract).
+    #[default]
+    F32,
+    /// TCU emulation: operands quantized to bf16 at kernel-staging
+    /// time, f32 accumulators — the paper's FP16-in/FP32-accumulate
+    /// contract mapped onto this port's bf16 interchange dtype.
+    Mixed,
+}
+
+impl Precision {
+    /// Parse the config/CLI spelling (`"f32"` or `"mixed"`).
+    pub fn parse(s: &str) -> Result<Precision> {
+        match s {
+            "f32" => Ok(Precision::F32),
+            "mixed" => Ok(Precision::Mixed),
+            other => bail!("unknown precision {other:?} \
+                            (expected \"f32\" or \"mixed\")"),
+        }
+    }
+
+    /// Canonical config spelling (inverse of [`Precision::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Mixed => "mixed",
+        }
+    }
+}
+
+/// Vectorized execution backend with selectable numerics.
+#[derive(Debug, Clone, Copy)]
+pub struct Simd {
+    threads: usize,
+    precision: Precision,
+    mc: usize,
+    kc: usize,
+    use_avx: bool,
+}
+
+impl Simd {
+    /// Backend with the default (`MC`×`KC`) blocking.  `threads == 0`
+    /// resolves to the machine's available parallelism.
+    pub fn new(threads: usize, precision: Precision) -> Self {
+        Simd::with_blocks(threads, precision, MC, KC)
+    }
+
+    /// Custom block sizes (property tests sweep these).
+    pub fn with_blocks(threads: usize, precision: Precision, mc: usize,
+                       kc: usize) -> Self {
+        let threads = if threads == 0 {
+            available_threads()
+        } else {
+            threads
+        };
+        Simd {
+            threads,
+            precision,
+            mc: mc.max(1),
+            kc: kc.max(1),
+            use_avx: detect_avx(),
+        }
+    }
+
+    /// Whether the AVX2+FMA code path was selected at construction
+    /// (false on non-x86_64 targets or older CPUs — the portable
+    /// fallback preserves the same numerics either way).
+    pub fn avx(&self) -> bool {
+        self.use_avx
+    }
+
+    /// Mixed mode fuses multiply-add (no intermediate rounding); f32
+    /// mode must not, to stay bitwise-equal to `Scalar`.
+    fn fused(&self) -> bool {
+        self.precision == Precision::Mixed
+    }
+
+    /// `acc[i] += a * b[i]` over the full slice, honouring this
+    /// backend's rounding mode.
+    #[inline]
+    fn axpy(&self, acc: &mut [f32], a: f32, b: &[f32]) {
+        debug_assert_eq!(acc.len(), b.len());
+        #[cfg(target_arch = "x86_64")]
+        if self.use_avx {
+            // SAFETY: `use_avx` is only true when AVX2 and FMA were
+            // detected at construction (`detect_avx`).
+            unsafe { avx::axpy(acc, a, b, self.fused()) };
+            return;
+        }
+        portable::axpy(acc, a, b, self.fused());
+    }
+
+    /// `accrow[j] += arow[k] * packb[k*LANES + j]` for all k, over one
+    /// 8-lane accumulator row (`accrow.len() == LANES`,
+    /// `packb.len() == arow.len() * LANES`).
+    #[inline]
+    fn panel(&self, accrow: &mut [f32], arow: &[f32], packb: &[f32]) {
+        debug_assert_eq!(accrow.len(), LANES);
+        debug_assert_eq!(packb.len(), arow.len() * LANES);
+        #[cfg(target_arch = "x86_64")]
+        if self.use_avx {
+            // SAFETY: gated on the construction-time AVX2+FMA probe;
+            // slice lengths are asserted above.
+            unsafe { avx::panel(accrow, arow, packb, self.fused()) };
+            return;
+        }
+        portable::panel(accrow, arow, packb, self.fused());
+    }
+
+    /// NN tile: rows `i0..i0+rows` of A·B, k-blocked, vectorized axpy
+    /// rows.  Per output element the k-terms accumulate ascending with
+    /// a zero-skip — the `tensor::batch_matmul` order exactly.
+    /// Operands arrive already staged (quantized in mixed mode).
+    fn nn_tile(&self, ap: &[f32], bp: &[f32], tile: &mut [f32], i0: usize,
+               rows: usize, ka: usize, n: usize) {
+        for kk in (0..ka).step_by(self.kc) {
+            let kend = (kk + self.kc).min(ka);
+            for r in 0..rows {
+                let arow = &ap[(i0 + r) * ka + kk..(i0 + r) * ka + kend];
+                let orow = &mut tile[r * n..(r + 1) * n];
+                for (k, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    self.axpy(orow, av,
+                              &bp[(kk + k) * n..(kk + k + 1) * n]);
+                }
+            }
+        }
+    }
+
+    /// NT tile: rows `i0..i0+rows` of A·Bᵀ.  The B panel is
+    /// transpose-packed into k-major 8-wide lanes, so the inner loop is
+    /// a contiguous broadcast-multiply-accumulate.  Each output element
+    /// remains a single k-ascending chain, matching
+    /// `tensor::batch_matmul_nt` bitwise in f32 mode.
+    fn nt_tile(&self, ap: &[f32], bp: &[f32], tile: &mut [f32], i0: usize,
+               rows: usize, ka: usize, n: usize) {
+        let kc = self.kc.min(ka.max(1));
+        let mut packb = vec![0.0f32; kc * LANES];
+        let mut acc = vec![0.0f32; rows * LANES];
+        let mut j0 = 0;
+        while j0 < n {
+            let nr = LANES.min(n - j0);
+            acc.fill(0.0);
+            for kk in (0..ka).step_by(kc) {
+                let kend = (kk + kc).min(ka);
+                // transpose-pack B[j0..j0+nr][kk..kend], k-major
+                for k in kk..kend {
+                    let dst = &mut packb[(k - kk) * LANES
+                                         ..(k - kk + 1) * LANES];
+                    for (jj, d) in dst[..nr].iter_mut().enumerate() {
+                        *d = bp[(j0 + jj) * ka + k];
+                    }
+                    dst[nr..].fill(0.0);
+                }
+                for r in 0..rows {
+                    let arow =
+                        &ap[(i0 + r) * ka + kk..(i0 + r) * ka + kend];
+                    let accrow = &mut acc[r * LANES..(r + 1) * LANES];
+                    self.panel(accrow, arow, &packb[..(kend - kk) * LANES]);
+                }
+            }
+            for r in 0..rows {
+                tile[r * n + j0..r * n + j0 + nr]
+                    .copy_from_slice(&acc[r * LANES..r * LANES + nr]);
+            }
+            j0 += nr;
+        }
+    }
+
+    /// TN tile: output rows `i0..i0+rows` (columns of A), k-ascending
+    /// vectorized axpy with the `tensor::batch_matmul_tn` zero-skip.
+    fn tn_tile(&self, ap: &[f32], bp: &[f32], tile: &mut [f32], i0: usize,
+               rows: usize, ka: usize, m: usize, n: usize) {
+        for k in 0..ka {
+            let arow = &ap[k * m..(k + 1) * m];
+            let brow = &bp[k * n..(k + 1) * n];
+            for r in 0..rows {
+                let av = arow[i0 + r];
+                if av == 0.0 {
+                    continue;
+                }
+                let orow = &mut tile[r * n..(r + 1) * n];
+                self.axpy(orow, av, brow);
+            }
+        }
+    }
+
+    /// Stage a pair of operands for the kernels: in mixed mode both are
+    /// bf16-quantized **once per matmul** here (the operand-pack point
+    /// of the TCU contract — quantization is elementwise, so staging up
+    /// front is numerically identical to quantizing per tile while
+    /// doing the conversion work exactly once); in f32 mode the inputs
+    /// are borrowed untouched.
+    fn stage<'a>(&self, a: &'a [f32], b: &'a [f32],
+                 store: &'a mut Option<(Vec<f32>, Vec<f32>)>)
+                 -> (&'a [f32], &'a [f32]) {
+        if !self.fused() {
+            return (a, b);
+        }
+        let quant = |xs: &[f32]| -> Vec<f32> {
+            xs.iter().map(|&x| bf16::quantize(x)).collect()
+        };
+        let pair = store.insert((quant(a), quant(b)));
+        (&pair.0, &pair.1)
+    }
+}
+
+impl Backend for Simd {
+    fn name(&self) -> String {
+        match self.precision {
+            Precision::F32 => format!("simd_t{}", self.threads),
+            Precision::Mixed => format!("simd_t{}_mixed", self.threads),
+        }
+    }
+
+    fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    fn batch_matmul(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        let (ba, m, ka) = dims3(a);
+        let (bb, kb, n) = dims3(b);
+        assert_eq!(ba, bb, "batch mismatch");
+        assert_eq!(ka, kb, "inner dim mismatch");
+        let mut out = vec![0.0f32; ba * m * n];
+        let mut staged = None;
+        let (ad, bd) = self.stage(a.data(), b.data(), &mut staged);
+        let this = *self;
+        par_batch_row_tiles(self.threads, ba, m, n, self.mc, &mut out,
+                            |bi, i0, rows, tile| {
+            let ap = &ad[bi * m * ka..(bi + 1) * m * ka];
+            let bp = &bd[bi * ka * n..(bi + 1) * ka * n];
+            this.nn_tile(ap, bp, tile, i0, rows, ka, n);
+        });
+        Tensor::new(vec![ba, m, n], out)
+    }
+
+    fn batch_matmul_nt(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        let (ba, m, ka) = dims3(a);
+        let (bb, n, kb) = dims3(b);
+        assert_eq!(ba, bb, "batch mismatch");
+        assert_eq!(ka, kb, "inner dim mismatch");
+        let mut out = vec![0.0f32; ba * m * n];
+        let mut staged = None;
+        let (ad, bd) = self.stage(a.data(), b.data(), &mut staged);
+        let this = *self;
+        par_batch_row_tiles(self.threads, ba, m, n, self.mc, &mut out,
+                            |bi, i0, rows, tile| {
+            let ap = &ad[bi * m * ka..(bi + 1) * m * ka];
+            let bp = &bd[bi * n * ka..(bi + 1) * n * ka];
+            this.nt_tile(ap, bp, tile, i0, rows, ka, n);
+        });
+        Tensor::new(vec![ba, m, n], out)
+    }
+
+    fn batch_matmul_tn(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        let (ba, ka, m) = dims3(a);
+        let (bb, kb, n) = dims3(b);
+        assert_eq!(ba, bb, "batch mismatch");
+        assert_eq!(ka, kb, "inner dim mismatch");
+        let mut out = vec![0.0f32; ba * m * n];
+        let mut staged = None;
+        let (ad, bd) = self.stage(a.data(), b.data(), &mut staged);
+        let this = *self;
+        par_batch_row_tiles(self.threads, ba, m, n, self.mc, &mut out,
+                            |bi, i0, rows, tile| {
+            let ap = &ad[bi * ka * m..(bi + 1) * ka * m];
+            let bp = &bd[bi * ka * n..(bi + 1) * ka * n];
+            this.tn_tile(ap, bp, tile, i0, rows, ka, m, n);
+        });
+        Tensor::new(vec![ba, m, n], out)
+    }
+
+    fn run_tasks<'s>(&self, tasks: Vec<Task<'s>>) {
+        run_pool(self.threads, tasks);
+    }
+}
+
+/// Runtime CPU-feature probe: AVX2 + FMA on x86_64, always false
+/// elsewhere (the portable kernels carry the same numerics).
+fn detect_avx() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::is_x86_feature_detected!("avx2")
+            && std::is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx {
+    //! AVX2/FMA microkernels.  Every function here is `unsafe` because
+    //! callers must guarantee the features exist (checked once at
+    //! backend construction); slice accesses themselves stay in bounds
+    //! by the length contracts documented on each kernel.
+
+    use std::arch::x86_64::{
+        _mm256_add_ps, _mm256_fmadd_ps, _mm256_loadu_ps, _mm256_mul_ps,
+        _mm256_set1_ps, _mm256_storeu_ps,
+    };
+
+    /// `acc[i] += a * b[i]` (`acc.len() == b.len()`).  `fused` selects
+    /// FMA; otherwise separate mul/add keep Scalar's per-element
+    /// rounding.
+    ///
+    /// # Safety
+    /// AVX2 and FMA must be available on the running CPU.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn axpy(acc: &mut [f32], a: f32, b: &[f32], fused: bool) {
+        let n = acc.len().min(b.len());
+        let av = _mm256_set1_ps(a);
+        let mut i = 0;
+        while i + 8 <= n {
+            let bv = _mm256_loadu_ps(b.as_ptr().add(i));
+            let ov = _mm256_loadu_ps(acc.as_ptr().add(i));
+            let r = if fused {
+                _mm256_fmadd_ps(av, bv, ov)
+            } else {
+                _mm256_add_ps(ov, _mm256_mul_ps(av, bv))
+            };
+            _mm256_storeu_ps(acc.as_mut_ptr().add(i), r);
+            i += 8;
+        }
+        while i < n {
+            // tail lanes: identical per-element operation order
+            acc[i] = if fused {
+                a.mul_add(b[i], acc[i])
+            } else {
+                acc[i] + a * b[i]
+            };
+            i += 1;
+        }
+    }
+
+    /// One 8-lane accumulator row over a k-major packed panel
+    /// (`accrow.len() == 8`, `packb.len() == arow.len() * 8`).
+    ///
+    /// # Safety
+    /// AVX2 and FMA must be available; the length contracts above must
+    /// hold (the caller debug-asserts them).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn panel(accrow: &mut [f32], arow: &[f32], packb: &[f32],
+                        fused: bool) {
+        let mut acc = _mm256_loadu_ps(accrow.as_ptr());
+        for (k, &a) in arow.iter().enumerate() {
+            let av = _mm256_set1_ps(a);
+            let bv = _mm256_loadu_ps(packb.as_ptr().add(k * 8));
+            acc = if fused {
+                _mm256_fmadd_ps(av, bv, acc)
+            } else {
+                _mm256_add_ps(acc, _mm256_mul_ps(av, bv))
+            };
+        }
+        _mm256_storeu_ps(accrow.as_mut_ptr(), acc);
+    }
+}
+
+mod portable {
+    //! Arch-neutral fallback: 8-lane chunked loops the autovectorizer
+    //! can lift, with the same per-element operation order as the AVX
+    //! path (mul-then-add in f32 mode, `mul_add` in mixed mode).
+
+    use super::LANES;
+
+    /// `acc[i] += a * b[i]` (`acc.len() == b.len()`).
+    pub fn axpy(acc: &mut [f32], a: f32, b: &[f32], fused: bool) {
+        let mut ac = acc.chunks_exact_mut(LANES);
+        let mut bc = b.chunks_exact(LANES);
+        for (arow, brow) in (&mut ac).zip(&mut bc) {
+            for (o, &bv) in arow.iter_mut().zip(brow) {
+                *o = if fused { a.mul_add(bv, *o) } else { *o + a * bv };
+            }
+        }
+        for (o, &bv) in ac.into_remainder().iter_mut().zip(bc.remainder()) {
+            *o = if fused { a.mul_add(bv, *o) } else { *o + a * bv };
+        }
+    }
+
+    /// One 8-lane accumulator row over a k-major packed panel
+    /// (`accrow.len() == LANES`, `packb.len() == arow.len() * LANES`).
+    pub fn panel(accrow: &mut [f32], arow: &[f32], packb: &[f32],
+                 fused: bool) {
+        let mut lanes = [0.0f32; LANES];
+        lanes.copy_from_slice(accrow);
+        for (k, &a) in arow.iter().enumerate() {
+            let brow = &packb[k * LANES..(k + 1) * LANES];
+            for (o, &bv) in lanes.iter_mut().zip(brow) {
+                *o = if fused { a.mul_add(bv, *o) } else { *o + a * bv };
+            }
+        }
+        accrow.copy_from_slice(&lanes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::Scalar;
+    use crate::tensor::Rng;
+
+    fn randn(shape: &[usize], seed: u64) -> Tensor {
+        let mut r = Rng::new(seed);
+        Tensor::randn(shape.to_vec(), &mut r)
+    }
+
+    #[test]
+    fn precision_parses_and_names() {
+        assert_eq!(Precision::parse("f32").unwrap(), Precision::F32);
+        assert_eq!(Precision::parse("mixed").unwrap(), Precision::Mixed);
+        assert!(Precision::parse("fp16").is_err());
+        assert_eq!(Precision::F32.name(), "f32");
+        assert_eq!(Precision::Mixed.name(), "mixed");
+        assert_eq!(Precision::default(), Precision::F32);
+    }
+
+    #[test]
+    fn names_carry_threads_and_mode() {
+        assert_eq!(Simd::new(3, Precision::F32).name(), "simd_t3");
+        assert_eq!(Simd::new(2, Precision::Mixed).name(), "simd_t2_mixed");
+        assert!(Simd::new(0, Precision::F32).threads() >= 1);
+        // the probe is just a flag read; value depends on the machine
+        let _ = Simd::new(1, Precision::F32).avx();
+    }
+
+    #[test]
+    fn f32_mode_is_bitwise_scalar_all_flavours() {
+        for (ba, m, k, n, seed) in [(1, 1, 1, 1, 1u64), (2, 7, 13, 5, 2),
+                                    (3, 64, 96, 33, 3), (1, 130, 17, 9, 4)] {
+            let a_nn = randn(&[ba, m, k], seed);
+            let b_nn = randn(&[ba, k, n], seed + 100);
+            let b_nt = randn(&[ba, n, k], seed + 200);
+            let a_tn = randn(&[ba, k, m], seed + 300);
+            for be in [Simd::with_blocks(1, Precision::F32, 3, 4),
+                       Simd::with_blocks(4, Precision::F32, 64, 256)] {
+                assert_eq!(be.batch_matmul(&a_nn, &b_nn).data(),
+                           Scalar.batch_matmul(&a_nn, &b_nn).data(),
+                           "nn ({ba},{m},{k},{n}) via {}", be.name());
+                assert_eq!(be.batch_matmul_nt(&a_nn, &b_nt).data(),
+                           Scalar.batch_matmul_nt(&a_nn, &b_nt).data(),
+                           "nt ({ba},{m},{k},{n}) via {}", be.name());
+                assert_eq!(be.batch_matmul_tn(&a_tn, &b_nn).data(),
+                           Scalar.batch_matmul_tn(&a_tn, &b_nn).data(),
+                           "tn ({ba},{m},{k},{n}) via {}", be.name());
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_mode_matches_scalar_on_quantized_inputs() {
+        // Mixed semantics = f32 accumulation over bf16-quantized
+        // operands; differences from Scalar-on-quantized-inputs come
+        // only from FMA's skipped intermediate rounding.
+        let a = randn(&[2, 33, 21], 7);
+        let b = randn(&[2, 21, 18], 8);
+        let aq = a.clone().quantize_bf16();
+        let bq = b.clone().quantize_bf16();
+        let want = Scalar.batch_matmul(&aq, &bq);
+        let got = Simd::new(2, Precision::Mixed).batch_matmul(&a, &b);
+        assert!(got.max_abs_diff(&want) < 1e-4,
+                "fma-vs-mul/add drift should be tiny, got {}",
+                got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn mixed_mode_is_thread_invariant() {
+        let a = randn(&[2, 50, 30], 9);
+        let b = randn(&[2, 30, 41], 10);
+        let base = Simd::with_blocks(1, Precision::Mixed, 16, 8)
+            .batch_matmul(&a, &b);
+        for t in [2usize, 3, 8] {
+            let got = Simd::with_blocks(t, Precision::Mixed, 16, 8)
+                .batch_matmul(&a, &b);
+            assert_eq!(got.data(), base.data(), "threads={t}");
+        }
+    }
+
+    #[test]
+    fn empty_shapes_are_fine() {
+        let a = Tensor::zeros(vec![0, 4, 3]);
+        let b = Tensor::zeros(vec![0, 3, 2]);
+        let be = Simd::new(2, Precision::F32);
+        assert_eq!(be.batch_matmul(&a, &b).shape(), &[0, 4, 2]);
+        let a = Tensor::zeros(vec![2, 0, 3]);
+        let b = Tensor::zeros(vec![2, 3, 4]);
+        assert_eq!(be.batch_matmul(&a, &b).len(), 0);
+        let a = Tensor::zeros(vec![1, 4, 0]);
+        let b = Tensor::zeros(vec![1, 5, 0]);
+        assert_eq!(be.batch_matmul_nt(&a, &b).shape(), &[1, 4, 5]);
+    }
+}

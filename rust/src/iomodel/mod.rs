@@ -34,6 +34,7 @@ pub struct MhaShape {
 }
 
 impl MhaShape {
+    /// Shape from (batch × heads, sequence length, head dim).
     pub fn new(bh: usize, n: usize, d: usize) -> Self {
         MhaShape { bh, n, d }
     }
@@ -57,7 +58,9 @@ impl MhaShape {
 /// Traffic summary in bytes plus logical read/write tensor counts.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct Traffic {
+    /// Bytes read from HBM.
     pub read_bytes: usize,
+    /// Bytes written to HBM.
     pub write_bytes: usize,
     /// Number of logical tensor reads (the paper counts "5 reads").
     pub tensor_reads: usize,
@@ -66,6 +69,7 @@ pub struct Traffic {
 }
 
 impl Traffic {
+    /// Total bytes moved (reads + writes).
     pub fn total_bytes(&self) -> usize {
         self.read_bytes + self.write_bytes
     }
@@ -156,12 +160,19 @@ pub fn peak_resident_bytes(s: MhaShape, fused: bool) -> usize {
 /// Logical tensors in the simulated address space.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Buf {
+    /// Query operand.
     Q,
+    /// Key operand.
     K,
+    /// Value operand.
     V,
+    /// Materialised score matrix (unfused only).
     S,
+    /// Materialised probability matrix (unfused only).
     P,
+    /// Attention output.
     O,
+    /// Log-sum-exp statistics.
     Lse,
 }
 
@@ -174,11 +185,14 @@ pub struct MemSim {
     pub sram_bytes: usize,
     resident: BTreeMap<(Buf, usize), usize>, // (buffer, tile idx) -> bytes
     used: usize,
+    /// Bytes fetched from HBM so far.
     pub hbm_reads: usize,
+    /// Bytes written to HBM so far.
     pub hbm_writes: usize,
 }
 
 impl MemSim {
+    /// Empty simulator with an SRAM budget.
     pub fn new(sram_bytes: usize) -> Self {
         MemSim { sram_bytes, resident: BTreeMap::new(), used: 0,
                  hbm_reads: 0, hbm_writes: 0 }
@@ -216,10 +230,12 @@ impl MemSim {
         self.used = 0;
     }
 
+    /// Bytes currently resident in SRAM.
     pub fn sram_used(&self) -> usize {
         self.used
     }
 
+    /// Whether residency ever needs more than the SRAM budget.
     pub fn sram_overflow(&self) -> bool {
         self.used > self.sram_bytes
     }

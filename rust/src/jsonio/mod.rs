@@ -12,16 +12,22 @@ use std::fmt::Write as _;
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// JSON `null`.
     Null,
+    /// JSON `true` / `false`.
     Bool(bool),
+    /// Any JSON number (parsed as f64).
     Num(f64),
+    /// A JSON string (escapes decoded).
     Str(String),
+    /// A JSON array.
     Arr(Vec<Value>),
     /// Object with insertion-order-independent (sorted) key lookup.
     Obj(BTreeMap<String, Value>),
 }
 
 impl Value {
+    /// Boolean payload, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -29,6 +35,7 @@ impl Value {
         }
     }
 
+    /// Numeric payload, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Num(n) => Some(*n),
@@ -36,14 +43,17 @@ impl Value {
         }
     }
 
+    /// Numeric payload truncated to an integer.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().map(|n| n as i64)
     }
 
+    /// Non-negative numeric payload as a usize.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|n| if n >= 0.0 { Some(n as usize) } else { None })
     }
 
+    /// String payload, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -51,6 +61,7 @@ impl Value {
         }
     }
 
+    /// Array payload, if this is an array.
     pub fn as_arr(&self) -> Option<&[Value]> {
         match self {
             Value::Arr(a) => Some(a),
@@ -58,6 +69,7 @@ impl Value {
         }
     }
 
+    /// Object payload, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Value>> {
         match self {
             Value::Obj(o) => Some(o),
@@ -74,7 +86,9 @@ impl Value {
 /// Parse error with byte offset for debugging malformed manifests.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ParseError {
+    /// Byte offset the parser stopped at.
     pub offset: usize,
+    /// What went wrong there.
     pub message: String,
 }
 
@@ -390,15 +404,17 @@ fn write_str(out: &mut String, s: &str) {
     out.push('"');
 }
 
-/// Convenience builders for report emission.
+/// Convenience builder: an object value from `(key, value)` pairs.
 pub fn obj(entries: Vec<(&str, Value)>) -> Value {
     Value::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Convenience builder: a numeric value.
 pub fn num(n: f64) -> Value {
     Value::Num(n)
 }
 
+/// Convenience builder: a string value.
 pub fn s(v: impl Into<String>) -> Value {
     Value::Str(v.into())
 }

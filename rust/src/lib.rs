@@ -15,6 +15,10 @@
 //! MXU-style Pallas BlockSpecs), the execution-backend seam, and the
 //! per-experiment index.
 
+// Every public item carries documentation; CI denies rustdoc warnings
+// (`cargo doc --no-deps` with RUSTDOCFLAGS=-D warnings) so regressions
+// fail the build.
+#![warn(missing_docs)]
 // The tree predates clippy enforcement in CI; these style lints fire on
 // the deliberately loop-heavy numeric kernels and stay allowed.
 #![allow(clippy::needless_range_loop)]

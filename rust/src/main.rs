@@ -7,7 +7,7 @@
 //! spark bench-forward      Fig 10 sweep (E1)
 //! spark bench-backward     Fig 11 sweep (E2)
 //! spark bench-e2e          Fig 12 encoder latency (E4)
-//! spark bench-host         host attention path: scalar vs blocked backend
+//! spark bench-host         host attention path: scalar/blocked/simd backends
 //! spark accuracy           §4.2.3 error table (E3)
 //! spark io-report          §2.3 HBM traffic claim (E5)
 //! spark project            V100-projected Fig 10/11 at paper scale
@@ -20,7 +20,7 @@ use sparkattention::bench::Options;
 use sparkattention::cli::{Command, Parsed};
 use sparkattention::config::TrainConfig;
 use sparkattention::coordinator::{self, harness::HarnessOptions, Trainer};
-use sparkattention::exec::{self, BackendKind, ExecOptions};
+use sparkattention::exec::{self, BackendKind, ExecOptions, Precision};
 use sparkattention::jsonio;
 use sparkattention::perfmodel::V100;
 use sparkattention::runtime::Engine;
@@ -79,15 +79,27 @@ fn dispatch(args: &[String]) -> Result<()> {
     }
 }
 
-/// Apply `--backend` / `--threads` overrides on top of a base selection.
-fn exec_from_flags(p: &Parsed, base: ExecOptions) -> Result<ExecOptions> {
+/// Apply `--backend` / `--threads` / `--precision` overrides on top of
+/// a base selection.  `base_backend_explicit` says the base's backend
+/// was deliberately chosen (a config file's `[exec] backend` key):
+/// `--precision mixed` then never silently overrides it (that stays a
+/// `validate` error), while against an unchosen default it implies the
+/// simd backend (`ExecOptions::with_precision`).
+fn exec_from_flags(p: &Parsed, base: ExecOptions,
+                   base_backend_explicit: bool) -> Result<ExecOptions> {
     let mut e = base;
+    let backend_explicit =
+        base_backend_explicit || p.get("backend").is_some();
     if let Some(b) = p.get("backend") {
         e.kind = BackendKind::parse(b)?;
     }
     if let Some(t) = p.get_usize("threads")? {
         e.threads = t;
     }
+    if let Some(pr) = p.get("precision") {
+        e = e.with_precision(Precision::parse(pr)?, backend_explicit);
+    }
+    e.validate()?;
     Ok(e)
 }
 
@@ -99,12 +111,19 @@ fn cmd_train(args: &[String]) -> Result<()> {
         .flag("seed", "run seed", None)
         .flag("checkpoint-every", "steps between checkpoints (0 = off)", None)
         .flag("metrics-out", "write metrics JSON here", None)
-        .flag("backend", "host exec backend: scalar | blocked", None)
-        .flag("threads", "host exec worker threads (0 = auto)", None);
+        .flag("backend", "host exec backend: scalar | blocked | simd", None)
+        .flag("threads", "host exec worker threads (0 = auto)", None)
+        .flag("precision", "simd numeric mode: f32 | mixed \
+                            (mixed implies --backend simd)", None);
     let p = cmd.parse(args)?;
-    let mut cfg = match p.get("config") {
-        Some(path) => TrainConfig::load(path)?,
-        None => TrainConfig::default(),
+    let (mut cfg, backend_in_config) = match p.get("config") {
+        Some(path) => {
+            let doc = sparkattention::config::Document::load(path)?;
+            let explicit = sparkattention::config::exec_backend_explicit(
+                &doc);
+            (TrainConfig::from_doc(&doc)?, explicit)
+        }
+        None => (TrainConfig::default(), false),
     };
     if let Some(dir) = p.get("artifacts") {
         cfg.artifact_dir = dir.to_string();
@@ -121,18 +140,19 @@ fn cmd_train(args: &[String]) -> Result<()> {
     if let Some(m) = p.get("metrics-out") {
         cfg.metrics_out = Some(m.to_string());
     }
-    cfg.exec = exec_from_flags(&p, cfg.exec)?;
+    cfg.exec = exec_from_flags(&p, cfg.exec, backend_in_config)?;
 
     // Training compute runs inside the device artifacts; the host
-    // backend serves the surrounding oracle/witness paths.  Exercise it
-    // end-to-end up front (matmul self-check + the full streaming
-    // attention witness vs the oracle) so a broken backend aborts here,
-    // not mid-evaluation.
+    // backend serves the surrounding oracle/witness paths.  Exercise the
+    // whole backend roster end-to-end up front (pairwise matmul
+    // cross-check + the full streaming attention witness) so a broken
+    // or diverging backend aborts here, not mid-evaluation.
+    exec::self_check(cfg.exec)?;
+    sparkattention::attention::witness_self_check(cfg.exec)?;
     let backend = cfg.exec.build();
-    exec::self_check(backend.as_ref())?;
-    sparkattention::attention::witness_self_check(backend.as_ref())?;
-    info!("host exec backend {} ({} threads): matmul self-check and \
-           attention witness passed", backend.name(), backend.threads());
+    info!("host exec backend {} ({} threads): pairwise matmul self-check \
+           and attention witness passed", backend.name(),
+          backend.threads());
 
     let engine = Engine::new(&cfg.artifact_dir)?;
     let metrics_out = cfg.metrics_out.clone();
@@ -189,6 +209,7 @@ fn cmd_bench(args: &[String], fig: Figure) -> Result<()> {
         // backend only matters for `bench-host` and the bench binaries'
         // host sections, so no --backend/--threads flags here.
         exec: ExecOptions::default(),
+        exec_pinned: false,
     };
     let report = match fig {
         Figure::Forward => coordinator::fig10_forward(&engine, opts)?,
@@ -214,8 +235,10 @@ fn cmd_bench(args: &[String], fig: Figure) -> Result<()> {
     Ok(())
 }
 
-/// `spark bench-host` — the artifact-free figure: scalar vs blocked
-/// execution of the pure-Rust attention path.
+/// `spark bench-host` — the artifact-free figure: the pure-Rust
+/// attention path under every execution backend (scalar reference,
+/// blocked, simd, simd-mixed) side by side, with a mixed-vs-f32
+/// accuracy summary.
 fn cmd_bench_host(args: &[String]) -> Result<()> {
     let cmd = Command::new("bench-host",
                            "host attention path: exec-backend comparison")
@@ -224,8 +247,13 @@ fn cmd_bench_host(args: &[String]) -> Result<()> {
         .flag("d", "head dimension", Some("64"))
         .flag("iters", "measured iterations", Some("3"))
         .flag("warmup", "warmup iterations", Some("1"))
-        .flag("backend", "host exec backend: scalar | blocked", None)
+        .flag("backend", "pin the figure to scalar + this backend \
+                          (scalar | blocked | simd; default: sweep all)",
+              None)
         .flag("threads", "host exec worker threads (0 = auto)", None)
+        .flag("precision", "simd numeric mode: f32 | mixed (mixed \
+                            implies --backend simd; pins like --backend)",
+              None)
         .flag("json-out", "write JSON report here", None)
         .switch("backward", "bench the backward pass instead");
     let p = cmd.parse(args)?;
@@ -238,21 +266,18 @@ fn cmd_bench_host(args: &[String]) -> Result<()> {
             warmup_iters: p.get_usize("warmup")?.unwrap_or(1),
             iters: p.get_usize("iters")?.unwrap_or(3),
         },
-        exec: exec_from_flags(&p, ExecOptions::default())?,
+        exec: exec_from_flags(&p, ExecOptions::default(), false)?,
+        // an explicit --backend/--precision pins the figure to
+        // scalar + that backend; otherwise sweep the full roster
+        exec_pinned: p.get("backend").is_some()
+            || p.get("precision").is_some(),
         ..HarnessOptions::default()
     };
     let report = coordinator::host_backend_report(
         &ns, p.get_usize("bh")?.unwrap_or(8),
         p.get_usize("d")?.unwrap_or(64), p.switch("backward"), opts)?;
+    // speedup + accuracy summaries are part of the report notes
     print!("{}", report.emit(p.get("json-out"))?);
-    let blocked = opts.exec.build().name();
-    if blocked != "scalar" {
-        if let Some((mean, max)) =
-            report.speedup_summary(&blocked, "scalar") {
-            println!("host speedup {blocked} vs scalar: avg {mean:.2}× \
-                      (max {max:.2}×)");
-        }
-    }
     Ok(())
 }
 

@@ -15,14 +15,17 @@ pub struct Series {
 }
 
 impl Series {
+    /// Append one sample (seconds).
     pub fn record(&mut self, secs: f64) {
         self.samples.push(secs);
     }
 
+    /// Number of recorded samples.
     pub fn count(&self) -> usize {
         self.samples.len()
     }
 
+    /// Arithmetic mean (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
@@ -30,10 +33,12 @@ impl Series {
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
 
+    /// Smallest sample (+∞ when empty).
     pub fn min(&self) -> f64 {
         self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
     }
 
+    /// Largest sample (0 when empty).
     pub fn max(&self) -> f64 {
         self.samples.iter().cloned().fold(0.0, f64::max)
     }
@@ -49,10 +54,12 @@ impl Series {
         v[idx]
     }
 
+    /// Median.
     pub fn p50(&self) -> f64 {
         self.percentile(0.50)
     }
 
+    /// 95th percentile.
     pub fn p95(&self) -> f64 {
         self.percentile(0.95)
     }
@@ -68,6 +75,7 @@ impl Series {
             / (n - 1) as f64).sqrt()
     }
 
+    /// Summary statistics as a JSON object.
     pub fn to_json(&self) -> Value {
         jsonio::obj(vec![
             ("count", jsonio::num(self.count() as f64)),
@@ -90,30 +98,37 @@ pub struct Registry {
 }
 
 impl Registry {
+    /// Empty registry.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Add `by` to counter `name` (created at 0).
     pub fn inc(&mut self, name: &str, by: u64) {
         *self.counters.entry(name.to_string()).or_insert(0) += by;
     }
 
+    /// Current value of counter `name` (0 if never incremented).
     pub fn counter(&self, name: &str) -> u64 {
         self.counters.get(name).copied().unwrap_or(0)
     }
 
+    /// Set gauge `name` to `v` (last write wins).
     pub fn set_gauge(&mut self, name: &str, v: f64) {
         self.gauges.insert(name.to_string(), v);
     }
 
+    /// Current value of gauge `name`.
     pub fn gauge(&self, name: &str) -> Option<f64> {
         self.gauges.get(name).copied()
     }
 
+    /// Record one timing sample into series `name`.
     pub fn time(&mut self, name: &str, secs: f64) {
         self.series.entry(name.to_string()).or_default().record(secs);
     }
 
+    /// Timing series `name`, if any samples were recorded.
     pub fn series(&self, name: &str) -> Option<&Series> {
         self.series.get(name)
     }

@@ -43,7 +43,9 @@ pub const V100: Machine = Machine {
 /// What a projected stage spent its time on.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Bound {
+    /// FLOP-limited: the roofline's compute ceiling binds.
     Compute,
+    /// Bandwidth-limited: HBM traffic binds.
     Memory,
     /// Infeasible: working set exceeds device memory.
     Oom,
@@ -52,9 +54,13 @@ pub enum Bound {
 /// Projection result for one schedule.
 #[derive(Debug, Clone, Copy)]
 pub struct Projection {
+    /// Projected wallclock (seconds).
     pub seconds: f64,
+    /// Which roofline ceiling bound the stage.
     pub bound: Bound,
+    /// Achieved TFLOP/s at the projected time.
     pub tflops: f64,
+    /// Total HBM bytes moved.
     pub hbm_bytes: usize,
 }
 

@@ -21,13 +21,17 @@ fn base_seed() -> u64 {
 
 /// A value generator: draws from an `Rng`.
 pub trait Gen {
+    /// The type of value this generator produces.
     type Value;
+    /// Draw one value from the generator.
     fn generate(&self, rng: &mut Rng) -> Self::Value;
 }
 
 /// usize in [lo, hi], biased toward the low end (≈ shrunken cases).
 pub struct USize {
+    /// Inclusive lower bound.
     pub lo: usize,
+    /// Inclusive upper bound.
     pub hi: usize,
 }
 
@@ -56,7 +60,9 @@ impl<T: Clone> Gen for OneOf<T> {
 
 /// f32 in [lo, hi].
 pub struct F32 {
+    /// Inclusive lower bound.
     pub lo: f32,
+    /// Inclusive upper bound.
     pub hi: f32,
 }
 
@@ -70,6 +76,7 @@ impl Gen for F32 {
 
 /// Vec of standard normals with generated length.
 pub struct NormalVec {
+    /// Generator for the vector length.
     pub len: USize,
 }
 

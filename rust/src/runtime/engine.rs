@@ -21,11 +21,17 @@ use super::manifest::{ArtifactMeta, Manifest};
 /// Compile/execute statistics (observable via `spark inspect-artifacts`).
 #[derive(Debug, Default, Clone)]
 pub struct EngineStats {
+    /// Artifacts compiled (cache misses).
     pub compiles: u64,
+    /// Total compile time, milliseconds.
     pub compile_ms: f64,
+    /// Artifact executions.
     pub executions: u64,
+    /// Total device execute time, milliseconds.
     pub execute_ms: f64,
+    /// Host→device literal staging time, milliseconds.
     pub h2d_ms: f64,
+    /// Device→host readback time, milliseconds.
     pub d2h_ms: f64,
 }
 
@@ -52,14 +58,17 @@ impl Engine {
         })
     }
 
+    /// The loaded artifact manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// PJRT platform name (e.g. `cpu`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    /// Snapshot of the compile/execute counters.
     pub fn stats(&self) -> EngineStats {
         self.stats.borrow().clone()
     }

@@ -16,24 +16,45 @@ use crate::tensor::{bf16, Tensor};
 #[derive(Debug, Clone, PartialEq)]
 pub enum HostValue {
     /// f32 payload (also the carrier for bf16 artifacts).
-    F32 { shape: Vec<usize>, data: Vec<f32> },
-    I32 { shape: Vec<usize>, data: Vec<i32> },
-    U32 { shape: Vec<usize>, data: Vec<u32> },
+    F32 {
+        /// Dimension sizes, outermost first.
+        shape: Vec<usize>,
+        /// Row-major elements.
+        data: Vec<f32>,
+    },
+    /// i32 payload (token ids).
+    I32 {
+        /// Dimension sizes, outermost first.
+        shape: Vec<usize>,
+        /// Row-major elements.
+        data: Vec<i32>,
+    },
+    /// u32 payload (RNG seeds/counters).
+    U32 {
+        /// Dimension sizes, outermost first.
+        shape: Vec<usize>,
+        /// Row-major elements.
+        data: Vec<u32>,
+    },
 }
 
 impl HostValue {
+    /// Rank-1 single-element f32 value.
     pub fn scalar_f32(v: f32) -> Self {
         HostValue::F32 { shape: vec![1], data: vec![v] }
     }
 
+    /// Rank-1 single-element u32 value.
     pub fn scalar_u32(v: u32) -> Self {
         HostValue::U32 { shape: vec![1], data: vec![v] }
     }
 
+    /// Copy a host tensor into an f32 value.
     pub fn from_tensor(t: &Tensor) -> Self {
         HostValue::F32 { shape: t.shape().to_vec(), data: t.data().to_vec() }
     }
 
+    /// Dimension sizes, outermost first.
     pub fn shape(&self) -> &[usize] {
         match self {
             HostValue::F32 { shape, .. }
@@ -42,6 +63,7 @@ impl HostValue {
         }
     }
 
+    /// Total element count.
     pub fn element_count(&self) -> usize {
         self.shape().iter().product()
     }
@@ -56,6 +78,7 @@ impl HostValue {
         }
     }
 
+    /// Borrow the f32 payload (errors on integer payloads).
     pub fn as_f32_slice(&self) -> Result<&[f32]> {
         match self {
             HostValue::F32 { data, .. } => Ok(data),

@@ -13,15 +13,22 @@ use crate::jsonio::{self, Value};
 /// Element dtype of an artifact tensor (manifest string form).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DType {
+    /// bfloat16 (the device interchange dtype).
     Bf16,
+    /// 32-bit float.
     F32,
+    /// 64-bit float.
     F64,
+    /// 32-bit signed integer.
     S32,
+    /// 32-bit unsigned integer.
     U32,
+    /// Boolean predicate.
     Pred,
 }
 
 impl DType {
+    /// Parse the manifest string form (`"bf16"`, `"f32"`, …).
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s {
             "bf16" => DType::Bf16,
@@ -34,6 +41,7 @@ impl DType {
         })
     }
 
+    /// Manifest string form (inverse of [`DType::parse`]).
     pub fn name(self) -> &'static str {
         match self {
             DType::Bf16 => "bf16",
@@ -45,6 +53,7 @@ impl DType {
         }
     }
 
+    /// Bytes per element.
     pub fn byte_size(self) -> usize {
         match self {
             DType::Bf16 => 2,
@@ -58,16 +67,21 @@ impl DType {
 /// Shape + dtype of one artifact input or output.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorSpec {
+    /// Parameter name in the artifact signature.
     pub name: String,
+    /// Dimension sizes, outermost first.
     pub shape: Vec<usize>,
+    /// Element dtype.
     pub dtype: DType,
 }
 
 impl TensorSpec {
+    /// Total element count.
     pub fn element_count(&self) -> usize {
         self.shape.iter().product()
     }
 
+    /// Total byte size (elements × dtype width).
     pub fn byte_size(&self) -> usize {
         self.element_count() * self.dtype.byte_size()
     }
@@ -90,11 +104,17 @@ impl TensorSpec {
 /// One AOT-compiled HLO entry point.
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
+    /// Unique artifact name (manifest key).
     pub name: String,
+    /// HLO text file, relative to the manifest directory.
     pub file: String,
+    /// Artifact family (`mha_fwd`, `mha_bwd`, `encoder_fwd`, …).
     pub kind: String,
+    /// Input tensor specs, positional.
     pub inputs: Vec<TensorSpec>,
+    /// Output tensor specs, positional.
     pub outputs: Vec<TensorSpec>,
+    /// Static attributes (shapes, FLOPs, traffic model) as JSON.
     pub attrs: Value,
 }
 
@@ -126,14 +146,17 @@ impl ArtifactMeta {
         self.attrs.get(key).and_then(Value::as_i64)
     }
 
+    /// Float attribute accessor (`dropout`, `mxu_utilization`, …).
     pub fn attr_f64(&self, key: &str) -> Option<f64> {
         self.attrs.get(key).and_then(Value::as_f64)
     }
 
+    /// Boolean attribute accessor (`causal`, …).
     pub fn attr_bool(&self, key: &str) -> Option<bool> {
         self.attrs.get(key).and_then(Value::as_bool)
     }
 
+    /// String attribute accessor (`acc`, `impl`, …).
     pub fn attr_str(&self, key: &str) -> Option<&str> {
         self.attrs.get(key).and_then(Value::as_str)
     }
@@ -148,6 +171,7 @@ impl ArtifactMeta {
 /// The parsed manifest: artifact lookup by name, kind, and attribute query.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Directory the manifest (and HLO files) live in.
     pub dir: PathBuf,
     by_name: BTreeMap<String, ArtifactMeta>,
 }
@@ -163,6 +187,7 @@ impl Manifest {
         Self::parse(&text, dir)
     }
 
+    /// Parse manifest JSON text rooted at `dir`.
     pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
         let root = jsonio::parse(text).context("parsing manifest.json")?;
         let arts = root.get("artifacts").and_then(Value::as_arr)
@@ -177,20 +202,24 @@ impl Manifest {
         Ok(Manifest { dir, by_name })
     }
 
+    /// Number of artifacts.
     pub fn len(&self) -> usize {
         self.by_name.len()
     }
 
+    /// Whether the manifest lists no artifacts.
     pub fn is_empty(&self) -> bool {
         self.by_name.is_empty()
     }
 
+    /// Artifact by name (loud error naming the manifest size).
     pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
         self.by_name.get(name).ok_or_else(|| anyhow!(
             "artifact {name:?} not in manifest ({} entries); \
              run `make artifacts`?", self.by_name.len()))
     }
 
+    /// Iterate all artifacts in name order.
     pub fn iter(&self) -> impl Iterator<Item = &ArtifactMeta> {
         self.by_name.values()
     }

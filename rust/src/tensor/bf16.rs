@@ -6,6 +6,12 @@
 //! round-to-nearest-even, exactly matching XLA's `convert` semantics so
 //! host-side oracles agree bit-for-bit with device-side casts.
 
+/// Upper bound on the relative error of one round-to-nearest-even bf16
+/// quantization of a normal f32: half a ulp at 8 significand bits,
+/// i.e. 2⁻⁸.  Mixed-precision tolerance derivations (the exec
+/// self-check and the property tests) scale from this constant.
+pub const EPSILON: f32 = 0.00390625;
+
 /// Convert f32 → bf16 bits with round-to-nearest-even.
 #[inline]
 pub fn f32_to_bf16(x: f32) -> u16 {
@@ -93,10 +99,11 @@ mod tests {
     #[test]
     fn relative_error_bounded() {
         // bf16 has 8 significand bits → rel err ≤ 2^-8 for normal values.
+        assert_eq!(EPSILON, 2f32.powi(-8));
         let mut x = 1.1e-30f32;
         while x < 1.0e30 {
             let q = quantize(x);
-            assert!(((q - x) / x).abs() <= 2f32.powi(-8), "x={x} q={q}");
+            assert!(((q - x) / x).abs() <= EPSILON, "x={x} q={q}");
             x *= 3.7;
         }
     }

@@ -27,11 +27,13 @@ impl Tensor {
         Tensor { shape, data }
     }
 
+    /// All-zeros tensor of the given shape.
     pub fn zeros(shape: Vec<usize>) -> Self {
         let n = shape.iter().product();
         Tensor { shape, data: vec![0.0; n] }
     }
 
+    /// Constant-filled tensor of the given shape.
     pub fn full(shape: Vec<usize>, v: f32) -> Self {
         let n = shape.iter().product();
         Tensor { shape, data: vec![v; n] }
@@ -53,26 +55,32 @@ impl Tensor {
         t
     }
 
+    /// Dimension sizes, outermost first.
     pub fn shape(&self) -> &[usize] {
         &self.shape
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Row-major element storage.
     pub fn data(&self) -> &[f32] {
         &self.data
     }
 
+    /// Mutable row-major element storage.
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }
 
+    /// Consume the tensor, keeping only its element storage.
     pub fn into_data(self) -> Vec<f32> {
         self.data
     }
@@ -90,6 +98,7 @@ impl Tensor {
         self.data[self.offset(idx)]
     }
 
+    /// Write one element by multi-dimensional index.
     pub fn set(&mut self, idx: &[usize], v: f32) {
         let o = self.offset(idx);
         self.data[o] = v;
@@ -131,14 +140,17 @@ impl Tensor {
         self
     }
 
+    /// Multiply every element by `s`.
     pub fn scale(self, s: f32) -> Self {
         self.map(|x| x * s)
     }
 
+    /// Elementwise sum (shapes must match).
     pub fn add(self, other: &Tensor) -> Self {
         self.zip(other, |a, b| a + b)
     }
 
+    /// Elementwise difference (shapes must match).
     pub fn sub(self, other: &Tensor) -> Self {
         self.zip(other, |a, b| a - b)
     }
@@ -162,6 +174,26 @@ impl Tensor {
         let s: f32 = self.data.iter().zip(&other.data)
             .map(|(a, b)| (a - b).abs()).sum();
         s / self.data.len() as f32
+    }
+
+    /// Maximum ULP distance between two same-shaped tensors: f32 bit
+    /// patterns mapped to a sign-magnitude integer line (so +0 and −0
+    /// coincide and adjacent floats differ by 1), then compared.  The
+    /// mixed-vs-f32 accuracy summaries of the bench reports use this —
+    /// it is the resolution-independent way to state "how many
+    /// representable values apart" two backends landed.  Inputs are
+    /// expected to be finite (NaNs order arbitrarily far away).
+    pub fn max_ulp_diff(&self, other: &Tensor) -> u64 {
+        assert_eq!(self.shape, other.shape);
+        fn ordered(x: f32) -> i64 {
+            let b = x.to_bits() as i32 as i64;
+            if b < 0 { (i32::MIN as i64) - b } else { b }
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| (ordered(a) - ordered(b)).unsigned_abs())
+            .fold(0, u64::max)
     }
 
     /// Mean relative error |a−b| / max(|b|, eps) — the paper's §4.2.3 metric
@@ -421,6 +453,20 @@ mod tests {
         assert!((a.max_abs_diff(&b) - 0.1).abs() < 1e-6);
         assert!((a.mean_abs_diff(&b) - 0.025).abs() < 1e-6);
         assert!(a.mean_rel_err(&b, 1e-6) > 0.0);
+    }
+
+    #[test]
+    fn ulp_distance_basics() {
+        let a = t(&[3], &[1.0, 0.0, -1.0]);
+        assert_eq!(a.max_ulp_diff(&a), 0);
+        let b = t(&[3], &[1.0, -0.0, -1.0]);
+        assert_eq!(a.max_ulp_diff(&b), 0, "+0 and -0 coincide");
+        let next = f32::from_bits(1.0f32.to_bits() + 1);
+        let c = t(&[3], &[next, 0.0, -1.0]);
+        assert_eq!(a.max_ulp_diff(&c), 1);
+        let prev_neg = f32::from_bits((-1.0f32).to_bits() + 1);
+        let d = t(&[3], &[1.0, 0.0, prev_neg]);
+        assert_eq!(a.max_ulp_diff(&d), 1, "negative side is symmetric");
     }
 
     #[test]

@@ -1,13 +1,23 @@
-//! Property tests for the execution-backend layer: the `Blocked` backend
-//! must agree with the `Scalar` reference elementwise on randomized
-//! shapes and block sizes, and must be bitwise-identical to itself
-//! across worker-thread counts (1, 2, 8) — the determinism contract the
-//! harness and the streaming attention paths rely on.
+//! Property tests for the execution-backend layer:
+//!
+//! * `Blocked` must agree with the `Scalar` reference elementwise on
+//!   randomized shapes and block sizes, and must be bitwise-identical
+//!   to itself across worker-thread counts (1, 2, 8) — the determinism
+//!   contract the harness and the streaming attention paths rely on.
+//! * `Simd` in f32 mode must be **bitwise-identical** to `Scalar` on
+//!   every flavour, shape, blocking, and thread count (the vectorized
+//!   kernels preserve the per-element operation order exactly).
+//! * `Simd` in mixed mode must stay inside the provable bf16 error
+//!   bound: operands are quantized with relative error ≤ ε = 2⁻⁸
+//!   (`bf16::EPSILON`), so each product is off by ≤ (2ε + ε²)·|aᵢbᵢ|
+//!   and a k-term accumulation by ≤ ~(2ε + ε²)·Σ|aᵢbᵢ| plus f32
+//!   rounding noise — we assert a 3ε·Σ|aᵢbᵢ| + 1e-5 envelope per
+//!   element, and bitwise determinism across thread counts.
 
 use sparkattention::attention::{self, AttnParams};
-use sparkattention::exec::{Backend, Blocked, Scalar};
+use sparkattention::exec::{Backend, Blocked, Precision, Scalar, Simd};
 use sparkattention::proptest::{check, default_cases, Gen, OneOf, USize};
-use sparkattention::tensor::{Rng, Tensor};
+use sparkattention::tensor::{bf16, Rng, Tensor};
 
 /// Random batched-matmul problem: shape + block sizes + threads.
 #[derive(Debug, Clone)]
@@ -83,6 +93,102 @@ fn blocked_matmuls_identical_across_threads() {
             }
             if be.batch_matmul_nt(&a, &bt).data() != want_nt.data() {
                 return Err(format!("nt bits differ at t={threads}: {c:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// `Simd` in f32 mode: bitwise-identical to `Scalar` on all three
+/// matmul flavours, for any shape/blocking, at threads ∈ {1, 2, 8}.
+#[test]
+fn simd_f32_bitwise_identical_to_scalar() {
+    check("simd-f32-bitwise", &MatmulGen, default_cases(), |c| {
+        let mut r = Rng::new(c.seed);
+        let a_nn = Tensor::randn(vec![c.ba, c.m, c.k], &mut r);
+        let b_nn = Tensor::randn(vec![c.ba, c.k, c.n], &mut r);
+        let b_nt = Tensor::randn(vec![c.ba, c.n, c.k], &mut r);
+        let a_tn = Tensor::randn(vec![c.ba, c.k, c.m], &mut r);
+        let want = [
+            Scalar.batch_matmul(&a_nn, &b_nn),
+            Scalar.batch_matmul_nt(&a_nn, &b_nt),
+            Scalar.batch_matmul_tn(&a_tn, &b_nn),
+        ];
+        for threads in [1usize, 2, 8] {
+            let be = Simd::with_blocks(threads, Precision::F32, c.mc,
+                                       c.kc);
+            let got = [
+                be.batch_matmul(&a_nn, &b_nn),
+                be.batch_matmul_nt(&a_nn, &b_nt),
+                be.batch_matmul_tn(&a_tn, &b_nn),
+            ];
+            for (name, g, w) in [("nn", &got[0], &want[0]),
+                                 ("nt", &got[1], &want[1]),
+                                 ("tn", &got[2], &want[2])] {
+                if g.data() != w.data() {
+                    return Err(format!(
+                        "{name} bits differ at t={threads}: {c:?}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// `Simd` in mixed mode: per-element error bounded by the bf16-epsilon
+/// envelope vs the f32 Scalar reference, and bitwise-deterministic
+/// across thread counts.
+#[test]
+fn simd_mixed_error_bounded_and_thread_invariant() {
+    check("simd-mixed-bound", &MatmulGen, default_cases(), |c| {
+        let mut r = Rng::new(c.seed);
+        let a_nn = Tensor::randn(vec![c.ba, c.m, c.k], &mut r);
+        let b_nn = Tensor::randn(vec![c.ba, c.k, c.n], &mut r);
+        let b_nt = Tensor::randn(vec![c.ba, c.n, c.k], &mut r);
+        let a_tn = Tensor::randn(vec![c.ba, c.k, c.m], &mut r);
+        let want = [
+            Scalar.batch_matmul(&a_nn, &b_nn),
+            Scalar.batch_matmul_nt(&a_nn, &b_nt),
+            Scalar.batch_matmul_tn(&a_tn, &b_nn),
+        ];
+        // per-element error budget: Σ|aᵢ||bᵢ| scaled by 3·ε_bf16
+        let abs = |t: &Tensor| t.clone().map(f32::abs);
+        let envelope = [
+            Scalar.batch_matmul(&abs(&a_nn), &abs(&b_nn)),
+            Scalar.batch_matmul_nt(&abs(&a_nn), &abs(&b_nt)),
+            Scalar.batch_matmul_tn(&abs(&a_tn), &abs(&b_nn)),
+        ];
+        let mut base: Option<[Tensor; 3]> = None;
+        for threads in [1usize, 2, 8] {
+            let be = Simd::with_blocks(threads, Precision::Mixed, c.mc,
+                                       c.kc);
+            let got = [
+                be.batch_matmul(&a_nn, &b_nn),
+                be.batch_matmul_nt(&a_nn, &b_nt),
+                be.batch_matmul_tn(&a_tn, &b_nn),
+            ];
+            for (fl, (g_t, (w_t, e_t))) in
+                got.iter().zip(want.iter().zip(&envelope)).enumerate()
+            {
+                for ((&g, &w), &bd) in g_t.data().iter()
+                    .zip(w_t.data())
+                    .zip(e_t.data())
+                {
+                    let bound = 3.0 * bf16::EPSILON * bd + 1e-5;
+                    if (g - w).abs() > bound {
+                        return Err(format!(
+                            "flavour {fl}: |{g} − {w}| > {bound} \
+                             at t={threads}: {c:?}"));
+                    }
+                }
+            }
+            if let Some(b0) = &base {
+                if got.iter().zip(b0).any(|(g, b)| g.data() != b.data()) {
+                    return Err(format!(
+                        "mixed bits differ at t={threads}: {c:?}"));
+                }
+            } else {
+                base = Some(got);
             }
         }
         Ok(())
@@ -182,6 +288,70 @@ fn attention_path_backend_parity_and_thread_invariance() {
                 }
             }
             last = Some((bwd.dq, bwd.dk, bwd.dv));
+        }
+        // Simd in f32 mode joins the same bitwise contract on the
+        // streamed paths (tile kernels + pool, identical op order).
+        for threads in [1usize, 2, 8] {
+            let be = Simd::new(threads, Precision::F32);
+            let stream = attention::mha_forward_streaming(
+                &q, &k, &v, p, c.block_q, c.block_k, &be);
+            if stream.output.data() != stream_s.output.data()
+                || stream.lse.data() != stream_s.lse.data()
+            {
+                return Err(format!(
+                    "simd streamed fwd bits differ t={threads}: {c:?}"));
+            }
+            let bwd = attention::mha_backward_streaming(
+                &q, &k, &v, &dout, &fwd_s.lse, p, c.block_q, c.block_k,
+                &be);
+            if bwd.dq.data() != bwd_s.dq.data()
+                || bwd.dk.data() != bwd_s.dk.data()
+                || bwd.dv.data() != bwd_s.dv.data()
+            {
+                return Err(format!(
+                    "simd streamed bwd bits differ t={threads}: {c:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The mixed-precision streaming forward equals the f32 streaming
+/// forward of bf16-quantized inputs, up to the P-tile quantization —
+/// a per-element envelope of ~3·ε_bf16·max|v|, asserted here with a
+/// 16·ε_bf16·(1 + max|v|) margin — and is bitwise-deterministic across
+/// thread counts.
+#[test]
+fn simd_mixed_attention_bounded_and_thread_invariant() {
+    check("simd-mixed-attention", &AttnGen, default_cases() / 2, |c| {
+        let (q, k, v, _dout) = qkv(&c);
+        let p = AttnParams::new(c.d, c.causal);
+        let qq = q.clone().quantize_bf16();
+        let kq = k.clone().quantize_bf16();
+        let vq = v.clone().quantize_bf16();
+        let want = attention::mha_forward_streaming(
+            &qq, &kq, &vq, p, c.block_q, c.block_k, &Scalar);
+        let vmax = v.data().iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let tol = 16.0 * bf16::EPSILON * (1.0 + vmax);
+        let mut base: Option<Tensor> = None;
+        for threads in [1usize, 2, 8] {
+            let be = Simd::new(threads, Precision::Mixed);
+            let got = attention::mha_forward_streaming(
+                &q, &k, &v, p, c.block_q, c.block_k, &be);
+            let err = got.output.max_abs_diff(&want.output);
+            if err > tol {
+                return Err(format!(
+                    "mixed streaming err {err} > tol {tol} \
+                     at t={threads}: {c:?}"));
+            }
+            if let Some(b0) = &base {
+                if got.output.data() != b0.data() {
+                    return Err(format!(
+                        "mixed streaming bits differ t={threads}: {c:?}"));
+                }
+            } else {
+                base = Some(got.output);
+            }
         }
         Ok(())
     });
