@@ -6,16 +6,24 @@
 //! (block_q, block_k) grid under every exec backend — scalar, blocked,
 //! simd, and simd-mixed side by side — block shape changes the tile
 //! schedule and the per-tile working set, which is the same trade the
-//! device kernel makes.  Section 2 (needs the ablation artifact
-//! profile): measured CPU time next to the static VMEM footprint and
+//! device kernel makes.  Block sizes that don't divide `n` are emitted
+//! as `skipped` rows (not silently dropped), so the sweep JSON is
+//! shape-complete for the autotuner.  Section 2 (runs when
+//! `SPARK_EXEC_TUNING_TABLE` is set): the `exec::tune` autotuner sweeps
+//! its (MC, KC) grid over the attention GEMM classes, writes the table
+//! to that path, and asserts the write → reload round-trip preserves
+//! the block choices.  Section 3 (needs the ablation artifact profile):
+//! measured CPU time next to the static VMEM footprint and
 //! MXU-occupancy estimate.
 
 mod common;
 
 use sparkattention::attention::{self, AttnParams};
-use sparkattention::bench::{measure, measure_wallclock};
+use sparkattention::bench::{measure, measure_wallclock, skipped_row, Report,
+                            Row};
 use sparkattention::coordinator::inputs::synth_inputs;
 use sparkattention::coordinator::report_roster;
+use sparkattention::exec::{tune, BackendKind};
 use sparkattention::tensor::{Rng, Tensor};
 
 fn main() {
@@ -30,9 +38,9 @@ fn main() {
     let q = Tensor::randn(vec![bh, n, d], &mut rng);
     let k = Tensor::randn(vec![bh, n, d], &mut rng);
     let v = Tensor::randn(vec![bh, n, d], &mut rng);
-    let blocks: Vec<usize> =
-        [16usize, 32, 64, 128].iter().copied().filter(|b| n % b == 0)
-        .collect();
+    let blocks = [16usize, 32, 64, 128];
+    let mut report = Report::new(format!(
+        "Host block-shape ablation (bh={bh}, n={n}, d={d})"));
     for be in report_roster(opts) {
         println!("== Host block-shape ablation (bh={bh}, n={n}, d={d}, \
                   backend {}) ==", be.name());
@@ -40,6 +48,16 @@ fn main() {
                  "mean_ms", "tiles");
         for &bq in &blocks {
             for &bk in &blocks {
+                let variant = format!("bq{bq}_bk{bk}");
+                if n % bq != 0 || n % bk != 0 {
+                    // streaming requires blocks that divide n; record
+                    // the cell as skipped instead of dropping it
+                    report.push(skipped_row(&be.name(), &variant, n,
+                                            "skipped"));
+                    println!("{:>8} {:>8} {:>12} {:>10}", bq, bk, "-",
+                             "skipped");
+                    continue;
+                }
                 let time = measure_wallclock(opts.bench, || {
                     attention::mha_forward_streaming(&q, &k, &v, p, bq, bk,
                                                      be.as_ref());
@@ -47,13 +65,57 @@ fn main() {
                 }).expect("host ablation");
                 println!("{:>8} {:>8} {:>12.3} {:>10}", bq, bk,
                          time.mean() * 1e3, bh * (n / bq) * (n / bk));
+                report.push(Row {
+                    group: be.name(),
+                    variant,
+                    x: n,
+                    time,
+                    flops: 0,
+                    status: "ok".into(),
+                });
             }
         }
         println!();
     }
+    common::emit(&report, "ablation_host");
     println!("reading: wider q-blocks amortise K/V streaming; the pool \
               parallelises over (bh × n/block_q) tiles, so tiny q-blocks \
               expose more parallelism but touch K/V more often.\n");
+
+    // --- autotuner sweep + table round-trip -------------------------------
+    if let Ok(path) = std::env::var("SPARK_EXEC_TUNING_TABLE") {
+        // the scalar backend has no block parameters; tune simd instead
+        let kind = match opts.exec.kind {
+            BackendKind::Scalar => BackendKind::Simd,
+            other => other,
+        };
+        println!("== Autotune (MC, KC) per GEMM class (backend {}, \
+                  bh={bh}, d={d}) ==", kind.name());
+        let (table, rows) = tune::tune_attention(
+            kind, opts.exec.threads, &ns, bh, d,
+            &tune::default_candidates(), opts.bench)
+            .expect("tune_attention");
+        for r in &rows {
+            println!("({}, {}, {}) {}: best {}x{}  {:.3} ms vs default \
+                      {:.3} ms ({:.2}×)",
+                     r.key.m, r.key.k, r.key.n, r.key.precision.name(),
+                     r.best.mc, r.best.kc, r.best_s * 1e3,
+                     r.default_s * 1e3, r.speedup());
+        }
+        if let Some(dir) = std::path::Path::new(&path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).expect("tuning table dir");
+            }
+        }
+        table.save(&path).expect("save tuning table");
+        let reloaded = tune::TuningTable::load(&path)
+            .expect("reload tuning table");
+        assert_eq!(reloaded, table,
+                   "tuning-table round-trip must preserve block choices");
+        println!("tuning table → {path} ({} entries; reload round-trip \
+                  verified)\n", table.len());
+        tune::install(table);
+    }
 
     // --- device artifact ablation ----------------------------------------
     let Some(engine) = common::engine_or_skip() else { return };

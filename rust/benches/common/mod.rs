@@ -16,6 +16,10 @@
 //! * `SPARK_HOST_NS`        — host-path sequence lengths (default 256,512)
 //! * `SPARK_HOST_BH`        — host-path batch × heads (default 8)
 //! * `SPARK_HOST_D`         — host-path head dim (default 64)
+//! * `SPARK_EXEC_TUNING_TABLE` — path to a `spark tune` block-shape
+//!   table; installed for the host backends when the file exists
+//!   (lenient: `ablation_blocks` *writes* the table at this path, so a
+//!   missing file just means default blocks this run)
 
 // Each bench binary uses a subset of these helpers.
 #![allow(dead_code)]
@@ -52,6 +56,17 @@ pub fn exec_options() -> ExecOptions {
 /// explicitly pinned" fact (the second drives `exec_pinned`): the env
 /// vars are read exactly here, so the two can never drift.
 fn exec_selection() -> (ExecOptions, bool) {
+    // Lenient tuning-table install: benches run before the table exists
+    // (ablation_blocks is the producer), so a missing/bad file reports
+    // and falls back to default blocks instead of failing the bench.
+    if let Ok(path) = std::env::var("SPARK_EXEC_TUNING_TABLE") {
+        match sparkattention::exec::tune::install_from_path(&path) {
+            Ok(n) => eprintln!("tuning table {path}: installed {n} \
+                                entries"),
+            Err(e) => eprintln!("tuning table {path}: not installed \
+                                 ({e:#}); running with default blocks"),
+        }
+    }
     let backend = std::env::var("SPARK_EXEC_BACKEND").ok();
     let precision = std::env::var("SPARK_EXEC_PRECISION").ok();
     let pinned = backend.is_some() || precision.is_some();

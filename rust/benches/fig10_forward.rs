@@ -14,7 +14,9 @@
 //! 3. **V100 projection** at paper scale.
 //!
 //! Shape (who wins, how the gap scales) is measured; magnitude at paper
-//! scale comes from the projection.  See EXPERIMENTS.md §E1.
+//! scale comes from the projection.  Set `SPARK_EXEC_TUNING_TABLE` to a
+//! `spark tune` table to run the host sweep with autotuned (MC, KC)
+//! blocks (see `benches/common`).  See EXPERIMENTS.md §E1.
 
 mod common;
 

@@ -5,6 +5,7 @@
 //! Opens with the host backend sweep of the block-streamed backward
 //! (every exec backend side by side — scalar/blocked/simd/simd-mixed —
 //! with mixed-vs-f32 accuracy notes; always runs, no artifacts needed).
+//! Honours `SPARK_EXEC_TUNING_TABLE` for autotuned (MC, KC) blocks.
 //! See EXPERIMENTS.md §E2.
 
 mod common;

@@ -4,6 +4,7 @@
 //! memory budget.  Opens with the projection and host-latency rows for
 //! the attention sub-block (scalar/blocked/simd/simd-mixed side by
 //! side), so the binary reports something useful without artifacts.
+//! Honours `SPARK_EXEC_TUNING_TABLE` for autotuned (MC, KC) blocks.
 //! See EXPERIMENTS.md §E4.
 
 mod common;

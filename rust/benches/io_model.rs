@@ -3,7 +3,8 @@
 //! model and the schedule simulator, plus the V100 roofline projections
 //! that turn traffic into the paper's headline speedups.  Closes with the
 //! *achieved* host GEMM throughput per exec backend, grounding the
-//! roofline discussion in a measured compute ceiling.
+//! roofline discussion in a measured compute ceiling.  Honours
+//! `SPARK_EXEC_TUNING_TABLE` for autotuned (MC, KC) blocks.
 
 mod common;
 

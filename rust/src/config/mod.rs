@@ -209,7 +209,14 @@ fn parse_value(s: &str) -> Result<Toml> {
 /// precision = "mixed"   # or "f32"; "mixed" implies backend = "simd"
 ///                       # unless a different backend is set explicitly
 ///                       # (that combination is a hard error)
+/// tuning_table = "bench-results/tuning.json"  # optional: a table
+///                       # written by `spark tune`, installed
+///                       # process-wide for the tunable backends
 /// ```
+///
+/// A configured `tuning_table` must load (missing or malformed files
+/// are hard errors — configs are explicit, unlike the lenient
+/// `SPARK_EXEC_TUNING_TABLE` bench environment hook).
 pub fn exec_from_doc(doc: &Document) -> Result<ExecOptions> {
     let d = ExecOptions::default();
     let backend_explicit = exec_backend_explicit(doc);
@@ -228,6 +235,12 @@ pub fn exec_from_doc(doc: &Document) -> Result<ExecOptions> {
             backend_explicit);
     }
     opts.validate()?;
+    if let Some(v) = doc.get("exec", "tuning_table") {
+        let path = v.as_str().ok_or_else(
+            || anyhow!("[exec] tuning_table must be a string"))?;
+        crate::exec::tune::install_from_path(path)
+            .context("[exec] tuning_table")?;
+    }
     Ok(opts)
 }
 
@@ -470,6 +483,32 @@ threads = 4
         let bad = Document::parse(
             "[exec]\nbackend = \"simd\"\nprecision = 16").unwrap();
         assert!(exec_from_doc(&bad).is_err());
+    }
+
+    #[test]
+    fn exec_tuning_table_loads_and_validates() {
+        let _guard = crate::exec::tune::test_lock();
+        crate::exec::tune::uninstall();
+        // non-string value is a type error
+        let bad = Document::parse("[exec]\ntuning_table = 3").unwrap();
+        assert!(exec_from_doc(&bad).is_err());
+        // missing file is a hard error (configs are explicit)
+        let bad = Document::parse(
+            "[exec]\ntuning_table = \"/nonexistent/tuning.json\"")
+            .unwrap();
+        assert!(exec_from_doc(&bad).is_err());
+        // a real table installs process-wide
+        let path = std::env::temp_dir().join(format!(
+            "spark_config_tune_{}.json", std::process::id()));
+        std::fs::write(&path,
+            r#"{"version": 1, "entries": [{"m": 8, "k": 4, "n": 8,
+                "precision": "f32", "mc": 4, "kc": 2}]}"#).unwrap();
+        let doc = Document::parse(&format!(
+            "[exec]\ntuning_table = \"{}\"", path.display())).unwrap();
+        exec_from_doc(&doc).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(crate::exec::tune::installed().unwrap().len(), 1);
+        crate::exec::tune::uninstall();
     }
 
     #[test]

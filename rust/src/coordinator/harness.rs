@@ -463,6 +463,12 @@ pub fn host_backend_report(ns: &[usize], bh: usize, d: usize,
         "Host MHA-{} — exec backends (bh={bh}, d={d})",
         if backward { "Backward" } else { "Forward" }));
     let backends = report_roster(opts);
+    // surface an installed tuning table in the report: tuned runs are
+    // labeled data, not silently-different numbers
+    if let Some(table) = exec::tune::installed() {
+        report.note("tuning_table entries (installed)",
+                    table.len() as f64);
+    }
     let block = 64usize;
     for &n in ns {
         let group = format!("host/d{d}");

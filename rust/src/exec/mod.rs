@@ -6,7 +6,8 @@
 //! * [`Scalar`] — the original single-threaded reference loops from
 //!   `tensor/`.  Ground truth; never changes behaviour.
 //! * [`Blocked`] — cache-blocked (MC×KC×NR) microkernels fanned out over
-//!   a `std::thread::scope` worker pool.  Deterministic by construction:
+//!   the persistent process-wide worker pool ([`pool`]).  Deterministic
+//!   by construction:
 //!   every output element accumulates its k-terms in the same ascending
 //!   order as `Scalar`, and the tile partition never depends on the
 //!   thread count, so results are bitwise-identical across
@@ -22,8 +23,17 @@
 //! batched matmul flavours and a task pool can host the attention path.
 //! `Simd`'s [`Precision`] is likewise the seam future quantized
 //! backends (int8, fp8) thread their numerics through.
+//!
+//! Two supporting modules round out the raw-speed story: [`pool`] keeps
+//! the worker threads alive across `run_tasks` calls (work-stealing,
+//! lazily spawned), and [`tune`] sweeps (MC, KC) block shapes per
+//! problem class and feeds the winners back to `Blocked::new` /
+//! `Simd::new` through an installable tuning table.  Backends built
+//! with `with_blocks` are pinned and ignore the table.
 
+pub mod pool;
 pub mod simd;
+pub mod tune;
 
 pub use simd::{Precision, Simd};
 
@@ -150,22 +160,39 @@ pub struct Blocked {
     threads: usize,
     mc: usize,
     kc: usize,
+    fixed: bool,
 }
 
 impl Blocked {
     /// `threads == 0` resolves to the machine's available parallelism.
+    /// Uses the default (MC, KC) blocking, overridden per problem class
+    /// by the installed [`tune`] table, when there is one.
     pub fn new(threads: usize) -> Self {
-        Blocked::with_blocks(threads, MC, KC)
+        Blocked { fixed: false, ..Blocked::with_blocks(threads, MC, KC) }
     }
 
-    /// Custom block sizes (property tests sweep these).
+    /// Pinned custom block sizes (the tuner and the block-sweep
+    /// property tests use this) — never consults the tuning table.
     pub fn with_blocks(threads: usize, mc: usize, kc: usize) -> Self {
         let threads = if threads == 0 {
             available_threads()
         } else {
             threads
         };
-        Blocked { threads, mc: mc.max(1), kc: kc.max(1) }
+        Blocked { threads, mc: mc.max(1), kc: kc.max(1), fixed: true }
+    }
+
+    /// Block shapes for one `(m, k, n)` matmul: pinned values, or the
+    /// installed tuning table's winner with the defaults as fallback.
+    /// Block shape never changes bits (see [`tune`]), only speed.
+    fn blocks(&self, m: usize, k: usize, n: usize) -> (usize, usize) {
+        if self.fixed {
+            return (self.mc, self.kc);
+        }
+        let bl = tune::blocks_for(m, k, n, Precision::F32,
+                                  tune::Blocks { mc: self.mc,
+                                                 kc: self.kc });
+        (bl.mc, bl.kc)
     }
 }
 
@@ -190,8 +217,8 @@ impl Backend for Blocked {
         assert_eq!(ka, kb, "inner dim mismatch");
         let mut out = vec![0.0f32; ba * m * n];
         let (ad, bd) = (a.data(), b.data());
-        let kc = self.kc;
-        par_batch_row_tiles(self.threads, ba, m, n, self.mc, &mut out,
+        let (mc, kc) = self.blocks(m, ka, n);
+        par_batch_row_tiles(self.threads, ba, m, n, mc, &mut out,
                             |bi, i0, rows, tile| {
             let ap = &ad[bi * m * ka..(bi + 1) * m * ka];
             let bp = &bd[bi * ka * n..(bi + 1) * ka * n];
@@ -207,8 +234,8 @@ impl Backend for Blocked {
         assert_eq!(ka, kb, "inner dim mismatch");
         let mut out = vec![0.0f32; ba * m * n];
         let (ad, bd) = (a.data(), b.data());
-        let kc = self.kc;
-        par_batch_row_tiles(self.threads, ba, m, n, self.mc, &mut out,
+        let (mc, kc) = self.blocks(m, ka, n);
+        par_batch_row_tiles(self.threads, ba, m, n, mc, &mut out,
                             |bi, i0, rows, tile| {
             let ap = &ad[bi * m * ka..(bi + 1) * m * ka];
             let bp = &bd[bi * n * ka..(bi + 1) * n * ka];
@@ -224,7 +251,8 @@ impl Backend for Blocked {
         assert_eq!(ka, kb, "inner dim mismatch");
         let mut out = vec![0.0f32; ba * m * n];
         let (ad, bd) = (a.data(), b.data());
-        par_batch_row_tiles(self.threads, ba, m, n, self.mc, &mut out,
+        let (mc, _) = self.blocks(m, ka, n);
+        par_batch_row_tiles(self.threads, ba, m, n, mc, &mut out,
                             |bi, i0, rows, tile| {
             let ap = &ad[bi * ka * m..(bi + 1) * ka * m];
             let bp = &bd[bi * ka * n..(bi + 1) * ka * n];
@@ -238,11 +266,20 @@ impl Backend for Blocked {
     }
 }
 
-/// Execute `tasks` on a transient scoped pool of up to `threads`
-/// workers (shared by the parallel backends).  Static round-robin
-/// assignment keeps the partition independent of timing; tiles are
-/// uniform so this balances well without a work queue.
+/// Execute `tasks` over the persistent process-wide worker pool
+/// ([`pool::global`]) with up to `threads` participants (the calling
+/// thread included) — the shared fan-out of the parallel backends.
+/// Workers survive across calls, so steady-state matmuls pay no thread
+/// spawn cost; see [`pool`] for scheduling and determinism notes.
 pub fn run_pool<'s>(threads: usize, tasks: Vec<Task<'s>>) {
+    pool::global().run(threads, tasks);
+}
+
+/// The original transient `std::thread::scope` pool, retained as the
+/// reference implementation the persistent pool is property-tested
+/// against (`rust/tests/exec_pool.rs`).  Static round-robin assignment
+/// keeps the partition independent of timing.
+pub fn run_scoped<'s>(threads: usize, tasks: Vec<Task<'s>>) {
     let t = threads.min(tasks.len()).max(1);
     if t == 1 {
         for task in tasks {

@@ -1,0 +1,351 @@
+//! Persistent worker pool shared by the parallel execution backends.
+//!
+//! The original `exec::run_pool` spun up a fresh `std::thread::scope`
+//! on every `Backend::run_tasks` call — one `clone(2)` per worker per
+//! matmul.  The paper's throughput argument (§3) is exactly about
+//! keeping compute units fed without per-call launch overhead, so the
+//! host analogue gets the same treatment: a process-wide pool of
+//! long-lived workers ([`global`]), spawned lazily on first demand and
+//! reused by every subsequent `run_pool` call from any backend.
+//!
+//! ## Scheduling
+//!
+//! Each [`Pool::run`] call forms one [`Job`]: the task list is dealt
+//! round-robin into per-participant deques (the submitting thread is
+//! participant 0), and every participant pops its own queue from the
+//! front, then **steals from the back** of the other queues once its
+//! own runs dry.  The initial partition is identical to the old scoped
+//! pool's static round-robin split, so the common case (uniform tiles,
+//! idle workers) executes the same schedule; stealing only changes who
+//! *runs* a task under load, never what the task writes.
+//!
+//! ## Determinism
+//!
+//! Bitwise determinism across thread counts remains the repo's
+//! contract.  It never depended on the pool: tasks built by
+//! `par_batch_row_tiles`/`par_row_chunks` own disjoint output tiles
+//! (`exec::carve`) and fix their accumulation order internally, so any
+//! execution order — including work-stealing's timing-dependent one —
+//! produces identical bits.  `rust/tests/exec_pool.rs` property-tests
+//! the persistent pool against the retained scoped implementation
+//! (`exec::run_scoped`) across 1/2/8 threads and repeated reuse.
+//!
+//! ## Soundness of the lifetime erasure
+//!
+//! `exec::Task<'s>` borrows caller state; long-lived workers require
+//! `'static`.  [`Pool::run`] transmutes the task list to `'static` but
+//! blocks on a completion barrier (`remaining == 0`) before returning,
+//! so every borrow a task captures strictly outlives its execution.
+//! Workers hold only the `Arc<Job>`, never the caller's frame.
+//!
+//! ## Panics
+//!
+//! A panicking task is caught on the worker, recorded, and re-thrown
+//! from the submitting thread after the barrier — the same observable
+//! behaviour as the scoped pool (which re-threw at scope exit).  The
+//! pool itself survives and stays usable.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+use super::Task;
+
+/// A task whose borrowed captures have been lifetime-erased so it can
+/// cross into the long-lived workers.  Sound only under [`Pool::run`]'s
+/// completion barrier (see the module docs).
+type ErasedTask = Box<dyn FnOnce() + Send + 'static>;
+
+/// Lock that shrugs off poisoning: the pool's mutexes only guard
+/// queues/flags and are never held across user code (tasks run outside
+/// the locks, wrapped in `catch_unwind`), so a poisoned guard's data is
+/// still consistent.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// One `Pool::run` call in flight: per-participant task queues plus the
+/// completion barrier the submitting thread blocks on.
+struct Job {
+    /// One deque per participant (slot 0 = the submitting thread).
+    queues: Vec<Mutex<VecDeque<ErasedTask>>>,
+    /// Tasks not yet finished; the decrement to zero signals `done`.
+    remaining: AtomicUsize,
+    /// Completion flag guarded for the condvar handshake.
+    done: Mutex<bool>,
+    /// Signalled once `remaining` hits zero.
+    signal: Condvar,
+    /// First panic payload captured from a task; re-thrown by `run`.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+impl Job {
+    /// Next task for `slot`: own queue front-first, then steal from the
+    /// back of the other queues.  `None` means the job is drained (for
+    /// this participant).
+    fn pop(&self, slot: usize) -> Option<ErasedTask> {
+        if let Some(t) = lock(&self.queues[slot]).pop_front() {
+            return Some(t);
+        }
+        let k = self.queues.len();
+        for off in 1..k {
+            let victim = (slot + off) % k;
+            if let Some(t) = lock(&self.queues[victim]).pop_back() {
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    /// Run tasks from `slot`'s perspective until every queue is dry,
+    /// catching panics and maintaining the completion barrier.
+    fn work(&self, slot: usize) {
+        while let Some(task) = self.pop(slot) {
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(task)) {
+                let mut first = lock(&self.panic);
+                if first.is_none() {
+                    *first = Some(payload);
+                }
+            }
+            if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                *lock(&self.done) = true;
+                self.signal.notify_all();
+            }
+        }
+    }
+}
+
+/// One dispatch to a worker: the job and the queue slot it owns.
+struct Assignment {
+    job: Arc<Job>,
+    slot: usize,
+}
+
+/// Handle to one long-lived worker: the channel its assignments arrive
+/// on.  Workers never terminate; an abandoned `Sender` (process
+/// teardown) ends the worker's `recv` loop.
+struct Worker {
+    tx: Sender<Assignment>,
+}
+
+fn spawn_worker(index: usize) -> Worker {
+    let (tx, rx) = channel::<Assignment>();
+    std::thread::Builder::new()
+        .name(format!("spark-exec-{index}"))
+        .spawn(move || {
+            while let Ok(Assignment { job, slot }) = rx.recv() {
+                job.work(slot);
+            }
+        })
+        .expect("spawning exec pool worker");
+    Worker { tx }
+}
+
+/// The persistent, lazily-grown worker pool.  One process-wide instance
+/// lives behind [`global`]; separate instances exist only in tests.
+pub struct Pool {
+    workers: Mutex<Vec<Worker>>,
+}
+
+impl Pool {
+    /// An empty pool; workers are spawned lazily by [`Pool::run`], up
+    /// to the largest `threads - 1` ever requested.
+    pub const fn new() -> Self {
+        Pool { workers: Mutex::new(Vec::new()) }
+    }
+
+    /// Number of workers currently alive (diagnostics/tests).
+    pub fn worker_count(&self) -> usize {
+        lock(&self.workers).len()
+    }
+
+    /// Execute `tasks` over up to `threads` participants (the calling
+    /// thread included) and return once **all** of them have finished.
+    /// Tasks must touch disjoint data (the [`Task`] contract).  The
+    /// first task panic, if any, is re-thrown here after the barrier.
+    ///
+    /// Re-entrant calls (a task submitting its own job) are safe: the
+    /// inner submitter participates as slot 0 and can drain the entire
+    /// inner job itself via stealing, so progress never depends on a
+    /// worker being free.
+    pub fn run<'s>(&self, threads: usize, tasks: Vec<Task<'s>>) {
+        let count = tasks.len();
+        let t = threads.min(count).max(1);
+        if t == 1 {
+            for task in tasks {
+                task();
+            }
+            return;
+        }
+        // SAFETY: tasks may borrow caller state ('s); they are erased
+        // to 'static only to cross into the long-lived workers.  The
+        // barrier below keeps this frame (and thus every borrow) alive
+        // until `remaining` hits zero, i.e. until no task can execute
+        // anymore.  Workers retain only the Arc<Job> afterwards.
+        let tasks = unsafe {
+            std::mem::transmute::<Vec<Task<'s>>, Vec<ErasedTask>>(tasks)
+        };
+        let mut queues: Vec<VecDeque<ErasedTask>> =
+            (0..t).map(|_| VecDeque::new()).collect();
+        for (i, task) in tasks.into_iter().enumerate() {
+            queues[i % t].push_back(task);
+        }
+        let job = Arc::new(Job {
+            queues: queues.into_iter().map(Mutex::new).collect(),
+            remaining: AtomicUsize::new(count),
+            done: Mutex::new(false),
+            signal: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        {
+            let mut workers = lock(&self.workers);
+            while workers.len() < t - 1 {
+                workers.push(spawn_worker(workers.len() + 1));
+            }
+            for (i, w) in workers[..t - 1].iter().enumerate() {
+                // a send only fails if the worker died (process
+                // teardown); slot 0's stealing drains its queue anyway
+                let _ = w.tx.send(Assignment {
+                    job: Arc::clone(&job),
+                    slot: i + 1,
+                });
+            }
+        }
+        // the submitting thread is participant 0
+        job.work(0);
+        let mut done = lock(&job.done);
+        while !*done {
+            done = job.signal.wait(done).unwrap_or_else(|e| e.into_inner());
+        }
+        drop(done);
+        if let Some(payload) = lock(&job.panic).take() {
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Default for Pool {
+    fn default() -> Self {
+        Pool::new()
+    }
+}
+
+/// The process-wide pool used by `exec::run_pool` — shared by every
+/// backend instance; its workers survive across calls.
+pub fn global() -> &'static Pool {
+    static POOL: Pool = Pool::new();
+    &POOL
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fill_tasks(data: &mut [f32], chunk: usize) -> Vec<Task<'_>> {
+        data.chunks_mut(chunk)
+            .enumerate()
+            .map(|(ci, c)| {
+                Box::new(move || {
+                    for (j, x) in c.iter_mut().enumerate() {
+                        *x = (ci * 100 + j) as f32;
+                    }
+                }) as Task<'_>
+            })
+            .collect()
+    }
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        let pool = Pool::new();
+        for threads in [1usize, 2, 4, 9] {
+            let mut hits = vec![0u8; 23];
+            {
+                let tasks: Vec<Task<'_>> = hits
+                    .iter_mut()
+                    .map(|h| Box::new(move || *h += 1) as Task<'_>)
+                    .collect();
+                pool.run(threads, tasks);
+            }
+            assert!(hits.iter().all(|&h| h == 1), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn reuse_is_deterministic() {
+        let pool = Pool::new();
+        let mut want = vec![0.0f32; 6 * 7];
+        {
+            let tasks = fill_tasks(&mut want, 7);
+            pool.run(1, tasks);
+        }
+        for round in 0..10 {
+            let mut got = vec![0.0f32; 6 * 7];
+            {
+                let tasks = fill_tasks(&mut got, 7);
+                pool.run(4, tasks);
+            }
+            assert_eq!(got, want, "round={round}");
+        }
+    }
+
+    #[test]
+    fn workers_grow_lazily_and_are_reused() {
+        let pool = Pool::new();
+        assert_eq!(pool.worker_count(), 0);
+        pool.run(3, (0..8).map(|_| Box::new(|| ()) as Task<'_>).collect());
+        assert_eq!(pool.worker_count(), 2);
+        pool.run(2, (0..8).map(|_| Box::new(|| ()) as Task<'_>).collect());
+        assert_eq!(pool.worker_count(), 2, "smaller runs spawn nothing");
+        pool.run(5, (0..8).map(|_| Box::new(|| ()) as Task<'_>).collect());
+        assert_eq!(pool.worker_count(), 4, "grows to the new high-water");
+    }
+
+    #[test]
+    fn single_task_runs_inline() {
+        let pool = Pool::new();
+        let mut hit = false;
+        {
+            let tasks: Vec<Task<'_>> = vec![Box::new(|| hit = true)];
+            pool.run(8, tasks);
+        }
+        assert!(hit);
+        assert_eq!(pool.worker_count(), 0, "one task never needs workers");
+    }
+
+    #[test]
+    fn panics_propagate_and_pool_survives() {
+        let pool = Pool::new();
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let tasks: Vec<Task<'static>> = (0..8)
+                .map(|i| {
+                    Box::new(move || {
+                        if i == 5 {
+                            panic!("task 5 exploded");
+                        }
+                    }) as Task<'static>
+                })
+                .collect();
+            pool.run(4, tasks);
+        }));
+        assert!(caught.is_err(), "the submitter must observe the panic");
+        // the pool keeps working after a task panicked
+        let mut hits = vec![0u8; 16];
+        {
+            let tasks: Vec<Task<'_>> = hits
+                .iter_mut()
+                .map(|h| Box::new(move || *h += 1) as Task<'_>)
+                .collect();
+            pool.run(4, tasks);
+        }
+        assert!(hits.iter().all(|&h| h == 1));
+    }
+
+    #[test]
+    fn global_pool_is_shared() {
+        let p1 = global() as *const Pool;
+        let p2 = global() as *const Pool;
+        assert_eq!(p1, p2);
+    }
+}

@@ -30,15 +30,17 @@
 
 use anyhow::{bail, Result};
 
-use super::{available_threads, par_batch_row_tiles, run_pool, Backend,
-            Task, KC, MC};
+use super::{available_threads, par_batch_row_tiles, run_pool, tune,
+            Backend, Task, KC, MC};
 use crate::tensor::{bf16, dims3, Tensor};
 
 /// Lane width of the packed panels (AVX2 = 8 × f32).
 const LANES: usize = 8;
 
-/// Numeric mode of the [`Simd`] backend.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+/// Numeric mode of the [`Simd`] backend.  Orderable and hashable so it
+/// can key the autotuner's per-problem-class tables (`exec::tune`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash,
+         Default)]
 pub enum Precision {
     /// Full-precision f32 operands and accumulators; bitwise-matching
     /// the `Scalar` reference (the existing accumulation-order
@@ -79,16 +81,21 @@ pub struct Simd {
     mc: usize,
     kc: usize,
     use_avx: bool,
+    fixed: bool,
 }
 
 impl Simd {
-    /// Backend with the default (`MC`×`KC`) blocking.  `threads == 0`
-    /// resolves to the machine's available parallelism.
+    /// Backend with the default (`MC`×`KC`) blocking, overridden per
+    /// problem class by the installed `exec::tune` table, when there is
+    /// one.  `threads == 0` resolves to the machine's available
+    /// parallelism.
     pub fn new(threads: usize, precision: Precision) -> Self {
-        Simd::with_blocks(threads, precision, MC, KC)
+        Simd { fixed: false,
+               ..Simd::with_blocks(threads, precision, MC, KC) }
     }
 
-    /// Custom block sizes (property tests sweep these).
+    /// Pinned custom block sizes (the tuner and the block-sweep
+    /// property tests use this) — never consults the tuning table.
     pub fn with_blocks(threads: usize, precision: Precision, mc: usize,
                        kc: usize) -> Self {
         let threads = if threads == 0 {
@@ -102,7 +109,22 @@ impl Simd {
             mc: mc.max(1),
             kc: kc.max(1),
             use_avx: detect_avx(),
+            fixed: true,
         }
+    }
+
+    /// Block shapes for one `(m, k, n)` matmul: pinned values, or the
+    /// installed tuning table's winner (keyed on this backend's numeric
+    /// mode) with the defaults as fallback.  Block shape never changes
+    /// bits (see `exec::tune`), only speed.
+    fn blocks(&self, m: usize, k: usize, n: usize) -> (usize, usize) {
+        if self.fixed {
+            return (self.mc, self.kc);
+        }
+        let bl = tune::blocks_for(m, k, n, self.precision,
+                                  tune::Blocks { mc: self.mc,
+                                                 kc: self.kc });
+        (bl.mc, bl.kc)
     }
 
     /// Whether the AVX2+FMA code path was selected at construction
@@ -155,9 +177,9 @@ impl Simd {
     /// a zero-skip — the `tensor::batch_matmul` order exactly.
     /// Operands arrive already staged (quantized in mixed mode).
     fn nn_tile(&self, ap: &[f32], bp: &[f32], tile: &mut [f32], i0: usize,
-               rows: usize, ka: usize, n: usize) {
-        for kk in (0..ka).step_by(self.kc) {
-            let kend = (kk + self.kc).min(ka);
+               rows: usize, ka: usize, n: usize, kc: usize) {
+        for kk in (0..ka).step_by(kc) {
+            let kend = (kk + kc).min(ka);
             for r in 0..rows {
                 let arow = &ap[(i0 + r) * ka + kk..(i0 + r) * ka + kend];
                 let orow = &mut tile[r * n..(r + 1) * n];
@@ -178,8 +200,8 @@ impl Simd {
     /// remains a single k-ascending chain, matching
     /// `tensor::batch_matmul_nt` bitwise in f32 mode.
     fn nt_tile(&self, ap: &[f32], bp: &[f32], tile: &mut [f32], i0: usize,
-               rows: usize, ka: usize, n: usize) {
-        let kc = self.kc.min(ka.max(1));
+               rows: usize, ka: usize, n: usize, kc: usize) {
+        let kc = kc.min(ka.max(1));
         let mut packb = vec![0.0f32; kc * LANES];
         let mut acc = vec![0.0f32; rows * LANES];
         let mut j0 = 0;
@@ -275,11 +297,12 @@ impl Backend for Simd {
         let mut staged = None;
         let (ad, bd) = self.stage(a.data(), b.data(), &mut staged);
         let this = *self;
-        par_batch_row_tiles(self.threads, ba, m, n, self.mc, &mut out,
+        let (mc, kc) = self.blocks(m, ka, n);
+        par_batch_row_tiles(self.threads, ba, m, n, mc, &mut out,
                             |bi, i0, rows, tile| {
             let ap = &ad[bi * m * ka..(bi + 1) * m * ka];
             let bp = &bd[bi * ka * n..(bi + 1) * ka * n];
-            this.nn_tile(ap, bp, tile, i0, rows, ka, n);
+            this.nn_tile(ap, bp, tile, i0, rows, ka, n, kc);
         });
         Tensor::new(vec![ba, m, n], out)
     }
@@ -293,11 +316,12 @@ impl Backend for Simd {
         let mut staged = None;
         let (ad, bd) = self.stage(a.data(), b.data(), &mut staged);
         let this = *self;
-        par_batch_row_tiles(self.threads, ba, m, n, self.mc, &mut out,
+        let (mc, kc) = self.blocks(m, ka, n);
+        par_batch_row_tiles(self.threads, ba, m, n, mc, &mut out,
                             |bi, i0, rows, tile| {
             let ap = &ad[bi * m * ka..(bi + 1) * m * ka];
             let bp = &bd[bi * n * ka..(bi + 1) * n * ka];
-            this.nt_tile(ap, bp, tile, i0, rows, ka, n);
+            this.nt_tile(ap, bp, tile, i0, rows, ka, n, kc);
         });
         Tensor::new(vec![ba, m, n], out)
     }
@@ -311,7 +335,8 @@ impl Backend for Simd {
         let mut staged = None;
         let (ad, bd) = self.stage(a.data(), b.data(), &mut staged);
         let this = *self;
-        par_batch_row_tiles(self.threads, ba, m, n, self.mc, &mut out,
+        let (mc, _) = self.blocks(m, ka, n);
+        par_batch_row_tiles(self.threads, ba, m, n, mc, &mut out,
                             |bi, i0, rows, tile| {
             let ap = &ad[bi * ka * m..(bi + 1) * ka * m];
             let bp = &bd[bi * ka * n..(bi + 1) * ka * n];

@@ -1,0 +1,509 @@
+//! Microkernel autotuner and tuning table for the host backends.
+//!
+//! `Blocked` and `Simd` hardwire their (MC, KC) cache blocking; the
+//! paper's Volta kernels pick tile shapes per problem class instead
+//! (§3.2), and FlashAttention shows tile choice dominates IO-bound
+//! attention throughput.  This module is the host analogue: an
+//! autotuner that sweeps candidate (MC, KC) pairs over the two GEMM
+//! classes of the attention layer — QKᵀ `(n, d, n)` and P·V `(n, n, d)`
+//! — using the same `bench::measure_wallclock` machinery as
+//! `benches/ablation_blocks.rs`, and a serializable [`TuningTable`]
+//! mapping [`ProblemKey`]s to the winning [`Blocks`].
+//!
+//! ## How a table takes effect
+//!
+//! The table is installed process-wide ([`install`] /
+//! [`install_from_path`], fed by `[exec] tuning_table`,
+//! `--tuning-table`, or `SPARK_EXEC_TUNING_TABLE`).  Backends built
+//! with `Blocked::new` / `Simd::new` consult it per matmul via
+//! [`blocks_for`]; backends built with `with_blocks` are **pinned** and
+//! never consult it — that is what the tuner itself (and the block-
+//! sweep property tests) use, so candidate timings can't be rewritten
+//! by a previously installed table.
+//!
+//! ## Why substituting blocks is safe
+//!
+//! Block shape never changes bits on any backend: `mc` only partitions
+//! output rows into tiles, and every kernel accumulates each output
+//! element's k-terms in ascending order regardless of `kc` panelling
+//! (f32 modes match `Scalar` bitwise; mixed mode keeps one fixed-order
+//! FMA chain per element).  So a tuned table is purely a performance
+//! choice — `rust/tests/exec_pool.rs` property-tests this for every
+//! candidate the tuner can emit.
+//!
+//! ## Table format (JSON, version 1)
+//!
+//! ```json
+//! {"version": 1,
+//!  "entries": [{"m": 256, "k": 64, "n": 256, "precision": "f32",
+//!               "mc": 32, "kc": 128}]}
+//! ```
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+
+use anyhow::{bail, Context, Result};
+
+use crate::bench;
+use crate::jsonio::{self, Value};
+use crate::tensor::{Rng, Tensor};
+
+use super::{Backend, BackendKind, Blocked, Precision, Simd, KC, MC};
+
+/// A cache-blocking choice: `mc` rows per task tile, `kc`-deep k-panels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Blocks {
+    /// Row-block assigned to one worker task (`exec::MC` analogue).
+    pub mc: usize,
+    /// k-panel kept hot in cache between row sweeps (`exec::KC`).
+    pub kc: usize,
+}
+
+impl Blocks {
+    /// The hardwired defaults the backends fall back to.
+    pub fn default_blocks() -> Blocks {
+        Blocks { mc: MC, kc: KC }
+    }
+}
+
+/// A GEMM problem class the tuner keys its table on: the `(m, k, n)`
+/// shape of one batch entry plus the numeric mode it runs in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ProblemKey {
+    /// Output rows of one batch entry.
+    pub m: usize,
+    /// Inner (contraction) dimension.
+    pub k: usize,
+    /// Output columns of one batch entry.
+    pub n: usize,
+    /// Numeric mode the measurement ran in.
+    pub precision: Precision,
+}
+
+/// Winning block shapes per problem class, serializable to JSON.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct TuningTable {
+    entries: BTreeMap<ProblemKey, Blocks>,
+}
+
+impl TuningTable {
+    /// Record (or overwrite) the winner for one problem class.
+    pub fn insert(&mut self, key: ProblemKey, blocks: Blocks) {
+        self.entries.insert(key, blocks);
+    }
+
+    /// Exact-match lookup for one problem class.
+    pub fn lookup(&self, key: ProblemKey) -> Option<Blocks> {
+        self.entries.get(&key).copied()
+    }
+
+    /// Number of recorded problem classes.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the table has no entries.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Serialize as the version-1 table format (see the module docs).
+    pub fn to_json(&self) -> Value {
+        let entries: Vec<Value> = self
+            .entries
+            .iter()
+            .map(|(key, bl)| {
+                jsonio::obj(vec![
+                    ("m", jsonio::num(key.m as f64)),
+                    ("k", jsonio::num(key.k as f64)),
+                    ("n", jsonio::num(key.n as f64)),
+                    ("precision", jsonio::s(key.precision.name())),
+                    ("mc", jsonio::num(bl.mc as f64)),
+                    ("kc", jsonio::num(bl.kc as f64)),
+                ])
+            })
+            .collect();
+        jsonio::obj(vec![
+            ("version", jsonio::num(1.0)),
+            ("entries", Value::Arr(entries)),
+        ])
+    }
+
+    /// Parse a version-1 table, rejecting unknown versions and
+    /// malformed entries.
+    pub fn from_json(v: &Value) -> Result<TuningTable> {
+        let version = v
+            .get("version")
+            .and_then(Value::as_usize)
+            .context("tuning table: missing numeric \"version\"")?;
+        if version != 1 {
+            bail!("tuning table: unsupported version {version} \
+                   (expected 1)");
+        }
+        let entries = v
+            .get("entries")
+            .and_then(Value::as_arr)
+            .context("tuning table: missing \"entries\" array")?;
+        let mut table = TuningTable::default();
+        for (i, e) in entries.iter().enumerate() {
+            let field = |name: &str| -> Result<usize> {
+                e.get(name).and_then(Value::as_usize).with_context(|| {
+                    format!("tuning table entry {i}: missing numeric \
+                             \"{name}\"")
+                })
+            };
+            let precision = e
+                .get("precision")
+                .and_then(Value::as_str)
+                .with_context(|| {
+                    format!("tuning table entry {i}: missing \
+                             \"precision\"")
+                })?;
+            let precision = Precision::parse(precision)
+                .with_context(|| format!("tuning table entry {i}"))?;
+            let key = ProblemKey {
+                m: field("m")?,
+                k: field("k")?,
+                n: field("n")?,
+                precision,
+            };
+            let blocks = Blocks {
+                mc: field("mc")?.max(1),
+                kc: field("kc")?.max(1),
+            };
+            table.insert(key, blocks);
+        }
+        Ok(table)
+    }
+
+    /// Write the table as JSON to `path`.
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, jsonio::to_string(&self.to_json()))
+            .with_context(|| format!("writing tuning table {path:?}"))
+    }
+
+    /// Read a table back from a JSON file written by [`save`](Self::save).
+    pub fn load(path: &str) -> Result<TuningTable> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading tuning table {path:?}"))?;
+        let v = jsonio::parse(&text)
+            .with_context(|| format!("parsing tuning table {path:?}"))?;
+        TuningTable::from_json(&v)
+            .with_context(|| format!("tuning table {path:?}"))
+    }
+}
+
+/// The process-wide installed table consulted by `Blocked::new` /
+/// `Simd::new` backends (never by pinned `with_blocks` ones).
+static SLOT: RwLock<Option<Arc<TuningTable>>> = RwLock::new(None);
+
+/// Install `table` process-wide, replacing any previous one; returns
+/// its entry count.
+pub fn install(table: TuningTable) -> usize {
+    let n = table.len();
+    *SLOT.write().unwrap_or_else(|e| e.into_inner()) =
+        Some(Arc::new(table));
+    n
+}
+
+/// The currently installed table, if any.
+pub fn installed() -> Option<Arc<TuningTable>> {
+    SLOT.read().unwrap_or_else(|e| e.into_inner()).clone()
+}
+
+/// Remove the installed table (backends fall back to the defaults).
+pub fn uninstall() {
+    *SLOT.write().unwrap_or_else(|e| e.into_inner()) = None;
+}
+
+/// Load a table from `path` and [`install`] it; returns the entry
+/// count.  This is the one implementation behind `[exec] tuning_table`,
+/// `--tuning-table`, and `SPARK_EXEC_TUNING_TABLE`.
+pub fn install_from_path(path: &str) -> Result<usize> {
+    Ok(install(TuningTable::load(path)?))
+}
+
+/// Block shapes for one matmul: the installed table's winner for this
+/// exact problem class, or `default` when no table is installed or the
+/// class is unknown.
+pub fn blocks_for(m: usize, k: usize, n: usize, precision: Precision,
+                  default: Blocks) -> Blocks {
+    match installed() {
+        Some(table) => table
+            .lookup(ProblemKey { m, k, n, precision })
+            .unwrap_or(default),
+        None => default,
+    }
+}
+
+/// The stock candidate grid the tuner sweeps: every (mc, kc) in
+/// {16, 32, 64, 128} × {64, 128, 256, 512} — the `ablation_blocks`
+/// sweep extended along kc, defaults (64, 256) included.
+pub fn default_candidates() -> Vec<Blocks> {
+    let mut out = Vec::new();
+    for mc in [16usize, 32, 64, 128] {
+        for kc in [64usize, 128, 256, 512] {
+            out.push(Blocks { mc, kc });
+        }
+    }
+    out
+}
+
+/// One tuned problem class: the winner and its timing next to the
+/// hardwired defaults' timing.
+#[derive(Debug, Clone, Copy)]
+pub struct TuneRow {
+    /// The problem class that was swept.
+    pub key: ProblemKey,
+    /// Fastest candidate.
+    pub best: Blocks,
+    /// Mean seconds of the fastest candidate.
+    pub best_s: f64,
+    /// Mean seconds of the default (MC, KC) blocking.
+    pub default_s: f64,
+}
+
+impl TuneRow {
+    /// Speedup of the winner over the defaults (1.0 = no gain).
+    pub fn speedup(&self) -> f64 {
+        if self.best_s > 0.0 {
+            self.default_s / self.best_s
+        } else {
+            1.0
+        }
+    }
+}
+
+/// A backend pinned to candidate blocks (never table-consulting).
+/// `Scalar` has no block parameters and mixed precision only exists in
+/// `Simd`, so those combinations are errors.
+fn fixed_backend(kind: BackendKind, threads: usize, precision: Precision,
+                 bl: Blocks) -> Result<Box<dyn Backend>> {
+    match kind {
+        BackendKind::Scalar => {
+            bail!("the scalar backend has no block parameters to tune")
+        }
+        BackendKind::Blocked => {
+            if precision == Precision::Mixed {
+                bail!("precision \"mixed\" requires backend = \"simd\"");
+            }
+            Ok(Box::new(Blocked::with_blocks(threads, bl.mc, bl.kc)))
+        }
+        BackendKind::Simd => {
+            Ok(Box::new(Simd::with_blocks(threads, precision, bl.mc,
+                                          bl.kc)))
+        }
+    }
+}
+
+/// Sweep `candidates` over one `(ba, m, k, n)` problem at `precision`
+/// and return the winner.  Each candidate times one NN and one NT
+/// matmul (the two flavours on the attention forward path) over
+/// shape-seeded random operands; the defaults (MC, KC) are timed too so
+/// the row carries a defaults-relative speedup.
+pub fn tune_problem(kind: BackendKind, threads: usize,
+                    precision: Precision, ba: usize, m: usize, k: usize,
+                    n: usize, candidates: &[Blocks],
+                    opts: bench::Options) -> Result<TuneRow> {
+    if candidates.is_empty() {
+        bail!("tune_problem: empty candidate list");
+    }
+    let seed = 0x5AB1_u64
+        ^ ((m as u64) << 40) ^ ((k as u64) << 20) ^ n as u64;
+    let mut rng = Rng::new(seed);
+    let a = Tensor::randn(vec![ba, m, k], &mut rng);
+    let b = Tensor::randn(vec![ba, k, n], &mut rng);
+    let bt = Tensor::randn(vec![ba, n, k], &mut rng);
+    let time_blocks = |bl: Blocks| -> Result<f64> {
+        let be = fixed_backend(kind, threads, precision, bl)?;
+        let series = bench::measure_wallclock(opts, || {
+            let _ = be.batch_matmul(&a, &b);
+            let _ = be.batch_matmul_nt(&a, &bt);
+            Ok(())
+        })?;
+        Ok(series.mean())
+    };
+    let mut best = candidates[0];
+    let mut best_s = f64::INFINITY;
+    let mut default_s = None;
+    for &bl in candidates {
+        let mean = time_blocks(bl)?;
+        if mean < best_s {
+            best = bl;
+            best_s = mean;
+        }
+        if bl == Blocks::default_blocks() {
+            default_s = Some(mean);
+        }
+    }
+    let default_s = match default_s {
+        Some(s) => s,
+        None => time_blocks(Blocks::default_blocks())?,
+    };
+    Ok(TuneRow {
+        key: ProblemKey { m, k, n, precision },
+        best,
+        best_s,
+        default_s,
+    })
+}
+
+/// Tune the attention layer's GEMM classes for every sequence length in
+/// `ns`: QKᵀ `(n, d, n)` and P·V `(n, n, d)` at batch `bh`
+/// (batch × heads), in every numeric mode `kind` supports (`Simd`: f32
+/// and mixed; `Blocked`: f32).  Returns the winners as an installable
+/// [`TuningTable`] plus the per-class rows for reporting.
+pub fn tune_attention(kind: BackendKind, threads: usize, ns: &[usize],
+                      bh: usize, d: usize, candidates: &[Blocks],
+                      opts: bench::Options)
+                      -> Result<(TuningTable, Vec<TuneRow>)> {
+    if kind == BackendKind::Scalar {
+        bail!("the scalar backend has no block parameters to tune \
+               (pick blocked or simd)");
+    }
+    let precisions: &[Precision] = if kind == BackendKind::Simd {
+        &[Precision::F32, Precision::Mixed]
+    } else {
+        &[Precision::F32]
+    };
+    let mut table = TuningTable::default();
+    let mut rows = Vec::new();
+    for &n in ns {
+        for &precision in precisions {
+            for (m, k, nn) in [(n, d, n), (n, n, d)] {
+                let row = tune_problem(kind, threads, precision, bh, m,
+                                       k, nn, candidates, opts)
+                    .with_context(|| {
+                        format!("tuning ({m}, {k}, {nn}) at {}",
+                                precision.name())
+                    })?;
+                table.insert(row.key, row.best);
+                rows.push(row);
+            }
+        }
+    }
+    Ok((table, rows))
+}
+
+/// Serializes lib tests that install into the process-wide slot (the
+/// table is global state shared across the test harness's threads).
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_table() -> TuningTable {
+        let mut t = TuningTable::default();
+        t.insert(
+            ProblemKey { m: 256, k: 64, n: 256,
+                         precision: Precision::F32 },
+            Blocks { mc: 32, kc: 128 },
+        );
+        t.insert(
+            ProblemKey { m: 256, k: 256, n: 64,
+                         precision: Precision::Mixed },
+            Blocks { mc: 128, kc: 64 },
+        );
+        t
+    }
+
+    #[test]
+    fn json_round_trip_preserves_entries() {
+        let t = sample_table();
+        let back = TuningTable::from_json(&t.to_json()).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.len(), 2);
+        assert_eq!(
+            back.lookup(ProblemKey { m: 256, k: 64, n: 256,
+                                     precision: Precision::F32 }),
+            Some(Blocks { mc: 32, kc: 128 })
+        );
+    }
+
+    #[test]
+    fn file_round_trip_preserves_entries() {
+        let path = std::env::temp_dir().join(format!(
+            "spark_tune_test_{}.json", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        let t = sample_table();
+        t.save(&path).unwrap();
+        let back = TuningTable::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_tables() {
+        for bad in [
+            r#"{"entries": []}"#,
+            r#"{"version": 2, "entries": []}"#,
+            r#"{"version": 1}"#,
+            r#"{"version": 1, "entries": [{"m": 1}]}"#,
+            r#"{"version": 1, "entries": [{"m": 1, "k": 1, "n": 1,
+                "precision": "fp8", "mc": 4, "kc": 4}]}"#,
+        ] {
+            let v = jsonio::parse(bad).unwrap();
+            assert!(TuningTable::from_json(&v).is_err(),
+                    "should reject {bad}");
+        }
+    }
+
+    #[test]
+    fn install_lookup_uninstall() {
+        let _guard = test_lock();
+        uninstall();
+        let key = ProblemKey { m: 256, k: 64, n: 256,
+                               precision: Precision::F32 };
+        let default = Blocks::default_blocks();
+        assert_eq!(blocks_for(256, 64, 256, Precision::F32, default),
+                   default, "no table → defaults");
+        assert_eq!(install(sample_table()), 2);
+        assert_eq!(installed().unwrap().lookup(key),
+                   Some(Blocks { mc: 32, kc: 128 }));
+        assert_eq!(blocks_for(256, 64, 256, Precision::F32, default),
+                   Blocks { mc: 32, kc: 128 });
+        // unknown class and wrong precision fall back to defaults
+        assert_eq!(blocks_for(512, 64, 512, Precision::F32, default),
+                   default);
+        assert_eq!(blocks_for(256, 64, 256, Precision::Mixed, default),
+                   default);
+        uninstall();
+        assert!(installed().is_none());
+        assert_eq!(blocks_for(256, 64, 256, Precision::F32, default),
+                   default);
+    }
+
+    #[test]
+    fn candidate_grid_covers_the_defaults() {
+        let cands = default_candidates();
+        assert_eq!(cands.len(), 16);
+        assert!(cands.contains(&Blocks::default_blocks()));
+    }
+
+    #[test]
+    fn tune_problem_picks_a_candidate() {
+        let cands = [Blocks { mc: 8, kc: 16 }, Blocks { mc: 16, kc: 8 }];
+        let opts = bench::Options { warmup_iters: 0, iters: 1 };
+        let row = tune_problem(BackendKind::Blocked, 1, Precision::F32,
+                               1, 16, 8, 16, &cands, opts).unwrap();
+        assert!(cands.contains(&row.best));
+        assert!(row.best_s.is_finite() && row.best_s >= 0.0);
+        assert!(row.default_s.is_finite());
+        assert!(row.speedup() > 0.0);
+    }
+
+    #[test]
+    fn tune_rejects_scalar_and_mixed_blocked() {
+        let opts = bench::Options { warmup_iters: 0, iters: 1 };
+        assert!(tune_attention(BackendKind::Scalar, 1, &[8], 1, 4,
+                               &default_candidates(), opts).is_err());
+        assert!(tune_problem(BackendKind::Blocked, 1, Precision::Mixed,
+                             1, 8, 4, 8, &[Blocks { mc: 4, kc: 4 }],
+                             opts).is_err());
+    }
+}

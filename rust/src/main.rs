@@ -8,6 +8,7 @@
 //! spark bench-backward     Fig 11 sweep (E2)
 //! spark bench-e2e          Fig 12 encoder latency (E4)
 //! spark bench-host         host attention path: scalar/blocked/simd backends
+//! spark tune               autotune (MC, KC) block shapes per GEMM class
 //! spark accuracy           §4.2.3 error table (E3)
 //! spark io-report          §2.3 HBM traffic claim (E5)
 //! spark project            V100-projected Fig 10/11 at paper scale
@@ -43,6 +44,8 @@ fn top_usage() -> String {
          \x20 bench-backward     Fig 11: MHA-Backward sweep (E2)\n\
          \x20 bench-e2e          Fig 12: encoder-forward latency (E4)\n\
          \x20 bench-host         host attention: exec-backend comparison\n\
+         \x20 tune               autotune (MC, KC) block shapes per GEMM \
+         class\n\
          \x20 accuracy           §4.2.3 accuracy table (E3)\n\
          \x20 io-report          §2.3 HBM traffic model (E5)\n\
          \x20 project            V100-projected figures at paper scale\n\
@@ -63,6 +66,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "bench-backward" => cmd_bench(rest, Figure::Backward),
         "bench-e2e" => cmd_bench(rest, Figure::E2e),
         "bench-host" => cmd_bench_host(rest),
+        "tune" => cmd_tune(rest),
         "accuracy" => cmd_accuracy(rest),
         "io-report" => cmd_io_report(rest),
         "project" => cmd_project(rest),
@@ -100,6 +104,12 @@ fn exec_from_flags(p: &Parsed, base: ExecOptions,
         e = e.with_precision(Precision::parse(pr)?, backend_explicit);
     }
     e.validate()?;
+    // commands that declare --tuning-table get the table installed
+    // process-wide here (undeclared lookups just return None)
+    if let Some(path) = p.get("tuning-table") {
+        let n = exec::tune::install_from_path(path)?;
+        info!("tuning table {path}: installed {n} entries");
+    }
     Ok(e)
 }
 
@@ -114,7 +124,9 @@ fn cmd_train(args: &[String]) -> Result<()> {
         .flag("backend", "host exec backend: scalar | blocked | simd", None)
         .flag("threads", "host exec worker threads (0 = auto)", None)
         .flag("precision", "simd numeric mode: f32 | mixed \
-                            (mixed implies --backend simd)", None);
+                            (mixed implies --backend simd)", None)
+        .flag("tuning-table", "install a `spark tune` table for the \
+                               host backends", None);
     let p = cmd.parse(args)?;
     let (mut cfg, backend_in_config) = match p.get("config") {
         Some(path) => {
@@ -254,6 +266,8 @@ fn cmd_bench_host(args: &[String]) -> Result<()> {
         .flag("precision", "simd numeric mode: f32 | mixed (mixed \
                             implies --backend simd; pins like --backend)",
               None)
+        .flag("tuning-table", "install a `spark tune` table for the \
+                               host backends", None)
         .flag("json-out", "write JSON report here", None)
         .switch("backward", "bench the backward pass instead");
     let p = cmd.parse(args)?;
@@ -278,6 +292,76 @@ fn cmd_bench_host(args: &[String]) -> Result<()> {
         p.get_usize("d")?.unwrap_or(64), p.switch("backward"), opts)?;
     // speedup + accuracy summaries are part of the report notes
     print!("{}", report.emit(p.get("json-out"))?);
+    Ok(())
+}
+
+/// `spark tune` — sweep the (MC, KC) candidate grid over the attention
+/// layer's GEMM classes (QKᵀ and P·V per sequence length) and write the
+/// winners as a tuning table the backends consult when it is installed
+/// via `--tuning-table`, `[exec] tuning_table`, or
+/// `SPARK_EXEC_TUNING_TABLE`.
+fn cmd_tune(args: &[String]) -> Result<()> {
+    let cmd = Command::new("tune",
+                           "autotune (MC, KC) block shapes per GEMM class")
+        .flag("ns", "comma-separated sequence lengths", Some("256,512"))
+        .flag("bh", "batch × heads", Some("8"))
+        .flag("d", "head dimension", Some("64"))
+        .flag("backend", "backend to tune: blocked | simd", Some("simd"))
+        .flag("threads", "host exec worker threads (0 = auto)", Some("0"))
+        .flag("iters", "measured iterations per candidate", Some("3"))
+        .flag("warmup", "warmup iterations per candidate", Some("1"))
+        .flag("out", "write the tuning table here",
+              Some("bench-results/tuning.json"));
+    let p = cmd.parse(args)?;
+    let ns = p.get("ns").unwrap_or("256,512").split(',')
+        .map(|s| s.trim().parse::<usize>().map_err(
+            |_| anyhow::anyhow!("--ns expects integers, got {s:?}")))
+        .collect::<Result<Vec<_>>>()?;
+    let kind = BackendKind::parse(p.get("backend").unwrap_or("simd"))?;
+    if kind == BackendKind::Scalar {
+        bail!("the scalar backend has no block parameters to tune \
+               (pick --backend blocked or simd)");
+    }
+    let threads = p.get_usize("threads")?.unwrap_or(0);
+    let opts = Options {
+        warmup_iters: p.get_usize("warmup")?.unwrap_or(1),
+        iters: p.get_usize("iters")?.unwrap_or(3).max(1),
+    };
+    let candidates = exec::tune::default_candidates();
+    let bh = p.get_usize("bh")?.unwrap_or(8);
+    let d = p.get_usize("d")?.unwrap_or(64);
+    println!("sweeping {} (mc, kc) candidates per GEMM class \
+              (backend {}, bh={bh}, d={d})",
+             candidates.len(), kind.name());
+    let (table, rows) = exec::tune::tune_attention(
+        kind, threads, &ns, bh, d, &candidates, opts)?;
+    println!("{:<26} {:>9} {:>12} {:>12} {:>8}",
+             "class (m, k, n) prec", "best", "best_ms", "default_ms",
+             "speedup");
+    for r in &rows {
+        println!("{:<26} {:>9} {:>12.3} {:>12.3} {:>7.2}×",
+                 format!("({}, {}, {}) {}", r.key.m, r.key.k, r.key.n,
+                         r.key.precision.name()),
+                 format!("{}x{}", r.best.mc, r.best.kc),
+                 r.best_s * 1e3, r.default_s * 1e3, r.speedup());
+    }
+    let out = p.get("out").unwrap_or("bench-results/tuning.json");
+    if let Some(dir) = std::path::Path::new(out).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    table.save(out)?;
+    let reloaded = exec::tune::TuningTable::load(out)?;
+    if reloaded != table {
+        bail!("tuning table round-trip mismatch: {out} did not reload \
+               to identical block choices");
+    }
+    println!("tuning table → {out} ({} entries; reload round-trip \
+              verified)", table.len());
+    println!("enable it with `--tuning-table {out}`, \
+              `[exec] tuning_table = \"{out}\"`, or \
+              SPARK_EXEC_TUNING_TABLE={out}");
     Ok(())
 }
 

@@ -1,0 +1,265 @@
+//! Property tests for PR 6's execution-layer changes:
+//!
+//! * the **persistent worker pool** (`exec::run_pool`) must produce the
+//!   same observable effects as the retired per-call scoped pool
+//!   (`exec::run_scoped`) for any task set and thread count, including
+//!   across pool reuse — the pool is a throughput optimisation, never a
+//!   semantic change;
+//! * the **autotuner** (`exec::tune`) may substitute any (MC, KC)
+//!   candidate it sweeps without changing a single output bit on any
+//!   backend — blocking only re-orders *iteration*, not accumulation —
+//!   so a tuning table is always numerically safe to install;
+//! * the tuning table survives a JSON save → load round-trip unchanged.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use sparkattention::bench::Options;
+use sparkattention::exec::{self, tune, Backend, BackendKind, Blocked,
+                           Precision, Simd, Task};
+use sparkattention::proptest::{check, default_cases, Gen, OneOf, USize};
+use sparkattention::tensor::{Rng, Tensor};
+
+/// Random task-set: how many tasks, how many threads, and per-task
+/// "work" amounts whose ordering-sensitive digest we compare.
+#[derive(Debug, Clone)]
+struct PoolCase {
+    tasks: usize,
+    threads: usize,
+    seed: u64,
+}
+
+struct PoolGen;
+
+impl Gen for PoolGen {
+    type Value = PoolCase;
+
+    fn generate(&self, rng: &mut Rng) -> PoolCase {
+        PoolCase {
+            tasks: USize { lo: 0, hi: 40 }.generate(rng),
+            threads: OneOf(vec![1usize, 2, 3, 8, 17]).generate(rng),
+            seed: rng.next_u64(),
+        }
+    }
+}
+
+/// Run `c.tasks` tasks through `run`, each writing a value into its own
+/// slot (disjoint data, like the backends' row-tiles) and bumping a
+/// shared counter.  Returns (slots, executions).
+fn drive(c: &PoolCase, run: fn(usize, Vec<Task<'_>>)) -> (Vec<u64>, usize) {
+    let slots: Vec<AtomicU64> =
+        (0..c.tasks).map(|_| AtomicU64::new(0)).collect();
+    let ran = AtomicUsize::new(0);
+    let tasks: Vec<Task<'_>> = (0..c.tasks)
+        .map(|i| {
+            let slot = &slots[i];
+            let ran = &ran;
+            let seed = c.seed;
+            Box::new(move || {
+                // deterministic per-task payload
+                let mut r = Rng::new(seed ^ (i as u64).wrapping_mul(0x9E37));
+                slot.store(r.next_u64(), Ordering::Relaxed);
+                ran.fetch_add(1, Ordering::Relaxed);
+            }) as Task<'_>
+        })
+        .collect();
+    run(c.threads, tasks);
+    (slots.into_iter().map(AtomicU64::into_inner).collect(),
+     ran.load(Ordering::Relaxed))
+}
+
+/// The persistent pool is observationally identical to the scoped
+/// reference pool: every task runs exactly once with the same per-task
+/// results, for any (task count, thread count), and stays so across
+/// repeated reuse of the long-lived workers.
+#[test]
+fn persistent_pool_matches_scoped_pool_across_threads_and_reuse() {
+    check("pool=scoped", &PoolGen, default_cases(), |c| {
+        let (want_slots, want_ran) = drive(&c, exec::run_scoped);
+        if want_ran != c.tasks {
+            return Err(format!("scoped ran {want_ran}/{} tasks: {c:?}",
+                               c.tasks));
+        }
+        // several rounds: the pool's lazily-grown workers are reused
+        for round in 0..3 {
+            let (slots, ran) = drive(&c, exec::run_pool);
+            if ran != c.tasks {
+                return Err(format!(
+                    "pool ran {ran}/{} tasks (round {round}): {c:?}",
+                    c.tasks));
+            }
+            if slots != want_slots {
+                return Err(format!(
+                    "pool results differ from scoped (round {round}): \
+                     {c:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// A panicking task surfaces as a panic at the `run_pool` call site, and
+/// the shared pool remains fully usable afterwards.
+#[test]
+fn pool_propagates_task_panics_and_survives() {
+    let boom = std::panic::catch_unwind(|| {
+        let tasks: Vec<Task<'_>> = (0..8)
+            .map(|i| {
+                Box::new(move || {
+                    if i == 5 {
+                        panic!("task {i} failed");
+                    }
+                }) as Task<'_>
+            })
+            .collect();
+        exec::run_pool(4, tasks);
+    });
+    assert!(boom.is_err(), "the task panic must reach the caller");
+
+    // the pool is not poisoned: a follow-up run completes normally
+    let ran = AtomicUsize::new(0);
+    let tasks: Vec<Task<'_>> = (0..16)
+        .map(|_| {
+            let ran = &ran;
+            Box::new(move || {
+                ran.fetch_add(1, Ordering::Relaxed);
+            }) as Task<'_>
+        })
+        .collect();
+    exec::run_pool(4, tasks);
+    assert_eq!(ran.load(Ordering::Relaxed), 16);
+}
+
+/// Random batched-matmul shape for the block-substitution properties.
+#[derive(Debug, Clone)]
+struct ShapeCase {
+    ba: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    seed: u64,
+}
+
+struct ShapeGen;
+
+impl Gen for ShapeGen {
+    type Value = ShapeCase;
+
+    fn generate(&self, rng: &mut Rng) -> ShapeCase {
+        ShapeCase {
+            ba: USize { lo: 1, hi: 3 }.generate(rng),
+            m: USize { lo: 1, hi: 50 }.generate(rng),
+            k: USize { lo: 1, hi: 33 }.generate(rng),
+            n: USize { lo: 1, hi: 40 }.generate(rng),
+            seed: rng.next_u64(),
+        }
+    }
+}
+
+fn operands(c: &ShapeCase) -> (Tensor, Tensor, Tensor) {
+    let mut r = Rng::new(c.seed);
+    (Tensor::randn(vec![c.ba, c.m, c.k], &mut r),
+     Tensor::randn(vec![c.ba, c.k, c.n], &mut r),
+     Tensor::randn(vec![c.ba, c.n, c.k], &mut r))
+}
+
+/// `nn` and `nt` outputs of one backend, as raw bit vectors.
+fn outputs(be: &dyn Backend, a: &Tensor, b: &Tensor, bt: &Tensor)
+           -> (Vec<f32>, Vec<f32>) {
+    (be.batch_matmul(a, b).data().to_vec(),
+     be.batch_matmul_nt(a, bt).data().to_vec())
+}
+
+/// Every (MC, KC) candidate the autotuner may emit is bitwise-identical
+/// to the default blocking on every backend × precision — the guarantee
+/// that makes installing a tuning table numerically free.
+#[test]
+fn any_tuner_candidate_blocks_are_bitwise_identical_to_defaults() {
+    check("tuner-candidates-bitwise", &ShapeGen, default_cases() / 4, |c| {
+        let (a, b, bt) = operands(&c);
+        let dfl = tune::Blocks::default_blocks();
+        let reference = [
+            outputs(&Blocked::with_blocks(2, dfl.mc, dfl.kc), &a, &b, &bt),
+            outputs(&Simd::with_blocks(2, Precision::F32, dfl.mc, dfl.kc),
+                    &a, &b, &bt),
+            outputs(&Simd::with_blocks(2, Precision::Mixed, dfl.mc, dfl.kc),
+                    &a, &b, &bt),
+        ];
+        for cand in tune::default_candidates() {
+            let got = [
+                outputs(&Blocked::with_blocks(2, cand.mc, cand.kc),
+                        &a, &b, &bt),
+                outputs(&Simd::with_blocks(2, Precision::F32, cand.mc,
+                                           cand.kc), &a, &b, &bt),
+                outputs(&Simd::with_blocks(2, Precision::Mixed, cand.mc,
+                                           cand.kc), &a, &b, &bt),
+            ];
+            for (which, (g, w)) in got.iter().zip(&reference).enumerate() {
+                if g != w {
+                    return Err(format!(
+                        "backend #{which} bits differ at blocks \
+                         {}x{}: {c:?}", cand.mc, cand.kc));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Installing a tuning table changes which blocks `Blocked::new` /
+/// `Simd::new` pick, but never the bits they produce.
+#[test]
+fn installed_tuning_table_never_changes_bits() {
+    let c = ShapeCase { ba: 2, m: 33, k: 21, n: 18, seed: 0xB175 };
+    let (a, b, bt) = operands(&c);
+    let backends: Vec<Box<dyn Backend>> = vec![
+        Box::new(Blocked::new(2)),
+        Box::new(Simd::new(2, Precision::F32)),
+        Box::new(Simd::new(2, Precision::Mixed)),
+    ];
+    let before: Vec<_> = backends.iter()
+        .map(|be| outputs(be.as_ref(), &a, &b, &bt))
+        .collect();
+
+    // remap exactly this problem class (both `nn` and `nt` reduce over
+    // the same k, so they share the key) to odd little blocks
+    let mut table = tune::TuningTable::default();
+    for precision in [Precision::F32, Precision::Mixed] {
+        table.insert(
+            tune::ProblemKey { m: c.m, k: c.k, n: c.n, precision },
+            tune::Blocks { mc: 5, kc: 3 });
+    }
+    tune::install(table);
+    let after: Vec<_> = backends.iter()
+        .map(|be| outputs(be.as_ref(), &a, &b, &bt))
+        .collect();
+    tune::uninstall();
+
+    assert_eq!(before, after,
+               "tuned block substitution must be bitwise invisible");
+}
+
+/// `tune_attention` output survives save → load exactly, end to end
+/// (the same invariant `ablation_blocks` asserts in CI).
+#[test]
+fn tuner_round_trips_through_json() {
+    let candidates = [tune::Blocks::default_blocks(),
+                      tune::Blocks { mc: 8, kc: 4 }];
+    let opts = Options { warmup_iters: 0, iters: 1 };
+    let (table, rows) = tune::tune_attention(
+        BackendKind::Blocked, 2, &[16], 1, 8, &candidates, opts)
+        .expect("tune_attention");
+    assert!(!table.is_empty(), "tuning produced no entries");
+    assert_eq!(table.len(), rows.len());
+    for r in &rows {
+        assert!(candidates.contains(&r.best),
+                "winner {:?} is not a candidate", r.best);
+        assert!(r.best_s > 0.0 && r.default_s > 0.0);
+    }
+
+    let path = format!("{}/spark-exec-pool-tune-{}.json",
+                       std::env::temp_dir().display(), std::process::id());
+    table.save(&path).expect("save");
+    let reloaded = tune::TuningTable::load(&path).expect("load");
+    std::fs::remove_file(&path).ok();
+    assert_eq!(reloaded, table, "JSON round-trip must preserve the table");
+}

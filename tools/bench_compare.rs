@@ -1,0 +1,297 @@
+//! `bench_compare` — the CI bench-trajectory gate.
+//!
+//! Re-runs the host MHA-Forward backend sweep at the shape pinned in the
+//! committed baseline (`BENCH_6.json`) and compares the *scalar-relative
+//! speedups* of the parallel backend families (`blocked*`, `simd*`)
+//! against the baseline's.  Absolute wall-clock varies wildly across CI
+//! machines, so it is never gated; the speedup of a parallel backend
+//! over the scalar reference *on the same machine in the same process*
+//! is the machine-portable trajectory signal.  A family whose speedup
+//! falls more than `--tolerance` (default 0.25, i.e. 25%) below the
+//! baseline fails the gate with a non-zero exit.
+//!
+//! The gate always runs with the default (MC, KC) blocks — it installs
+//! no tuning table — so baseline and fresh runs measure the same
+//! configuration.  Mixed-precision and streamed variants are excluded
+//! from the family aggregate: they answer accuracy/dataflow questions,
+//! not the pool-throughput question this gate watches.
+//!
+//! Re-baselining after an intentional perf change:
+//!
+//! ```text
+//! cargo run --release --bin bench_compare -- --update
+//! ```
+//!
+//! rewrites `BENCH_6.json` in place from a fresh sweep (review the diff
+//! like any other code change).
+
+use std::process::ExitCode;
+
+use anyhow::{anyhow, bail, Context, Result};
+use sparkattention::bench::Options;
+use sparkattention::cli::Command;
+use sparkattention::coordinator::harness::HarnessOptions;
+use sparkattention::coordinator::host_backend_report;
+use sparkattention::exec::ExecOptions;
+use sparkattention::jsonio::{self, Value};
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::FAILURE,
+        Err(e) => {
+            eprintln!("bench_compare: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run() -> Result<bool> {
+    let cmd = Command::new(
+        "bench_compare",
+        "gate scalar-relative backend speedups against a committed baseline")
+        .flag("baseline", "baseline JSON (schema 1, see BENCH_6.json)",
+              Some("BENCH_6.json"))
+        .flag("tolerance",
+              "allowed fractional speedup drop before failing (0.25 = 25%)",
+              Some("0.25"))
+        .flag("threads", "override the baseline's worker-thread count", None)
+        .switch("update", "re-measure and rewrite the baseline in place");
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let p = cmd.parse(&args)?;
+    let path = p.get("baseline").expect("has default").to_string();
+    let tolerance = p.get_f64("tolerance")?.expect("has default");
+    if !(0.0..1.0).contains(&tolerance) {
+        bail!("--tolerance must be in [0, 1), got {tolerance}");
+    }
+
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading baseline {path}"))?;
+    let base = jsonio::parse(&text)
+        .with_context(|| format!("parsing baseline {path}"))?;
+    let schema = base.get("schema").and_then(Value::as_usize);
+    if schema != Some(1) {
+        bail!("{path}: unsupported schema {schema:?} (expected 1)");
+    }
+
+    // Pinned problem shape + iteration policy from the baseline, so every
+    // run measures the same work.
+    let shape = base.get("shape")
+        .ok_or_else(|| anyhow!("{path}: missing \"shape\""))?;
+    let field = |key: &str| {
+        shape.get(key).and_then(Value::as_usize)
+            .ok_or_else(|| anyhow!("{path}: shape.{key} must be an integer"))
+    };
+    let ns: Vec<usize> = shape.get("ns").and_then(Value::as_arr)
+        .ok_or_else(|| anyhow!("{path}: shape.ns must be an array"))?
+        .iter().map(|v| v.as_usize()
+            .ok_or_else(|| anyhow!("{path}: shape.ns entries must be \
+                                    integers")))
+        .collect::<Result<_>>()?;
+    let (bh, d) = (field("bh")?, field("d")?);
+    let mut threads = field("threads")?;
+    if let Some(t) = p.get_usize("threads")? {
+        threads = t;
+    }
+    let bench = base.get("bench")
+        .ok_or_else(|| anyhow!("{path}: missing \"bench\""))?;
+    let iters = bench.get("iters").and_then(Value::as_usize)
+        .ok_or_else(|| anyhow!("{path}: bench.iters must be an integer"))?;
+    let warmup = bench.get("warmup").and_then(Value::as_usize)
+        .ok_or_else(|| anyhow!("{path}: bench.warmup must be an integer"))?;
+
+    let opts = HarnessOptions {
+        bench: Options { warmup_iters: warmup, iters },
+        exec: ExecOptions { threads, ..ExecOptions::default() },
+        ..HarnessOptions::default()
+    };
+    println!("bench_compare: sweeping ns={ns:?} bh={bh} d={d} \
+              threads={threads} (warmup {warmup}, iters {iters})");
+    let fresh = host_backend_report(&ns, bh, d, false, opts)
+        .context("running the host backend sweep")?;
+    let fresh_json = fresh.to_json();
+
+    if p.switch("update") {
+        let mut wrapper = match base {
+            Value::Obj(o) => o,
+            _ => bail!("{path}: baseline must be a JSON object"),
+        };
+        wrapper.insert("report".to_string(), fresh_json);
+        let mut out = String::new();
+        write_pretty(&mut out, &Value::Obj(wrapper), 0);
+        out.push('\n');
+        std::fs::write(&path, out)
+            .with_context(|| format!("rewriting baseline {path}"))?;
+        println!("bench_compare: baseline {path} updated — commit the diff \
+                  to re-baseline");
+        return Ok(true);
+    }
+
+    let base_rows = report_rows(&base, &path)?;
+    let fresh_rows = report_rows_owned(&fresh_json)?;
+    let mut ok = true;
+    println!("{:<10} {:>14} {:>14} {:>8}  verdict", "family",
+             "baseline_sp", "current_sp", "ratio");
+    for family in ["blocked", "simd"] {
+        let (bx, bsp) = family_speedup(base_rows, family).ok_or_else(
+            || anyhow!("{path}: no usable {family} rows in baseline"))?;
+        let (fx, fsp) = family_speedup(&fresh_rows, family).ok_or_else(
+            || anyhow!("fresh sweep produced no usable {family} rows"))?;
+        let ratio = fsp / bsp;
+        let pass = ratio >= 1.0 - tolerance;
+        println!("{family:<10} {:>11.3}@{bx} {:>11.3}@{fx} {ratio:>8.3}  {}",
+                 bsp, fsp, if pass { "ok" } else { "REGRESSED" });
+        ok &= pass;
+    }
+    if ok {
+        println!("bench_compare: PASS (tolerance {:.0}%)",
+                 tolerance * 100.0);
+    } else {
+        println!("bench_compare: REGRESSED — a backend family lost more \
+                  than {:.0}% of its scalar-relative speedup vs {path}.\n\
+                  If intentional, re-baseline with `cargo run --release \
+                  --bin bench_compare -- --update` and commit the diff.",
+                 tolerance * 100.0);
+    }
+    Ok(ok)
+}
+
+/// The `report.rows` array of a baseline wrapper, with loud errors.
+fn report_rows<'a>(wrapper: &'a Value, path: &str) -> Result<&'a [Value]> {
+    wrapper.get("report").and_then(|r| r.get("rows"))
+        .and_then(Value::as_arr)
+        .ok_or_else(|| anyhow!("{path}: missing report.rows"))
+}
+
+/// Same, for the freshly generated report JSON (owned by the caller).
+fn report_rows_owned(report: &Value) -> Result<&[Value]> {
+    report.get("rows").and_then(Value::as_arr)
+        .ok_or_else(|| anyhow!("fresh report has no rows"))
+}
+
+/// Scalar-relative speedup of a backend family at the largest sequence
+/// length where both the family and the scalar reference have `ok` rows:
+/// `mean(scalar mean_s) / mean(family mean_s)` at that `x`.
+///
+/// Family membership: `variant` starts with the family name and is
+/// neither a `_stream` nor a `_mixed` variant.
+fn family_speedup(rows: &[Value], family: &str) -> Option<(usize, f64)> {
+    let in_family = |v: &Value| {
+        let name = v.get("variant")?.as_str()?;
+        let ok = v.get("status")?.as_str()? == "ok"
+            && name.starts_with(family)
+            && !name.contains("stream")
+            && !name.contains("mixed");
+        ok.then_some(())
+    };
+    let is_scalar = |v: &Value| {
+        (v.get("variant")?.as_str()? == "scalar"
+         && v.get("status")?.as_str()? == "ok").then_some(())
+    };
+    let mean_at = |x: usize, pick: &dyn Fn(&Value) -> Option<()>| {
+        let ms: Vec<f64> = rows.iter()
+            .filter(|v| v.get("x").and_then(Value::as_usize) == Some(x)
+                    && pick(v).is_some())
+            .filter_map(|v| v.get("mean_s").and_then(Value::as_f64))
+            .collect();
+        if ms.is_empty() {
+            None
+        } else {
+            Some(ms.iter().sum::<f64>() / ms.len() as f64)
+        }
+    };
+    let x = rows.iter()
+        .filter(|v| in_family(v).is_some())
+        .filter_map(|v| v.get("x").and_then(Value::as_usize))
+        .filter(|&x| mean_at(x, &is_scalar).is_some())
+        .max()?;
+    let scalar = mean_at(x, &is_scalar)?;
+    let fam = mean_at(x, &in_family)?;
+    if fam > 0.0 {
+        Some((x, scalar / fam))
+    } else {
+        None
+    }
+}
+
+// ---- pretty printer (diff-friendly committed baselines) -----------------
+
+/// True for values printed inline (no structural children).
+fn scalar(v: &Value) -> bool {
+    !matches!(v, Value::Arr(_) | Value::Obj(_))
+}
+
+/// One value, compact but with spaces (`{"a": 1, "b": 2}`).
+fn write_inline(out: &mut String, v: &Value) {
+    match v {
+        Value::Arr(a) => {
+            out.push('[');
+            for (i, e) in a.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(", ");
+                }
+                write_inline(out, e);
+            }
+            out.push(']');
+        }
+        Value::Obj(o) => {
+            out.push('{');
+            for (i, (k, e)) in o.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(", ");
+                }
+                out.push_str(&jsonio::to_string(&jsonio::s(k.clone())));
+                out.push_str(": ");
+                write_inline(out, e);
+            }
+            out.push('}');
+        }
+        _ => out.push_str(&jsonio::to_string(v)),
+    }
+}
+
+/// Indented rendering: containers whose children are all scalar (bench
+/// rows, the `ns` list) stay on one line; everything else nests.
+fn write_pretty(out: &mut String, v: &Value, indent: usize) {
+    let pad = "  ".repeat(indent + 1);
+    match v {
+        Value::Arr(a) if !a.is_empty() && !a.iter().all(scalar) => {
+            out.push_str("[\n");
+            for (i, e) in a.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(",\n");
+                }
+                out.push_str(&pad);
+                let flat = match e {
+                    Value::Obj(o) => o.values().all(scalar),
+                    Value::Arr(x) => x.iter().all(scalar),
+                    _ => true,
+                };
+                if flat {
+                    write_inline(out, e);
+                } else {
+                    write_pretty(out, e, indent + 1);
+                }
+            }
+            out.push('\n');
+            out.push_str(&"  ".repeat(indent));
+            out.push(']');
+        }
+        Value::Obj(o) if !o.is_empty() && !o.values().all(scalar) => {
+            out.push_str("{\n");
+            for (i, (k, e)) in o.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(",\n");
+                }
+                out.push_str(&pad);
+                out.push_str(&jsonio::to_string(&jsonio::s(k.clone())));
+                out.push_str(": ");
+                write_pretty(out, e, indent + 1);
+            }
+            out.push('\n');
+            out.push_str(&"  ".repeat(indent));
+            out.push('}');
+        }
+        _ => write_inline(out, v),
+    }
+}
