@@ -1,0 +1,541 @@
+//! `spark check` — static analysis of the crate's own sources.
+//!
+//! The repo's correctness story rests on contracts a compiler cannot
+//! see: every backend must be bitwise-deterministic across thread
+//! counts, `exec::run_pool` is sound only because tasks write disjoint
+//! ranges, FMA is confined to the mixed-precision kernels, and every
+//! `unsafe` site carries its justification.  This module turns those
+//! contracts from reviewer lore into named, individually waivable
+//! rules enforced over the crate's sources — dependency-free, built on
+//! the lightweight token [`scanner`] rather than a full parser.
+//!
+//! The rule set lives in [`RULES`]; the semantics of each rule, the
+//! waiver grammar, and the companion dynamic check (the pool's
+//! write-set race detector) are documented in DESIGN.md §7.
+//!
+//! **Waivers.**  A finding is suppressed by a comment on the same line
+//! or the line directly above:
+//!
+//! ```text
+//! // spark-check: allow(det-hash): why this site is exempt
+//! ```
+//!
+//! The rule id must exist and the reason must be non-empty; a
+//! malformed waiver is itself a finding (`waiver-syntax`) and waives
+//! nothing, so a typo'd suppression fails the build instead of
+//! silently widening it.
+//!
+//! Entry points: [`check_source`] checks one file (what the fixture
+//! tests drive); [`check_tree`] walks the repository (what the
+//! `spark check` subcommand and the `spark_check` CI bin drive).
+
+pub mod scanner;
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use self::scanner::{has_token, scan, Line};
+
+/// Static description of one rule, for `spark check --list-rules` and
+/// the DESIGN.md invariant table.
+#[derive(Debug, Clone, Copy)]
+pub struct RuleInfo {
+    /// Stable kebab-case identifier — the name used in waivers.
+    pub id: &'static str,
+    /// One-line summary of the invariant the rule enforces.
+    pub summary: &'static str,
+}
+
+/// The rule set, in reporting order.
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: "unsafe-safety",
+        summary: "every `unsafe` site carries a SAFETY: (or `# Safety`) \
+                  comment",
+    },
+    RuleInfo {
+        id: "feature-gate",
+        summary: "files with #[target_feature] kernels must probe \
+                  is_x86_feature_detected!",
+    },
+    RuleInfo {
+        id: "det-hash",
+        summary: "no HashMap/HashSet anywhere — iteration order is \
+                  nondeterministic; use BTreeMap/BTreeSet",
+    },
+    RuleInfo {
+        id: "det-instant",
+        summary: "no wall-clock reads (Instant/SystemTime) in \
+                  result-affecting modules (exec, attention, tensor)",
+    },
+    RuleInfo {
+        id: "det-thread-id",
+        summary: "no thread-identity dependence in result-affecting \
+                  modules (exec, attention, tensor)",
+    },
+    RuleInfo {
+        id: "fma-confinement",
+        summary: "mul_add / FMA intrinsics only in the mixed-precision \
+                  SIMD kernels (exec/simd.rs)",
+    },
+    RuleInfo {
+        id: "allow-justify",
+        summary: "#[allow(...)] requires a justification comment",
+    },
+    RuleInfo {
+        id: "waiver-syntax",
+        summary: "spark-check waivers must name a known rule and give \
+                  a reason (never waivable itself)",
+    },
+];
+
+/// One rule violation (or malformed waiver).
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Path of the offending file, as labelled by the caller.
+    pub file: String,
+    /// 1-based source line.
+    pub line: usize,
+    /// Id of the rule that fired — one of [`RULES`].
+    pub rule: &'static str,
+    /// Human-readable description of the violation.
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file, self.line, self.rule, self.message
+        )
+    }
+}
+
+/// Result of checking a single source file.
+#[derive(Debug, Default)]
+pub struct SourceCheck {
+    /// Findings that survived waivers, in line order.
+    pub findings: Vec<Finding>,
+    /// Number of findings suppressed by well-formed waivers.
+    pub waived: usize,
+}
+
+/// Result of checking a whole source tree.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// All surviving findings, ordered by file then line.
+    pub findings: Vec<Finding>,
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+    /// Total findings suppressed by waivers across the tree.
+    pub waived: usize,
+}
+
+/// The comment prefix that opens a waiver.
+const WAIVER_TAG: &str = "spark-check: allow(";
+
+/// Comment markers that satisfy the `unsafe-safety` rule: the in-body
+/// convention and the rustdoc section heading used on `unsafe fn`s.
+const SAFETY_MARKS: [&str; 2] = ["SAFETY:", "# Safety"];
+
+/// Whether `id` names a rule in [`RULES`].
+fn known_rule(id: &str) -> bool {
+    RULES.iter().any(|r| r.id == id)
+}
+
+/// The `&'static str` id object for a rule name (panics on unknown
+/// ids — callers validate with [`known_rule`] first).
+fn rule_id(id: &str) -> &'static str {
+    RULES
+        .iter()
+        .find(|r| r.id == id)
+        .map(|r| r.id)
+        .expect("rule_id called with unknown rule")
+}
+
+/// Normalize a file label for path-scoped rules: forward slashes and
+/// a leading `/` so `contains("/exec/")` works for relative labels.
+fn normalize(label: &str) -> String {
+    let mut p = label.replace('\\', "/");
+    if !p.starts_with('/') {
+        p.insert(0, '/');
+    }
+    p
+}
+
+/// Modules whose code feeds result bytes.  Nondeterminism here breaks
+/// the bitwise contract (DESIGN.md §3); elsewhere (bench, logging,
+/// coordinator) wall clocks and thread identities are legitimate.
+fn result_affecting(norm: &str) -> bool {
+    ["/exec/", "/attention/", "/tensor/"]
+        .iter()
+        .any(|m| norm.contains(m))
+}
+
+/// Files allowed to use fused multiply-add: the SIMD kernel module,
+/// whose mixed-precision path is *defined* to fuse.  Anywhere else an
+/// FMA silently changes f32 rounding and breaks Scalar equivalence.
+fn fma_allowed(norm: &str) -> bool {
+    norm.ends_with("/exec/simd.rs")
+}
+
+/// Whether the comments attached to line `idx` (same line, or a run of
+/// comment/attribute lines directly above) satisfy `hit`.
+fn attached_comment(
+    lines: &[Line],
+    idx: usize,
+    hit: impl Fn(&Line) -> bool,
+) -> bool {
+    if hit(&lines[idx]) {
+        return true;
+    }
+    for l in lines[..idx].iter().rev() {
+        let code = l.code.trim();
+        let attr = code.starts_with("#[") || code.starts_with("#!");
+        if !code.is_empty() && !attr {
+            // A real code line ends the attached block.
+            return false;
+        }
+        if hit(l) {
+            return true;
+        }
+        if code.is_empty() && l.comment.is_empty() && l.strings.is_empty()
+        {
+            // A fully blank line detaches the comment above it.
+            return false;
+        }
+    }
+    false
+}
+
+/// Whether an `unsafe` on line `idx` is documented: a SAFETY: comment
+/// or a rustdoc `# Safety` section on the same line or directly above
+/// (attributes and doc lines may sit in between).
+fn safety_documented(lines: &[Line], idx: usize) -> bool {
+    attached_comment(lines, idx, |l| {
+        SAFETY_MARKS.iter().any(|m| l.comment.contains(m))
+    })
+}
+
+/// Whether an allow-attribute on line `idx` has any comment attached —
+/// the rule only demands that *some* justification exists.
+fn allow_justified(lines: &[Line], idx: usize) -> bool {
+    attached_comment(lines, idx, |l| !l.comment.trim().is_empty())
+}
+
+/// Parse a waiver out of a comment.  `None` when the comment holds no
+/// waiver tag; `Some(Err(why))` for a malformed waiver; `Some(Ok((rule,
+/// reason)))` for a well-formed one.
+fn parse_waiver(comment: &str) -> Option<Result<(String, String), String>>
+{
+    let at = comment.find(WAIVER_TAG)?;
+    let rest = &comment[at + WAIVER_TAG.len()..];
+    let close = match rest.find(')') {
+        Some(c) => c,
+        None => {
+            return Some(Err("unclosed rule name".to_string()));
+        }
+    };
+    let rule = rest[..close].trim().to_string();
+    if rule == "waiver-syntax" {
+        return Some(Err("the waiver-syntax rule cannot be waived"
+            .to_string()));
+    }
+    if !known_rule(&rule) {
+        return Some(Err(format!("unknown rule '{rule}'")));
+    }
+    let reason = rest[close + 1..]
+        .trim_start_matches(|c: char| {
+            c == ':' || c == '-' || c.is_whitespace()
+        })
+        .trim()
+        .to_string();
+    if reason.is_empty() {
+        return Some(Err(format!(
+            "waiver for '{rule}' gives no reason"
+        )));
+    }
+    Some(Ok((rule, reason)))
+}
+
+/// Check one source file.  `label` is the path used in findings and in
+/// path-scoped rules; `text` is the file contents.
+pub fn check_source(label: &str, text: &str) -> SourceCheck {
+    let lines = scan(text);
+    let norm = normalize(label);
+    let det = result_affecting(&norm);
+    let fma_ok = fma_allowed(&norm);
+    let probed = lines
+        .iter()
+        .any(|l| has_token(&l.code, "is_x86_feature_detected"));
+
+    let mut raw: Vec<Finding> = Vec::new();
+    // Well-formed waivers as (line, rule-id) pairs; each suppresses
+    // findings of that rule on its own line or the line below.
+    let mut waivers: Vec<(usize, String)> = Vec::new();
+
+    let mut push = |raw: &mut Vec<Finding>,
+                    n: usize,
+                    rule: &str,
+                    msg: String| {
+        raw.push(Finding {
+            file: label.to_string(),
+            line: n,
+            rule: rule_id(rule),
+            message: msg,
+        });
+    };
+
+    for (idx, l) in lines.iter().enumerate() {
+        let n = idx + 1;
+        match parse_waiver(&l.comment) {
+            Some(Ok((rule, _reason))) => waivers.push((n, rule)),
+            Some(Err(why)) => push(
+                &mut raw,
+                n,
+                "waiver-syntax",
+                format!("malformed waiver: {why}"),
+            ),
+            None => {}
+        }
+
+        let code = l.code.as_str();
+        if has_token(code, "unsafe") && !safety_documented(&lines, idx) {
+            push(
+                &mut raw,
+                n,
+                "unsafe-safety",
+                "`unsafe` without a SAFETY: comment on the same line \
+                 or directly above"
+                    .to_string(),
+            );
+        }
+        if has_token(code, "target_feature") && !probed {
+            push(
+                &mut raw,
+                n,
+                "feature-gate",
+                "#[target_feature] in a file that never calls \
+                 is_x86_feature_detected!"
+                    .to_string(),
+            );
+        }
+        if has_token(code, "HashMap") || has_token(code, "HashSet") {
+            push(
+                &mut raw,
+                n,
+                "det-hash",
+                "hash-map iteration order is nondeterministic; use \
+                 BTreeMap/BTreeSet"
+                    .to_string(),
+            );
+        }
+        if det
+            && (has_token(code, "Instant")
+                || has_token(code, "SystemTime"))
+        {
+            push(
+                &mut raw,
+                n,
+                "det-instant",
+                "wall-clock read in a result-affecting module"
+                    .to_string(),
+            );
+        }
+        if det
+            && (has_token(code, "ThreadId")
+                || code.contains("thread::current"))
+        {
+            push(
+                &mut raw,
+                n,
+                "det-thread-id",
+                "thread-identity dependence in a result-affecting \
+                 module"
+                    .to_string(),
+            );
+        }
+        if (has_token(code, "mul_add") || code.contains("fmadd"))
+            && !fma_ok
+        {
+            push(
+                &mut raw,
+                n,
+                "fma-confinement",
+                "FMA outside exec/simd.rs changes f32 rounding and \
+                 breaks bitwise backend equivalence"
+                    .to_string(),
+            );
+        }
+        if (code.contains("#[allow(") || code.contains("#![allow("))
+            && !allow_justified(&lines, idx)
+        {
+            push(
+                &mut raw,
+                n,
+                "allow-justify",
+                "#[allow(...)] without a justification comment"
+                    .to_string(),
+            );
+        }
+    }
+
+    let mut out = SourceCheck::default();
+    for f in raw {
+        let waived = f.rule != "waiver-syntax"
+            && waivers.iter().any(|(ln, rule)| {
+                rule == f.rule && (*ln == f.line || ln + 1 == f.line)
+            });
+        if waived {
+            out.waived += 1;
+        } else {
+            out.findings.push(f);
+        }
+    }
+    out.findings.sort_by_key(|f| (f.line, f.rule));
+    out
+}
+
+/// Subtrees of the repo that hold first-party Rust sources.  The
+/// vendored shims under `rust/vendor/` are third-party API stand-ins
+/// and are deliberately out of scope.
+const SCAN_ROOTS: &[&str] =
+    &["rust/src", "rust/benches", "rust/tests", "examples", "tools"];
+
+/// Recursively collect `.rs` files under `dir`.
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in fs::read_dir(dir)
+        .with_context(|| format!("listing {}", dir.display()))?
+    {
+        let path = entry
+            .with_context(|| format!("reading entry in {}", dir.display()))?
+            .path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if matches!(path.extension(), Some(e) if e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Check every first-party `.rs` file under `root` (the repository
+/// checkout).  Files are visited in sorted path order so reports are
+/// stable; labels in findings are root-relative.
+pub fn check_tree(root: &Path) -> Result<Report> {
+    let mut files = Vec::new();
+    for sub in SCAN_ROOTS {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            collect_rs(&dir, &mut files)?;
+        }
+    }
+    if files.is_empty() {
+        bail!(
+            "no .rs files found under {} — is --root the repo checkout?",
+            root.display()
+        );
+    }
+    files.sort();
+
+    let mut report = Report::default();
+    for path in &files {
+        let text = fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let label = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let checked = check_source(&label, &text);
+        report.files += 1;
+        report.waived += checked.waived;
+        report.findings.extend(checked.findings);
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_hit(label: &str, src: &str) -> Vec<&'static str> {
+        let mut ids: Vec<&'static str> = check_source(label, src)
+            .findings
+            .iter()
+            .map(|f| f.rule)
+            .collect();
+        ids.sort();
+        ids.dedup();
+        ids
+    }
+
+    #[test]
+    fn unsafe_requires_safety_comment() {
+        let bad = "fn f(p: *const f32) -> f32 {\n\
+                   \x20   unsafe { *p }\n}\n";
+        assert_eq!(rules_hit("rust/src/exec/x.rs", bad),
+                   vec!["unsafe-safety"]);
+        let good = "fn f(p: *const f32) -> f32 {\n\
+                    \x20   // SAFETY: caller guarantees p is valid.\n\
+                    \x20   unsafe { *p }\n}\n";
+        assert!(rules_hit("rust/src/exec/x.rs", good).is_empty());
+    }
+
+    #[test]
+    fn safety_comment_walks_past_attributes_and_docs() {
+        let src = "/// Kernel.\n\
+                   ///\n\
+                   /// # Safety\n\
+                   /// Caller upholds the length contract.\n\
+                   #[inline]\n\
+                   pub unsafe fn k() {}\n\
+                   fn probe() { std::is_x86_feature_detected!(\"avx2\"); }\n";
+        assert!(rules_hit("rust/src/exec/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn waivers_suppress_and_malformed_waivers_report() {
+        let waived = "// spark-check: allow(det-hash): fixture only\n\
+                      use std::collections::HashMap;\n";
+        let c = check_source("rust/src/util.rs", waived);
+        assert!(c.findings.is_empty());
+        assert_eq!(c.waived, 1);
+
+        let reasonless = "// spark-check: allow(det-hash)\n\
+                          use std::collections::HashMap;\n";
+        assert_eq!(rules_hit("rust/src/util.rs", reasonless),
+                   vec!["det-hash", "waiver-syntax"]);
+
+        let unknown = "// spark-check: allow(no-such-rule): whatever\n";
+        assert_eq!(rules_hit("rust/src/util.rs", unknown),
+                   vec!["waiver-syntax"]);
+    }
+
+    #[test]
+    fn det_rules_scope_to_result_affecting_modules() {
+        let src = "use std::time::Instant;\n";
+        assert_eq!(rules_hit("rust/src/exec/x.rs", src),
+                   vec!["det-instant"]);
+        assert!(rules_hit("rust/src/bench/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn fma_confined_to_simd_module() {
+        let src = "let y = a.mul_add(b, c);\n";
+        assert_eq!(rules_hit("rust/src/tensor/mod.rs", src),
+                   vec!["fma-confinement"]);
+        assert!(rules_hit("rust/src/exec/simd.rs", src).is_empty());
+    }
+
+    #[test]
+    fn tokens_in_comments_and_strings_do_not_trip() {
+        let src = "// HashMap, Instant, unsafe — all commentary.\n\
+                   let s = \"HashMap unsafe mul_add\";\n";
+        assert!(rules_hit("rust/src/exec/x.rs", src).is_empty());
+    }
+}

@@ -1,0 +1,317 @@
+//! A lightweight line-oriented Rust token scanner for `spark check`.
+//!
+//! The analyzer's rules match on *identifier tokens in code*, so the
+//! scanner's whole job is to split each source line into three views:
+//! the code text with comments and literal contents removed, the
+//! comment text, and the string-literal contents.  That is enough to
+//! keep the rules exact — `Instantiate` in a doc comment never matches
+//! the `Instant` token, and a fixture's `"unsafe"` string never trips
+//! the unsafety rule — without pulling a real parser into the build.
+//!
+//! Handled Rust surface: line and doc comments, nested block comments,
+//! string literals with escapes, raw strings (`r"…"`, `r#"…"#`, any
+//! hash depth), and the char-literal vs lifetime ambiguity at `'`.
+//! Everything else passes through as code verbatim.
+
+/// One source line, split into its code, comment, and string parts.
+///
+/// `code` keeps the original text minus comments, with every string
+/// literal collapsed to `""` and every char literal to `''` — so token
+/// positions shift but token *identity* is preserved.  Block comments
+/// and multi-line strings contribute to every line they span.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct Line {
+    /// Code text (comments stripped, literal contents removed).
+    pub code: String,
+    /// Comment text on this line (line, doc, and block comments).
+    pub comment: String,
+    /// Contents of string literals that end or continue on this line.
+    pub strings: Vec<String>,
+}
+
+/// Whether `code` contains `word` as a whole identifier token — both
+/// neighbours must be non-identifier characters.  This is the exactness
+/// the determinism rules need (`Instant` must not match `Instantiate`).
+pub fn has_token(code: &str, word: &str) -> bool {
+    let ident = |b: u8| b.is_ascii_alphanumeric() || b == b'_';
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(word) {
+        let start = from + pos;
+        let end = start + word.len();
+        let left_ok = start == 0 || !ident(bytes[start - 1]);
+        let right_ok = end == bytes.len() || !ident(bytes[end]);
+        if left_ok && right_ok {
+            return true;
+        }
+        from = start + 1;
+    }
+    false
+}
+
+#[derive(Clone, Copy)]
+enum Mode {
+    /// Ordinary code.
+    Code,
+    /// Inside a `//` comment (ends at newline).
+    LineComment,
+    /// Inside a `/* … */` comment, tracking nesting depth.
+    Block(u32),
+    /// Inside a `"…"` string literal.
+    Str,
+    /// Inside a raw string, remembering its hash count.
+    RawStr(u32),
+}
+
+/// Split `text` into per-line code/comment/string views.  Lines are
+/// returned in order; `lines[i]` is source line `i + 1`.
+pub fn scan(text: &str) -> Vec<Line> {
+    let chars: Vec<char> = text.chars().collect();
+    let mut lines = Vec::new();
+    let mut cur = Line::default();
+    let mut lit = String::new();
+    let mut mode = Mode::Code;
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            match mode {
+                Mode::LineComment => mode = Mode::Code,
+                Mode::Str | Mode::RawStr(_) => {
+                    // multi-line literal: flush this line's fragment
+                    cur.strings.push(std::mem::take(&mut lit));
+                }
+                _ => {}
+            }
+            lines.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    mode = Mode::LineComment;
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    mode = Mode::Block(1);
+                    i += 2;
+                } else if c == '"' {
+                    mode = Mode::Str;
+                    cur.code.push_str("\"\"");
+                    i += 1;
+                } else if c == 'r' && !prev_is_ident(&cur.code) {
+                    match raw_str_hashes(&chars, i) {
+                        Some(hashes) => {
+                            mode = Mode::RawStr(hashes);
+                            cur.code.push_str("\"\"");
+                            // skip `r`, the hashes, the opening quote
+                            i += 2 + hashes as usize;
+                        }
+                        None => {
+                            cur.code.push(c);
+                            i += 1;
+                        }
+                    }
+                } else if c == '\'' {
+                    i = eat_quote(&chars, i, &mut cur.code);
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            Mode::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            Mode::Block(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    mode = Mode::Block(depth + 1);
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    mode = if depth == 1 {
+                        Mode::Code
+                    } else {
+                        Mode::Block(depth - 1)
+                    };
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    if chars.get(i + 1) == Some(&'\n') {
+                        // line-continuation escape: let the newline
+                        // branch handle the line break
+                        i += 1;
+                    } else {
+                        if let Some(&esc) = chars.get(i + 1) {
+                            lit.push(esc);
+                        }
+                        i += 2;
+                    }
+                } else if c == '"' {
+                    cur.strings.push(std::mem::take(&mut lit));
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    lit.push(c);
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                let h = hashes as usize;
+                let closed = c == '"'
+                    && (1..=h).all(|k| chars.get(i + k) == Some(&'#'));
+                if closed {
+                    cur.strings.push(std::mem::take(&mut lit));
+                    mode = Mode::Code;
+                    i += 1 + h;
+                } else {
+                    lit.push(c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !lit.is_empty() {
+        cur.strings.push(lit);
+    }
+    if !cur.code.is_empty() || !cur.comment.is_empty()
+        || !cur.strings.is_empty()
+    {
+        lines.push(cur);
+    }
+    lines
+}
+
+/// Hash count of a raw string opener at `chars[i] == 'r'` (`r"` → 0,
+/// `r#"` → 1, …), or `None` if this `r` starts no raw string.
+fn raw_str_hashes(chars: &[char], i: usize) -> Option<u32> {
+    let mut hashes = 0u32;
+    let mut j = i + 1;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some(hashes)
+    } else {
+        None
+    }
+}
+
+/// Whether the last code character could end an identifier — used to
+/// tell a raw-string `r"` from an identifier that merely ends in `r`.
+fn prev_is_ident(code: &str) -> bool {
+    matches!(code.chars().next_back(),
+             Some(c) if c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// Consume the `'` at `chars[i]`: a char literal (escaped or plain) is
+/// skipped and collapsed to `''` in `code`; a lifetime keeps its quote.
+/// Returns the index of the next unconsumed character.
+fn eat_quote(chars: &[char], i: usize, code: &mut String) -> usize {
+    match chars.get(i + 1) {
+        // escaped char literal: skip the backslash and its payload,
+        // then scan to the closing quote
+        Some('\\') => {
+            code.push_str("''");
+            let mut j = i + 3;
+            while j < chars.len() && chars[j] != '\'' {
+                j += 1;
+            }
+            j + 1
+        }
+        // plain one-char literal `'x'`
+        Some(_) if chars.get(i + 2) == Some(&'\'') => {
+            code.push_str("''");
+            i + 3
+        }
+        // a lifetime (`'a`, `'static`, `'_`)
+        _ => {
+            code.push('\'');
+            i + 1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_are_split_from_code() {
+        let lines = scan("let x = 1; // HashMap here\n/* Instant */\n");
+        assert_eq!(lines[0].code.trim(), "let x = 1;");
+        assert!(lines[0].comment.contains("HashMap"));
+        assert!(!has_token(&lines[0].code, "HashMap"));
+        assert!(lines[1].code.trim().is_empty());
+        assert!(lines[1].comment.contains("Instant"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let lines = scan("a /* one /* two */ still */ b\n");
+        assert_eq!(lines[0].code.replace(' ', ""), "ab");
+        assert!(lines[0].comment.contains("two"));
+    }
+
+    #[test]
+    fn strings_are_extracted_not_matched() {
+        let lines = scan("probe(\"avx2\"); let s = \"unsafe\";\n");
+        assert_eq!(lines[0].strings, vec!["avx2", "unsafe"]);
+        assert!(!has_token(&lines[0].code, "unsafe"));
+        assert!(has_token(&lines[0].code, "probe"));
+    }
+
+    #[test]
+    fn raw_strings_and_escapes() {
+        let lines = scan("let a = r#\"x \"quoted\" y\"#;\nlet b = \
+                          \"esc \\\" done\";\n");
+        assert_eq!(lines[0].strings, vec!["x \"quoted\" y"]);
+        assert_eq!(lines[1].strings, vec!["esc \" done"]);
+        assert!(!has_token(&lines[0].code, "quoted"));
+    }
+
+    #[test]
+    fn multiline_strings_keep_line_numbers() {
+        let lines = scan("let s = \"first\nsecond\";\nlet t = 1;\n");
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[0].strings, vec!["first"]);
+        assert_eq!(lines[1].strings, vec!["second"]);
+        assert!(has_token(&lines[2].code, "t"));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let lines = scan("fn f<'a>(x: &'a str) -> char { '\\'' }\n\
+                          let c = '\"'; let d = 'z';\n");
+        // lifetimes survive as code, char literal payloads vanish
+        assert!(lines[0].code.contains("'a"));
+        assert!(!lines[1].code.contains('z'));
+        // the '"' char literal must not open a string
+        assert!(lines[1].strings.is_empty());
+        assert!(has_token(&lines[1].code, "d"));
+    }
+
+    #[test]
+    fn tokens_match_exactly() {
+        assert!(has_token("use std::time::Instant;", "Instant"));
+        assert!(!has_token("Instantiate the backend", "Instant"));
+        assert!(!has_token("let my_unsafe_flag = 1;", "unsafe"));
+        assert!(has_token("unsafe { ptr::read(p) }", "unsafe"));
+        assert!(has_token("a.mul_add(b, c)", "mul_add"));
+        assert!(!has_token("smul_add(b, c)", "mul_add"));
+    }
+
+    #[test]
+    fn identifier_ending_in_r_is_not_a_raw_string() {
+        let lines = scan("for r in xs { r(\"lit\"); }\n");
+        assert!(has_token(&lines[0].code, "for"));
+        assert_eq!(lines[0].strings, vec!["lit"]);
+    }
+}

@@ -120,6 +120,10 @@ fn finish_scores(s: &mut Tensor, lse: &mut [f32], p: AttnParams,
         let rows = SOFTMAX_ROWS_PER_TASK.min(total_rows - r0);
         let schunk = exec::carve(&mut srest, rows * nk);
         let lchunk = exec::carve(&mut lrest, rows);
+        exec::pool::declare_task_writes(&[
+            exec::pool::span(&*schunk),
+            exec::pool::span(&*lchunk),
+        ]);
         tasks.push(Box::new(move || {
             for (ri, (row, lse1)) in schunk.chunks_exact_mut(nk)
                 .zip(lchunk.iter_mut()).enumerate()
@@ -301,6 +305,10 @@ pub fn mha_forward_streaming(q: &Tensor, k: &Tensor, v: &Tensor,
             for iq in (0..n).step_by(bq) {
                 let otile = exec::carve(&mut orest, bq * d);
                 let ltile = exec::carve(&mut lrest, bq);
+                exec::pool::declare_task_writes(&[
+                    exec::pool::span(&*otile),
+                    exec::pool::span(&*ltile),
+                ]);
                 tasks.push(Box::new(move || {
                     streaming_fwd_tile(qd, kd, vd, otile, ltile, p,
                                        b, iq, bq, bk, n, d, mixed);

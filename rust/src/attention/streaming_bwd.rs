@@ -88,6 +88,9 @@ pub fn mha_backward_streaming(q: &Tensor, k: &Tensor, v: &Tensor,
         for b in 0..bh {
             for iq in (0..n).step_by(bq) {
                 let dq_tile = exec::carve(&mut dq_rest, bq * d);
+                exec::pool::declare_task_writes(&[
+                    exec::pool::span(&*dq_tile),
+                ]);
                 tasks.push(Box::new(move || {
                     dq_tile_task(qd, kd, vd, dod, ld, dl, dq_tile, p,
                                  b, iq, bq, bk, n, d, mixed);
@@ -100,6 +103,10 @@ pub fn mha_backward_streaming(q: &Tensor, k: &Tensor, v: &Tensor,
             for ik in (0..n).step_by(bk) {
                 let dk_tile = exec::carve(&mut dk_rest, bk * d);
                 let dv_tile = exec::carve(&mut dv_rest, bk * d);
+                exec::pool::declare_task_writes(&[
+                    exec::pool::span(&*dk_tile),
+                    exec::pool::span(&*dv_tile),
+                ]);
                 tasks.push(Box::new(move || {
                     dkv_tile_task(qd, kd, vd, dod, ld, dl, dk_tile,
                                   dv_tile, p, b, ik, bq, bk, n, d, mixed);

@@ -81,15 +81,18 @@ impl Document {
             }
             if let Some(name) = line.strip_prefix('[') {
                 let name = name.strip_suffix(']').ok_or_else(|| anyhow!(
-                    "line {}: unterminated section header", lineno + 1))?;
+                    "line {}: unterminated section header {line:?}",
+                    lineno + 1))?;
                 section = name.trim().to_string();
                 doc.sections.entry(section.clone()).or_default();
                 continue;
             }
             let (key, value) = line.split_once('=').ok_or_else(|| anyhow!(
-                "line {}: expected `key = value`, got {line:?}", lineno + 1))?;
+                "line {} ({}): expected `key = value`, got {line:?}",
+                lineno + 1, section_label(&section)))?;
             let value = parse_value(value.trim()).with_context(|| format!(
-                "line {}: bad value for {}", lineno + 1, key.trim()))?;
+                "line {} ({}): bad value for key `{}`", lineno + 1,
+                section_label(&section), key.trim()))?;
             doc.sections.entry(section.clone()).or_default()
                 .insert(key.trim().to_string(), value);
         }
@@ -144,6 +147,16 @@ impl Document {
             Some(v) => v.as_bool().ok_or_else(
                 || anyhow!("[{sec}] {key} must be a bool")),
         }
+    }
+}
+
+/// Render a section name for diagnostics — the empty pre-header
+/// section reads as "top level" rather than "[]".
+fn section_label(section: &str) -> String {
+    if section.is_empty() {
+        "top level".to_string()
+    } else {
+        format!("in [{section}]")
     }
 }
 
@@ -547,5 +560,25 @@ threads = 4
         let doc = Document::parse("[train]\nsteps = \"many\"").unwrap();
         let err = TrainConfig::from_doc(&doc).unwrap_err().to_string();
         assert!(err.contains("steps"), "error should name the key: {err}");
+    }
+
+    #[test]
+    fn parse_errors_name_line_section_and_key() {
+        let err = Document::parse("[bench]\niters = @?!\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("line 2"), "line number missing: {err}");
+        assert!(err.contains("[bench]"), "section missing: {err}");
+        assert!(err.contains("`iters`"), "key missing: {err}");
+
+        let err = Document::parse("stray\n").unwrap_err().to_string();
+        assert!(err.contains("top level"),
+                "pre-header errors should say top level: {err}");
+
+        let err = Document::parse("[train]\nnot_an_assignment\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("[train]"), "section missing: {err}");
+        assert!(err.contains("key = value"), "hint missing: {err}");
     }
 }

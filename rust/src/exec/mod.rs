@@ -109,6 +109,7 @@ where
     let fr = &f;
     let mut tasks: Vec<Task<'_>> = Vec::new();
     for (i, c) in data.chunks_mut(chunk).enumerate() {
+        pool::declare_task_writes(&[pool::span(&*c)]);
         tasks.push(Box::new(move || fr(i, c)));
     }
     be.run_tasks(tasks);
@@ -144,6 +145,7 @@ impl Backend for Scalar {
     }
 
     fn run_tasks<'s>(&self, tasks: Vec<Task<'s>>) {
+        pool::verify_declared_disjoint();
         for task in tasks {
             task();
         }
@@ -280,6 +282,7 @@ pub fn run_pool<'s>(threads: usize, tasks: Vec<Task<'s>>) {
 /// against (`rust/tests/exec_pool.rs`).  Static round-robin assignment
 /// keeps the partition independent of timing.
 pub fn run_scoped<'s>(threads: usize, tasks: Vec<Task<'s>>) {
+    pool::verify_declared_disjoint();
     let t = threads.min(tasks.len()).max(1);
     if t == 1 {
         for task in tasks {
@@ -327,6 +330,7 @@ where
         for i0 in (0..m).step_by(mc.max(1)) {
             let rows = mc.min(m - i0);
             let tile = carve(&mut rest, rows * n);
+            pool::declare_task_writes(&[pool::span(&*tile)]);
             tasks.push(Box::new(move || f(bi, i0, rows, tile)));
         }
     }

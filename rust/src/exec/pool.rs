@@ -38,6 +38,17 @@
 //! so every borrow a task captures strictly outlives its execution.
 //! Workers hold only the `Arc<Job>`, never the caller's frame.
 //!
+//! ## Race detector
+//!
+//! Debug builds back the disjoint-writes contract with an executable
+//! check: task builders declare each task's output byte ranges
+//! ([`declare_task_writes`]), and every runner entry point
+//! ([`Pool::run`], `exec::run_scoped`, the inline `Scalar` path)
+//! drains the declarations and panics on any cross-task overlap
+//! ([`verify_declared_disjoint`]) before a single task executes.
+//! Release builds compile both hooks to nothing.  DESIGN.md §7
+//! documents the semantics alongside the static `spark check` rules.
+//!
 //! ## Panics
 //!
 //! A panicking task is caught on the worker, recorded, and re-thrown
@@ -163,7 +174,9 @@ impl Pool {
 
     /// Execute `tasks` over up to `threads` participants (the calling
     /// thread included) and return once **all** of them have finished.
-    /// Tasks must touch disjoint data (the [`Task`] contract).  The
+    /// Tasks must touch disjoint data (the [`Task`] contract); in
+    /// debug builds, write sets declared via [`declare_task_writes`]
+    /// are verified pairwise-disjoint before anything runs.  The
     /// first task panic, if any, is re-thrown here after the barrier.
     ///
     /// Re-entrant calls (a task submitting its own job) are safe: the
@@ -171,6 +184,7 @@ impl Pool {
     /// inner job itself via stealing, so progress never depends on a
     /// worker being free.
     pub fn run<'s>(&self, threads: usize, tasks: Vec<Task<'s>>) {
+        verify_declared_disjoint();
         let count = tasks.len();
         let t = threads.min(count).max(1);
         if t == 1 {
@@ -237,6 +251,121 @@ impl Default for Pool {
 pub fn global() -> &'static Pool {
     static POOL: Pool = Pool::new();
     &POOL
+}
+
+// ---------------------------------------------------------------------
+// Write-set race detector (debug builds only)
+//
+// The pool's lifetime erasure and its determinism story both rest on
+// one prose contract: tasks submitted to a single `run` call write
+// disjoint data.  The detector turns that contract into an executable
+// check.  Task builders call [`declare_task_writes`] once per task (in
+// push order, on the building thread) with the byte ranges the task
+// will write; every runner entry point calls
+// [`verify_declared_disjoint`], which drains the pending declarations
+// and panics if any two tasks' ranges overlap.  Release builds compile
+// both calls to nothing.
+// ---------------------------------------------------------------------
+
+/// Byte-address range `[start, end)` that one task will write.
+pub type WriteRange = (usize, usize);
+
+/// The byte range covered by `slice`, for [`declare_task_writes`].
+pub fn span<T>(slice: &[T]) -> WriteRange {
+    let start = slice.as_ptr() as usize;
+    (start, start + std::mem::size_of_val(slice))
+}
+
+#[cfg(debug_assertions)]
+mod racecheck {
+    use std::cell::RefCell;
+
+    use super::WriteRange;
+
+    thread_local! {
+        /// Write sets declared since the last verify: one entry per
+        /// task, in push order, on the thread that built the tasks.
+        static DECLARED: RefCell<Vec<Vec<WriteRange>>> =
+            RefCell::new(Vec::new());
+    }
+
+    pub fn declare(ranges: &[WriteRange]) {
+        let set: Vec<WriteRange> = ranges
+            .iter()
+            .copied()
+            .filter(|&(s, e)| e > s)
+            .collect();
+        DECLARED.with(|d| d.borrow_mut().push(set));
+    }
+
+    pub fn verify() {
+        // Drain first: a panic below must still leave the thread-local
+        // state clean for subsequent runs (tests rely on this).
+        let sets =
+            DECLARED.with(|d| std::mem::take(&mut *d.borrow_mut()));
+        if sets.len() < 2 {
+            return;
+        }
+        let mut flat: Vec<(usize, usize, usize)> = Vec::new();
+        for (task, set) in sets.iter().enumerate() {
+            for &(s, e) in set {
+                flat.push((s, e, task));
+            }
+        }
+        if flat.len() < 2 {
+            return;
+        }
+        flat.sort_unstable();
+        // Sweep in start order, tracking the interval with the largest
+        // end seen so far and which task owns it.  A range starting
+        // before that end overlaps it; same-task self-overlap is not a
+        // race and is ignored.
+        let mut max = flat[0];
+        for &(s, e, task) in &flat[1..] {
+            if s < max.1 && task != max.2 {
+                panic!(
+                    "exec pool race detector: tasks #{} and #{} declared \
+                     overlapping write ranges [{:#x}, {:#x}) vs \
+                     [{:#x}, {:#x}) — run_pool tasks must write \
+                     disjoint data",
+                    max.2, task, max.0, max.1, s, e
+                );
+            }
+            if e > max.1 {
+                max = (s, e, task);
+            }
+        }
+    }
+}
+
+#[cfg(not(debug_assertions))]
+mod racecheck {
+    use super::WriteRange;
+
+    #[inline(always)]
+    pub fn declare(_ranges: &[WriteRange]) {}
+
+    #[inline(always)]
+    pub fn verify() {}
+}
+
+/// Declare the write set of the task about to be pushed.  Call once
+/// per task, from the thread building the task list, with the byte
+/// ranges ([`span`]) the task will write; empty ranges are ignored.
+/// Debug builds record the set for [`verify_declared_disjoint`];
+/// release builds compile this to nothing.
+pub fn declare_task_writes(ranges: &[WriteRange]) {
+    racecheck::declare(ranges);
+}
+
+/// Drain the write sets declared on this thread since the last call
+/// and panic if any two tasks' ranges overlap.  Invoked at the entry
+/// of every task runner ([`Pool::run`], `exec::run_scoped`, and the
+/// inline `Scalar` path), so a declared racy task list never executes
+/// in a debug build.  A no-op in release builds, and when fewer than
+/// two tasks declared anything.
+pub fn verify_declared_disjoint() {
+    racecheck::verify();
 }
 
 #[cfg(test)]

@@ -387,6 +387,10 @@ mod avx {
         let n = acc.len().min(b.len());
         let av = _mm256_set1_ps(a);
         let mut i = 0;
+        // SAFETY: the unaligned loads/stores below touch lanes
+        // `i..i + 8` with `i + 8 <= n <= acc.len(), b.len()`, so every
+        // pointer offset stays inside both slices; the tail loop uses
+        // checked indexing.
         while i + 8 <= n {
             let bv = _mm256_loadu_ps(b.as_ptr().add(i));
             let ov = _mm256_loadu_ps(acc.as_ptr().add(i));
@@ -418,6 +422,10 @@ mod avx {
     #[target_feature(enable = "avx2", enable = "fma")]
     pub unsafe fn panel(accrow: &mut [f32], arow: &[f32], packb: &[f32],
                         fused: bool) {
+        // SAFETY: by the length contract, `accrow` holds exactly 8
+        // lanes (one vector load/store) and `packb` holds 8 lanes per
+        // `arow` element, so each `add(k * 8)` load reads lanes
+        // `k*8..k*8 + 8` inside `packb`.
         let mut acc = _mm256_loadu_ps(accrow.as_ptr());
         for (k, &a) in arow.iter().enumerate() {
             let av = _mm256_set1_ps(a);

@@ -26,6 +26,7 @@
 #![allow(clippy::many_single_char_names)]
 #![allow(clippy::manual_memcpy)]
 
+pub mod analysis;
 pub mod attention;
 pub mod bench;
 pub mod cli;

@@ -13,6 +13,7 @@
 //! spark io-report          §2.3 HBM traffic claim (E5)
 //! spark project            V100-projected Fig 10/11 at paper scale
 //! spark inspect-artifacts  manifest + compile stats
+//! spark check              static invariant analysis (DESIGN.md §7)
 //! ```
 
 use anyhow::{bail, Result};
@@ -49,7 +50,9 @@ fn top_usage() -> String {
          \x20 accuracy           §4.2.3 accuracy table (E3)\n\
          \x20 io-report          §2.3 HBM traffic model (E5)\n\
          \x20 project            V100-projected figures at paper scale\n\
-         \x20 inspect-artifacts  list artifacts + engine stats\n\n\
+         \x20 inspect-artifacts  list artifacts + engine stats\n\
+         \x20 check              static invariant analysis of the \
+         sources\n\n\
          run `spark <command> --help` for flags",
         sparkattention::VERSION)
 }
@@ -71,6 +74,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "io-report" => cmd_io_report(rest),
         "project" => cmd_project(rest),
         "inspect-artifacts" => cmd_inspect(rest),
+        "check" => cmd_check(rest),
         "--help" | "-h" | "help" => {
             println!("{}", top_usage());
             Ok(())
@@ -210,7 +214,7 @@ fn cmd_bench(args: &[String], fig: Figure) -> Result<()> {
                                    "Fig 12: encoder-forward latency"),
     };
     let p = cmd.parse(args)?;
-    let engine = Engine::new(p.get("artifacts").unwrap())?;
+    let engine = Engine::new(p.get("artifacts").unwrap_or("artifacts"))?;
     let opts = HarnessOptions {
         bench: Options {
             warmup_iters: p.get_usize("warmup")?.unwrap_or(1),
@@ -370,7 +374,7 @@ fn cmd_accuracy(args: &[String]) -> Result<()> {
         .flag("artifacts", "artifact directory", Some("artifacts"))
         .flag("json-out", "write JSON rows here", None);
     let p = cmd.parse(args)?;
-    let engine = Engine::new(p.get("artifacts").unwrap())?;
+    let engine = Engine::new(p.get("artifacts").unwrap_or("artifacts"))?;
     let rows = coordinator::accuracy_report(&engine)?;
     print!("{}", coordinator::harness::accuracy_table(&rows));
     if let Some(path) = p.get("json-out") {
@@ -443,12 +447,44 @@ fn cmd_project(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `spark check` — run the static invariant analyzer over the repo's
+/// own first-party sources (rules and waiver syntax: DESIGN.md §7).
+/// Prints every surviving finding and exits non-zero if any exist, so
+/// the command doubles as the local mirror of the CI `spark-check`
+/// job (`tools/spark_check.rs`).
+fn cmd_check(args: &[String]) -> Result<()> {
+    let cmd = Command::new("check",
+                           "static invariant analysis of the sources")
+        .flag("root", "repository checkout to scan", Some("."))
+        .switch("list-rules", "print the rule set and exit");
+    let p = cmd.parse(args)?;
+    if p.switch("list-rules") {
+        for r in sparkattention::analysis::RULES {
+            println!("{:<16} {}", r.id, r.summary);
+        }
+        return Ok(());
+    }
+    let root = std::path::PathBuf::from(p.get("root").unwrap_or("."));
+    let report = sparkattention::analysis::check_tree(&root)?;
+    for f in &report.findings {
+        println!("{f}");
+    }
+    println!("spark check: {} files scanned, {} findings, {} waived",
+             report.files, report.findings.len(), report.waived);
+    if !report.findings.is_empty() {
+        bail!("spark check: {} invariant violations (waive only with \
+               `// spark-check: allow(rule): reason`)",
+              report.findings.len());
+    }
+    Ok(())
+}
+
 fn cmd_inspect(args: &[String]) -> Result<()> {
     let cmd = Command::new("inspect-artifacts", "manifest summary")
         .flag("artifacts", "artifact directory", Some("artifacts"))
         .switch("compile-all", "compile every artifact and time it");
     let p = cmd.parse(args)?;
-    let engine = Engine::new(p.get("artifacts").unwrap())?;
+    let engine = Engine::new(p.get("artifacts").unwrap_or("artifacts"))?;
     println!("platform: {}", engine.platform());
     println!("artifacts: {}", engine.manifest().len());
     let mut by_kind = std::collections::BTreeMap::new();

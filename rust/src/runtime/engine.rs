@@ -7,7 +7,7 @@
 //! literal-encode → execute → literal-decode.
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::rc::Rc;
 use std::time::Instant;
 
@@ -41,7 +41,10 @@ pub struct EngineStats {
 pub struct Engine {
     client: PjRtClient,
     manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    // BTreeMap, not a hash map: iteration order (and thus any future
+    // warmup/eviction sweep) stays deterministic — the `det-hash`
+    // rule in `spark check` holds crate-wide.
+    cache: RefCell<BTreeMap<String, Rc<PjRtLoadedExecutable>>>,
     stats: RefCell<EngineStats>,
 }
 
@@ -53,7 +56,7 @@ impl Engine {
         Ok(Engine {
             client,
             manifest,
-            cache: RefCell::new(HashMap::new()),
+            cache: RefCell::new(BTreeMap::new()),
             stats: RefCell::new(EngineStats::default()),
         })
     }

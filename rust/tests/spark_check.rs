@@ -1,0 +1,318 @@
+//! Negative and end-to-end tests for PR 7's correctness tooling: the
+//! static invariant analyzer (`analysis`, driving `spark check`) and
+//! the exec pool's debug-build write-set race detector.
+//!
+//! Every rule fixture lives in a string literal, so scanning this file
+//! itself (the shipped-tree test below does) trips nothing.
+
+use std::path::Path;
+
+use sparkattention::analysis::{self, check_source, check_tree};
+// The race-detector half compiles only under debug_assertions.
+#[cfg(debug_assertions)]
+use sparkattention::attention;
+#[cfg(debug_assertions)]
+use sparkattention::exec::{self, pool, Backend, ExecOptions, Task};
+
+/// Sorted, deduplicated rule ids that fire on `src` labelled `label`.
+fn rules_hit(label: &str, src: &str) -> Vec<&'static str> {
+    let mut ids: Vec<&'static str> = check_source(label, src)
+        .findings
+        .iter()
+        .map(|f| f.rule)
+        .collect();
+    ids.sort();
+    ids.dedup();
+    ids
+}
+
+// ---------------------------------------------------------------------
+// Static rules: one seeded-violation fixture per rule
+// ---------------------------------------------------------------------
+
+#[test]
+fn rule_unsafe_safety_fires_and_clears() {
+    let bad = "fn f(p: *const f32) -> f32 { unsafe { *p } }\n";
+    assert_eq!(rules_hit("rust/src/exec/x.rs", bad),
+               vec!["unsafe-safety"]);
+
+    let good = "// SAFETY: p is valid for reads by the caller contract.\n\
+                fn f(p: *const f32) -> f32 { unsafe { *p } }\n";
+    assert!(rules_hit("rust/src/exec/x.rs", good).is_empty());
+}
+
+#[test]
+fn rule_feature_gate_fires_and_clears() {
+    let bad = "/// Kernel.\n\
+               ///\n\
+               /// # Safety\n\
+               /// Caller guarantees AVX2.\n\
+               #[target_feature(enable = \"avx2\")]\n\
+               pub unsafe fn k() {}\n";
+    assert_eq!(rules_hit("rust/src/exec/x.rs", bad),
+               vec!["feature-gate"]);
+
+    let good = format!(
+        "{bad}fn detect() -> bool {{ \
+         std::is_x86_feature_detected!(\"avx2\") }}\n");
+    assert!(rules_hit("rust/src/exec/x.rs", &good).is_empty());
+}
+
+#[test]
+fn rule_det_hash_fires_crate_wide() {
+    let bad = "use std::collections::HashMap;\n";
+    assert_eq!(rules_hit("rust/src/runtime/engine.rs", bad),
+               vec!["det-hash"]);
+    assert_eq!(rules_hit("rust/src/metrics/mod.rs", bad),
+               vec!["det-hash"]);
+    let set = "let s = std::collections::HashSet::new();\n";
+    assert_eq!(rules_hit("rust/src/metrics/mod.rs", set),
+               vec!["det-hash"]);
+}
+
+#[test]
+fn rule_det_instant_scopes_to_result_affecting_modules() {
+    let src = "use std::time::Instant;\n";
+    assert_eq!(rules_hit("rust/src/exec/foo.rs", src),
+               vec!["det-instant"]);
+    assert_eq!(rules_hit("rust/src/attention/foo.rs", src),
+               vec!["det-instant"]);
+    assert_eq!(rules_hit("rust/src/tensor/foo.rs", src),
+               vec!["det-instant"]);
+    // wall clocks are legitimate in the bench/runtime layers
+    assert!(rules_hit("rust/src/bench/mod.rs", src).is_empty());
+    assert!(rules_hit("rust/src/runtime/engine.rs", src).is_empty());
+}
+
+#[test]
+fn rule_det_thread_id_fires_in_exec() {
+    let src = "let id = std::thread::current().id();\n";
+    assert_eq!(rules_hit("rust/src/exec/foo.rs", src),
+               vec!["det-thread-id"]);
+    assert!(rules_hit("rust/src/logging/mod.rs", src).is_empty());
+}
+
+#[test]
+fn rule_fma_confinement() {
+    let src = "let y = a.mul_add(b, c);\n";
+    assert_eq!(rules_hit("rust/src/tensor/mod.rs", src),
+               vec!["fma-confinement"]);
+    assert_eq!(rules_hit("rust/src/exec/mod.rs", src),
+               vec!["fma-confinement"]);
+    // the mixed-precision kernels are the one licensed home for FMA
+    assert!(rules_hit("rust/src/exec/simd.rs", src).is_empty());
+}
+
+#[test]
+fn rule_allow_justify() {
+    let bad = "#[allow(dead_code)]\nfn f() {}\n";
+    assert_eq!(rules_hit("rust/src/util.rs", bad),
+               vec!["allow-justify"]);
+
+    let good = "// retained for the next PR's serving layer\n\
+                #[allow(dead_code)]\nfn f() {}\n";
+    assert!(rules_hit("rust/src/util.rs", good).is_empty());
+}
+
+#[test]
+fn waivers_suppress_with_reason_only() {
+    let waived = "// spark-check: allow(det-hash): fixture data only\n\
+                  use std::collections::HashMap;\n";
+    let c = check_source("rust/src/util.rs", waived);
+    assert!(c.findings.is_empty(), "waiver should suppress: {:?}",
+            c.findings);
+    assert_eq!(c.waived, 1);
+
+    // a reason-less waiver reports itself AND fails to suppress
+    let reasonless = "// spark-check: allow(det-hash)\n\
+                      use std::collections::HashMap;\n";
+    assert_eq!(rules_hit("rust/src/util.rs", reasonless),
+               vec!["det-hash", "waiver-syntax"]);
+
+    // unknown rule names are typos, not suppressions
+    let unknown = "// spark-check: allow(no-such-rule): because\n";
+    assert_eq!(rules_hit("rust/src/util.rs", unknown),
+               vec!["waiver-syntax"]);
+
+    // a waiver only reaches its own line and the next one
+    let too_far = "// spark-check: allow(det-hash): too far away\n\
+                   fn g() {}\n\
+                   use std::collections::HashMap;\n";
+    assert_eq!(rules_hit("rust/src/util.rs", too_far),
+               vec!["det-hash"]);
+}
+
+#[test]
+fn tokens_in_comments_and_strings_never_trip() {
+    let src = "// unsafe HashMap Instant mul_add — commentary only\n\
+               let s = \"unsafe HashMap Instant mul_add\";\n";
+    assert!(rules_hit("rust/src/exec/x.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------------
+// Tree-level behaviour
+// ---------------------------------------------------------------------
+
+/// The shipped tree must pass with zero findings and zero waivers —
+/// the analyzer gates CI, so this is the "lands green, not pre-waived"
+/// satellite made executable.
+#[test]
+fn shipped_tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = check_tree(root).expect("scanning the repo tree");
+    assert!(report.files > 20,
+            "suspiciously few files scanned: {}", report.files);
+    let listing: Vec<String> =
+        report.findings.iter().map(|f| f.to_string()).collect();
+    assert!(report.findings.is_empty(),
+            "shipped tree has findings:\n{}", listing.join("\n"));
+    assert_eq!(report.waived, 0, "shipped tree should need no waivers");
+}
+
+/// A seeded violation in a scratch tree must surface through
+/// `check_tree` — the path the CLI and the CI bin report (and exit
+/// non-zero) on.
+#[test]
+fn seeded_violation_fails_the_tree() {
+    let scratch = std::env::temp_dir()
+        .join(format!("spark-check-seeded-{}", std::process::id()));
+    let src_dir = scratch.join("rust/src");
+    std::fs::create_dir_all(&src_dir).expect("mkdir scratch");
+    std::fs::write(src_dir.join("bad.rs"),
+                   "use std::collections::HashMap;\n")
+        .expect("write fixture");
+
+    let report = check_tree(&scratch).expect("scanning scratch tree");
+    std::fs::remove_dir_all(&scratch).ok();
+
+    assert_eq!(report.files, 1);
+    assert_eq!(report.findings.len(), 1);
+    assert_eq!(report.findings[0].rule, "det-hash");
+    assert_eq!(report.findings[0].file, "rust/src/bad.rs");
+}
+
+#[test]
+fn rule_table_is_coherent() {
+    // every rule id is kebab-case and unique; the table is what
+    // `--list-rules` prints and what waivers validate against
+    let mut seen = Vec::new();
+    for r in analysis::RULES {
+        assert!(!r.id.is_empty() && !r.summary.is_empty());
+        assert!(r.id.chars()
+                 .all(|c| c.is_ascii_lowercase() || c == '-'),
+                "rule id {:?} is not kebab-case", r.id);
+        assert!(!seen.contains(&r.id), "duplicate rule id {:?}", r.id);
+        seen.push(r.id);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dynamic pass: the pool write-set race detector (debug builds)
+// ---------------------------------------------------------------------
+
+#[cfg(debug_assertions)]
+mod racecheck {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    use super::*;
+
+    fn noop_tasks(n: usize) -> Vec<Task<'static>> {
+        (0..n).map(|_| Box::new(|| ()) as Task<'static>).collect()
+    }
+
+    /// An injected overlapping-write task list must trip the detector
+    /// before anything runs — and the panic must leave the detector
+    /// clean for the next call.
+    #[test]
+    fn overlapping_declarations_trip_run_pool() {
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool::declare_task_writes(&[(0x1000, 0x2000)]);
+            pool::declare_task_writes(&[(0x1800, 0x2800)]);
+            exec::run_pool(2, noop_tasks(2));
+        }));
+        let msg = match caught {
+            Ok(()) => panic!("overlapping declarations did not trip"),
+            Err(p) => p
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_default(),
+        };
+        assert!(msg.contains("race detector"),
+                "unexpected panic message: {msg}");
+        assert!(msg.contains("#0") && msg.contains("#1"),
+                "panic should name both tasks: {msg}");
+
+        // the failed verify drained its state: a clean run succeeds
+        pool::declare_task_writes(&[(0x1000, 0x2000)]);
+        pool::declare_task_writes(&[(0x2000, 0x2800)]);
+        exec::run_pool(2, noop_tasks(2));
+    }
+
+    #[test]
+    fn overlapping_declarations_trip_run_scoped_and_scalar() {
+        for runner in [
+            (|| exec::run_scoped(2, noop_tasks(2)))
+                as fn(),
+            || exec::Scalar.run_tasks(noop_tasks(2)),
+        ] {
+            let caught = catch_unwind(AssertUnwindSafe(|| {
+                pool::declare_task_writes(&[(0x100, 0x200)]);
+                pool::declare_task_writes(&[(0x1f0, 0x300)]);
+                runner();
+            }));
+            assert!(caught.is_err(),
+                    "every runner entry point must verify");
+        }
+    }
+
+    /// Declarations from real disjoint carves — the shape every task
+    /// builder in `exec`/`attention` produces — must pass.
+    #[test]
+    fn disjoint_carved_tiles_pass() {
+        let mut data = vec![0.0f32; 64];
+        let tasks: Vec<Task<'_>> = data
+            .chunks_mut(16)
+            .enumerate()
+            .map(|(i, c)| {
+                pool::declare_task_writes(&[pool::span(&*c)]);
+                Box::new(move || {
+                    for x in c.iter_mut() {
+                        *x = i as f32;
+                    }
+                }) as Task<'_>
+            })
+            .collect();
+        exec::run_pool(4, tasks);
+        assert_eq!(data[0], 0.0);
+        assert_eq!(data[63], 3.0);
+    }
+
+    /// A same-task multi-range declaration (dk + dv tiles, say) is not
+    /// a race; cross-task overlap of either range is.
+    #[test]
+    fn multi_range_declarations() {
+        pool::declare_task_writes(&[(0x100, 0x200), (0x400, 0x500)]);
+        pool::declare_task_writes(&[(0x200, 0x300), (0x500, 0x600)]);
+        exec::run_pool(2, noop_tasks(2));
+
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool::declare_task_writes(&[(0x100, 0x200), (0x400, 0x500)]);
+            pool::declare_task_writes(&[(0x450, 0x480)]);
+            exec::run_pool(2, noop_tasks(2));
+        }));
+        assert!(caught.is_err(), "second range overlap must trip");
+    }
+
+    /// The full shipped backend roster — scalar, blocked, simd f32,
+    /// simd mixed — runs the streaming forward/backward witness with
+    /// every write declared, under the detector.  This is the positive
+    /// half of the race-detector satellite: the contract holds for
+    /// everything we actually ship.
+    #[test]
+    fn shipped_roster_runs_clean_under_detector() {
+        attention::witness_self_check(ExecOptions::blocked(4))
+            .expect("roster witness under the race detector");
+        exec::self_check(ExecOptions::blocked(4))
+            .expect("matmul self-check under the race detector");
+    }
+}

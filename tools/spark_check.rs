@@ -1,0 +1,56 @@
+//! CI entry point for the static invariant analyzer — the bin behind
+//! the `spark-check` job in `.github/workflows/ci.yml`.
+//!
+//! Equivalent to `spark check` but a separate target, so CI runs it
+//! with a single `cargo run --bin spark_check` and no artifact setup.
+//! Exit codes: 0 clean, 1 findings survived waivers, 2 operational
+//! error (unreadable tree, bad flags).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use sparkattention::analysis;
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(dir) => root = PathBuf::from(dir),
+                None => {
+                    eprintln!("spark_check: --root needs a directory");
+                    return ExitCode::from(2);
+                }
+            },
+            "--list-rules" => {
+                for r in analysis::RULES {
+                    println!("{:<16} {}", r.id, r.summary);
+                }
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("spark_check: unknown flag {other:?} \
+                           (supported: --root DIR, --list-rules)");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let report = match analysis::check_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("spark_check: {e:#}");
+            return ExitCode::from(2);
+        }
+    };
+    for f in &report.findings {
+        println!("{f}");
+    }
+    println!("spark check: {} files scanned, {} findings, {} waived",
+             report.files, report.findings.len(), report.waived);
+    if report.findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
