@@ -22,17 +22,27 @@ fn main() -> Result<()> {
     let q = Tensor::randn_bf16(vec![bh, n, d], &mut rng);
     let k = Tensor::randn_bf16(vec![bh, n, d], &mut rng);
     let v = Tensor::randn_bf16(vec![bh, n, d], &mut rng);
-    let p = AttnParams::new(d, false);
+    let p = AttnParams::new(d, false)?;
 
     // --- host path: oracle, streaming witness, backends --------------------
     println!("1. host attention path (no artifacts needed)");
-    let oracle = attention::mha_forward(&q, &k, &v, p, &Scalar);
-    let stream = attention::mha_forward_streaming(&q, &k, &v, p, 64, 64,
+    let oracle = attention::mha_forward(&q, &k, &v, &p, &Scalar);
+    let stream = attention::mha_forward_streaming(&q, &k, &v, &p, 64, 64,
                                                   &Scalar);
     println!("   streaming witness vs oracle: max |Δ| = {:.6}",
              stream.output.max_abs_diff(&oracle.output));
+    // structured masks ride the same entry points: a sliding-window
+    // mask streams only the live tile band (see DESIGN.md §mask)
+    let pw = AttnParams::with_mask(
+        d, attention::Mask::SlidingWindow { w: 64 })?;
+    let win = attention::mha_forward_streaming(&q, &k, &v, &pw, 64, 64,
+                                               &Scalar);
+    let tiles = pw.mask.tile_counts(n, 64, 64);
+    println!("   sliding-window w=64: {} live / {} skipped tiles, \
+              output[0,0,0] = {:.4}",
+             tiles.live, tiles.skipped, win.output.at(&[0, 0, 0]));
     for be in exec::roster(exec::ExecOptions::default()) {
-        let got = attention::mha_forward(&q, &k, &v, p, be.as_ref());
+        let got = attention::mha_forward(&q, &k, &v, &p, be.as_ref());
         println!("   backend {:<16} max |Δ| vs scalar = {:.6}  \
                   (max ulp {})",
                  be.name(), got.output.max_abs_diff(&oracle.output),
@@ -84,7 +94,7 @@ fn main() -> Result<()> {
         HostValue::from_tensor(&v), fwd[0].clone(), fwd[1].clone(),
         HostValue::from_tensor(&dout),
     ])?;
-    let g_oracle = attention::mha_backward(&q, &k, &v, &dout, p, &Scalar);
+    let g_oracle = attention::mha_backward(&q, &k, &v, &dout, &p, &Scalar);
     for (hv, (oracle, nm)) in grads.iter().zip([
         (&g_oracle.dq, "dq"), (&g_oracle.dk, "dk"), (&g_oracle.dv, "dv"),
     ]) {

@@ -30,57 +30,73 @@ fn main() {
     sparkattention::logging::init();
     let opts = common::harness_options();
 
-    // --- host block-shape ablation, one table per exec backend -----------
+    // --- host block-shape ablation, one table per (backend, mask) --------
     let (ns, bh, d) = common::host_shape();
     let n = ns.last().copied().unwrap_or(512);
-    let p = AttnParams::new(d, false);
     let mut rng = Rng::new(0xAB1A);
     let q = Tensor::randn(vec![bh, n, d], &mut rng);
     let k = Tensor::randn(vec![bh, n, d], &mut rng);
     let v = Tensor::randn(vec![bh, n, d], &mut rng);
     let blocks = [16usize, 32, 64, 128];
+    let masks = common::host_masks();
     let mut report = Report::new(format!(
         "Host block-shape ablation (bh={bh}, n={n}, d={d})"));
     for be in report_roster(opts) {
-        println!("== Host block-shape ablation (bh={bh}, n={n}, d={d}, \
-                  backend {}) ==", be.name());
-        println!("{:>8} {:>8} {:>12} {:>10}", "block_q", "block_k",
-                 "mean_ms", "tiles");
-        for &bq in &blocks {
-            for &bk in &blocks {
-                let variant = format!("bq{bq}_bk{bk}");
-                if n % bq != 0 || n % bk != 0 {
-                    // streaming requires blocks that divide n; record
-                    // the cell as skipped instead of dropping it
-                    report.push(skipped_row(&be.name(), &variant, n,
-                                            "skipped"));
-                    println!("{:>8} {:>8} {:>12} {:>10}", bq, bk, "-",
-                             "skipped");
-                    continue;
+        for spec in &masks {
+            let mask = spec.build(n).expect("SPARK_HOST_MASKS mask at n");
+            let p = AttnParams::with_mask(d, mask).expect("attn params");
+            // dense keeps the historical per-backend group name
+            let group = if *spec == attention::MaskSpec::Dense {
+                be.name()
+            } else {
+                format!("{}/{}", be.name(), spec.label())
+            };
+            println!("== Host block-shape ablation (bh={bh}, n={n}, \
+                      d={d}, backend {}, mask {}) ==", be.name(),
+                     spec.label());
+            println!("{:>8} {:>8} {:>12} {:>10} {:>10}", "block_q",
+                     "block_k", "mean_ms", "live", "skipped");
+            for &bq in &blocks {
+                for &bk in &blocks {
+                    let variant = format!("bq{bq}_bk{bk}");
+                    if n % bq != 0 || n % bk != 0 {
+                        // streaming requires blocks that divide n; record
+                        // the cell as skipped instead of dropping it
+                        report.push(skipped_row(&group, &variant, n,
+                                                "skipped"));
+                        println!("{:>8} {:>8} {:>12} {:>10} {:>10}", bq,
+                                 bk, "-", "-", "skipped");
+                        continue;
+                    }
+                    let time = measure_wallclock(opts.bench, || {
+                        attention::mha_forward_streaming(&q, &k, &v, &p,
+                                                         bq, bk,
+                                                         be.as_ref());
+                        Ok(())
+                    }).expect("host ablation");
+                    let tiles = p.mask.tile_counts(n, bq, bk);
+                    println!("{:>8} {:>8} {:>12.3} {:>10} {:>10}", bq, bk,
+                             time.mean() * 1e3, bh * tiles.live,
+                             bh * tiles.skipped);
+                    report.push(Row {
+                        group: group.clone(),
+                        variant,
+                        x: n,
+                        time,
+                        flops: 0,
+                        status: "ok".into(),
+                    });
                 }
-                let time = measure_wallclock(opts.bench, || {
-                    attention::mha_forward_streaming(&q, &k, &v, p, bq, bk,
-                                                     be.as_ref());
-                    Ok(())
-                }).expect("host ablation");
-                println!("{:>8} {:>8} {:>12.3} {:>10}", bq, bk,
-                         time.mean() * 1e3, bh * (n / bq) * (n / bk));
-                report.push(Row {
-                    group: be.name(),
-                    variant,
-                    x: n,
-                    time,
-                    flops: 0,
-                    status: "ok".into(),
-                });
             }
+            println!();
         }
-        println!();
     }
     common::emit(&report, "ablation_host");
     println!("reading: wider q-blocks amortise K/V streaming; the pool \
               parallelises over (bh × n/block_q) tiles, so tiny q-blocks \
-              expose more parallelism but touch K/V more often.\n");
+              expose more parallelism but touch K/V more often.  Masked \
+              sweeps schedule only the live tiles — the `live`/`skipped` \
+              columns are the skip-aware enumeration at work.\n");
 
     // --- autotuner sweep + table round-trip -------------------------------
     if let Ok(path) = std::env::var("SPARK_EXEC_TUNING_TABLE") {

@@ -16,6 +16,9 @@
 //! * `SPARK_HOST_NS`        — host-path sequence lengths (default 256,512)
 //! * `SPARK_HOST_BH`        — host-path batch × heads (default 8)
 //! * `SPARK_HOST_D`         — host-path head dim (default 64)
+//! * `SPARK_HOST_MASKS`    — host-path attention masks, comma-separated
+//!   `dense | causal | window:W | block:B[:DENSITY_PCT[:SEED]]`
+//!   (default `dense,causal`)
 //! * `SPARK_EXEC_TUNING_TABLE` — path to a `spark tune` block-shape
 //!   table; installed for the host backends when the file exists
 //!   (lenient: `ablation_blocks` *writes* the table at this path, so a
@@ -111,6 +114,19 @@ pub fn host_shape() -> (Vec<usize>, usize, usize) {
         .map(|s| s.trim().parse().expect("SPARK_HOST_NS"))
         .collect();
     (ns, envnum("SPARK_HOST_BH", 8), envnum("SPARK_HOST_D", 64))
+}
+
+/// Host-path mask roster from `SPARK_HOST_MASKS` (default
+/// `dense,causal` — the historical figure plus the paper's causal
+/// column).  Window widths must be given inline (`window:W`): benches
+/// have no `--window` flag to pair a bare `window` with.
+pub fn host_masks() -> Vec<sparkattention::attention::MaskSpec> {
+    let text = std::env::var("SPARK_HOST_MASKS")
+        .unwrap_or_else(|_| "dense,causal".into());
+    let masks = sparkattention::attention::MaskSpec::parse_list(&text, None)
+        .expect("SPARK_HOST_MASKS");
+    assert!(!masks.is_empty(), "SPARK_HOST_MASKS selected no masks");
+    masks
 }
 
 /// Print the table and write the JSON report (always — CI uploads the

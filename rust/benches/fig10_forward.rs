@@ -32,7 +32,8 @@ fn main() {
     // emitted as report notes (table + JSON).
     let (ns, bh, d) = common::host_shape();
     let opts = common::harness_options();
-    let host = host_backend_report(&ns, bh, d, false, opts)
+    let masks = common::host_masks();
+    let host = host_backend_report(&ns, bh, d, false, &masks, opts)
         .expect("host backend report");
     common::emit(&host, "fig10_host");
 

@@ -22,7 +22,8 @@ fn main() {
     // emitted as report notes (table + JSON).
     let (ns, bh, d) = common::host_shape();
     let opts = common::harness_options();
-    let host = host_backend_report(&ns, bh, d, true, opts)
+    let masks = common::host_masks();
+    let host = host_backend_report(&ns, bh, d, true, &masks, opts)
         .expect("host backward report");
     common::emit(&host, "fig11_host");
 

@@ -25,7 +25,7 @@ fn main() {
 
     // host attention-sublayer latency (the e2e figure's hot block)
     let (ns, bh, d) = common::host_shape();
-    let host = host_backend_report(&ns, bh, d, false,
+    let host = host_backend_report(&ns, bh, d, false, &common::host_masks(),
                                    common::harness_options())
         .expect("host latency report");
     common::emit(&host, "fig12_host_attention");

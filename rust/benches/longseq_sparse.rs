@@ -1,0 +1,171 @@
+//! `cargo bench --bench longseq_sparse` — the long-sequence structured-
+//! attention sweep: sliding-window streaming forward vs dense, at
+//! lengths far past the quadratic wall (default up to n = 16384).
+//!
+//! Skip-aware tiling makes sliding-window attention *linear* in n (the
+//! live band is `~n·w` elements) while dense stays quadratic; this
+//! bench shows that in measured wall-clock **and** in the I/O model's
+//! analytic/simulated traffic, and hard-asserts the deterministic
+//! parts:
+//!
+//! * the tile enumerator's live/skipped counts partition the grid and
+//!   match a brute-force scan of `Mask::tile_live` (every n);
+//! * `iomodel` analytic masked traffic ≡ the tile-level simulator, so
+//!   skipped tiles are provably absent from the traffic counts
+//!   (every n — this is the CI bench-smoke gate);
+//! * streaming(masked) ≡ fused oracle at the smallest n (every run);
+//! * traffic scaling: window ~linear, dense ~quadratic (when the sweep
+//!   spans ≥ 4×);
+//! * wall-clock: dense ≥ 2× slower than window at the largest n (only
+//!   when nmax ≥ 4096 — tiny CI-smoke shapes are noise-dominated).
+//!
+//! Environment (on top of the shared `benches/common` knobs):
+//!
+//! * `SPARK_LONGSEQ_NS`     — lengths (default `2048,4096,8192,16384`)
+//! * `SPARK_LONGSEQ_WINDOW` — sliding-window width (default 256)
+
+mod common;
+
+use sparkattention::attention::{self, AttnParams, Mask};
+use sparkattention::bench::{measure_wallclock, Report, Row};
+use sparkattention::iomodel::{self, MhaShape};
+use sparkattention::tensor::{Rng, Tensor};
+
+fn envnum(k: &str, d: usize) -> usize {
+    std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+fn main() {
+    sparkattention::logging::init();
+    let ns: Vec<usize> = std::env::var("SPARK_LONGSEQ_NS")
+        .unwrap_or_else(|_| "2048,4096,8192,16384".into())
+        .split(',')
+        .map(|s| s.trim().parse().expect("SPARK_LONGSEQ_NS"))
+        .collect();
+    let w = envnum("SPARK_LONGSEQ_WINDOW", 256);
+    assert!(w >= 1, "SPARK_LONGSEQ_WINDOW must be ≥ 1");
+    let (bh, d) = (1usize, 32usize);
+    let opts = common::harness_options();
+    let be = opts.exec.build();
+    println!("== Long-sequence sweep: sliding-window (w={w}) vs dense \
+              (bh={bh}, d={d}, backend {}) ==", be.name());
+    println!("{:>8} {:>8} {:>10} {:>12} {:>12} {:>12} {:>12}", "n",
+             "mask", "mean_ms", "live", "skipped", "read_MB", "write_MB");
+
+    let mut report = Report::new(format!(
+        "Long-sequence structured attention (bh={bh}, d={d}, w={w})"));
+    // (n, mask-label) → (mean seconds, analytic total bytes)
+    let mut cells: Vec<(usize, String, f64, usize)> = Vec::new();
+    for (idx, &n) in ns.iter().enumerate() {
+        // largest tile ≤ 128 that divides n (streaming needs bq | n)
+        let bq = (1..=128usize.min(n)).rev().find(|b| n % b == 0)
+            .unwrap_or(1);
+        let s = MhaShape::new(bh, n, d);
+        let mut rng = Rng::new(0x10A6 ^ n as u64);
+        let q = Tensor::randn(vec![bh, n, d], &mut rng);
+        let k = Tensor::randn(vec![bh, n, d], &mut rng);
+        let v = Tensor::randn(vec![bh, n, d], &mut rng);
+        for mask in [Mask::SlidingWindow { w }, Mask::Dense] {
+            let label = mask.label();
+            let tiles = mask.tile_counts(n, bq, bq);
+            // the enumerator's counts partition the grid and agree with
+            // a brute-force tile_live scan
+            let grid = n.div_ceil(bq) * n.div_ceil(bq);
+            assert_eq!(tiles.live + tiles.skipped, grid,
+                       "tile counts must partition the grid (n={n})");
+            let brute = (0..n).step_by(bq)
+                .flat_map(|iq| (0..n).step_by(bq).map(move |ik| (iq, ik)))
+                .filter(|&(iq, ik)| mask.tile_live(iq, bq, ik, bq))
+                .count();
+            assert_eq!(tiles.live, brute,
+                       "enumerator vs brute-force tile scan (n={n}, \
+                        mask={label})");
+            // iomodel: skipped tiles are absent from analytic and
+            // simulated traffic identically (the CI smoke gate)
+            let ana = iomodel::analytic_fused_fwd_masked(s, &mask, bq, bq);
+            let (sim, _) = iomodel::simulate_fused_fwd_masked(
+                s, &mask, bq, bq, 16 << 20);
+            assert_eq!((sim.read_bytes, sim.write_bytes),
+                       (ana.read_bytes, ana.write_bytes),
+                       "iomodel sim ⇄ analytic (n={n}, mask={label})");
+            let p = AttnParams::with_mask(d, mask.clone())
+                .expect("attn params");
+            // correctness anchor at the smallest length: streaming
+            // (skip-aware) ≡ fused oracle
+            if idx == 0 {
+                let oracle = attention::mha_forward(
+                    &q, &k, &v, &p, &sparkattention::exec::Scalar);
+                let got = attention::mha_forward_streaming(
+                    &q, &k, &v, &p, bq, bq, be.as_ref());
+                let err = got.output.max_abs_diff(&oracle.output);
+                assert!(err < 1e-4,
+                        "streaming deviates from oracle (n={n}, \
+                         mask={label}, err={err})");
+            }
+            let time = measure_wallclock(opts.bench, || {
+                attention::mha_forward_streaming(&q, &k, &v, &p, bq, bq,
+                                                 be.as_ref());
+                Ok(())
+            }).expect("longseq measure");
+            let mb = |b: usize| b as f64 / (1 << 20) as f64;
+            println!("{:>8} {:>8} {:>10.3} {:>12} {:>12} {:>12.1} \
+                      {:>12.1}", n, label, time.mean() * 1e3, tiles.live,
+                     tiles.skipped, mb(ana.read_bytes),
+                     mb(ana.write_bytes));
+            cells.push((n, label.clone(), time.mean(),
+                        ana.total_bytes()));
+            report.push(Row {
+                group: format!("longseq/{label}"),
+                variant: be.name(),
+                x: n,
+                time,
+                flops: attention::attention_flops_masked(bh, n, d,
+                                                         &p.mask, false),
+                status: "ok".into(),
+            });
+        }
+    }
+    common::emit(&report, "longseq_sparse");
+
+    let (nmin, nmax) = (ns[0], *ns.last().expect("ns"));
+    let bytes_of = |n: usize, label: &str| -> f64 {
+        cells.iter()
+            .find(|(cn, cl, _, _)| *cn == n && cl.as_str() == label)
+            .map(|&(_, _, _, b)| b as f64).expect("cell")
+    };
+    let time_of = |n: usize, label: &str| -> f64 {
+        cells.iter()
+            .find(|(cn, cl, _, _)| *cn == n && cl.as_str() == label)
+            .map(|&(_, _, t, _)| t).expect("cell")
+    };
+    let win = Mask::SlidingWindow { w }.label();
+    if nmax >= 4 * nmin {
+        // deterministic traffic scaling: bytes ∝ n^e; the window stays
+        // near-linear, dense near-quadratic
+        let span = (nmax as f64 / nmin as f64).ln();
+        let e_win = (bytes_of(nmax, &win) / bytes_of(nmin, &win)).ln()
+            / span;
+        let e_dense = (bytes_of(nmax, "dense")
+                       / bytes_of(nmin, "dense")).ln() / span;
+        println!("traffic scaling exponents over n={nmin}..{nmax}: \
+                  window {e_win:.2} (≈1 linear), dense {e_dense:.2} \
+                  (≈2 quadratic)");
+        assert!(e_win < 1.3,
+                "window traffic must scale near-linearly (got n^{e_win:.2})");
+        assert!(e_dense > 1.7,
+                "dense traffic must scale near-quadratically \
+                 (got n^{e_dense:.2})");
+    }
+    if nmax >= 4096 && w * 4 <= nmax {
+        // the skip-aware win in wall-clock: at the largest length the
+        // dense sweep streams ≥ nmax/w× the live band, so even a noisy
+        // 2× floor is a conservative gate
+        let (td, tw) = (time_of(nmax, "dense"), time_of(nmax, &win));
+        println!("wall-clock at n={nmax}: dense {:.1} ms vs window \
+                  {:.1} ms ({:.1}×)", td * 1e3, tw * 1e3, td / tw);
+        assert!(td > 2.0 * tw,
+                "dense must be ≥ 2× slower than window at n={nmax} \
+                 (dense {td:.4}s, window {tw:.4}s)");
+    }
+    println!("longseq_sparse: all invariants OK");
+}

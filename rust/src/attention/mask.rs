@@ -1,0 +1,559 @@
+//! Structured attention masks and skip-aware tile enumeration.
+//!
+//! A [`Mask`] describes which (query, key) score entries are *live*.
+//! The attention paths consult it at three granularities:
+//!
+//! * **element** — [`Mask::live`] decides whether a single logit is
+//!   kept (scaled) or replaced by `-inf` before the softmax;
+//! * **tile** — [`Mask::tile_live`] decides whether a `(block_q,
+//!   block_k)` score tile can contain *any* live element.  The
+//!   streaming fwd/bwd tilings never pack, schedule, or stream a tile
+//!   for which this returns `false`, and the `iomodel` traffic
+//!   accounting drops the same tiles (see
+//!   [`crate::iomodel::analytic_fused_fwd_masked`]);
+//! * **row** — a query row with no live element at all is defined to
+//!   produce an exactly-zero output row with an LSE of `-inf` (the
+//!   sentinel), identically in the fused oracle and both streaming
+//!   paths, bitwise across every backend and thread count.
+//!
+//! `tile_live` is **exact**: it returns `true` iff at least one
+//! element in the tile is live (property-tested against a brute-force
+//! element scan), so a skipped tile is provably outside the mask and
+//! the live/skipped counts from [`Mask::tile_counts`] are the ground
+//! truth the traffic model and the pool's task set must both match.
+//!
+//! [`MaskSpec`] is the sequence-length-independent description used by
+//! config (`[attention] mask`), the CLI (`--mask`/`--window`), and the
+//! bench harness; [`MaskSpec::build`] instantiates it for a concrete
+//! `n`.
+
+use anyhow::{bail, Result};
+
+/// Block-granular sparsity layout for [`Mask::BlockSparse`]: an
+/// `nblocks × nblocks` boolean grid over square `block × block` score
+/// tiles, row-major (`live[bi * nblocks + bj]` is the block covering
+/// queries `bi*block..` and keys `bj*block..`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockLayout {
+    block: usize,
+    nblocks: usize,
+    live: Vec<bool>,
+}
+
+/// SplitMix64 finalizer: the deterministic, allocation-free hash used
+/// to draw pseudo-random block layouts (no `HashMap`, no wall clock —
+/// the analyzer's determinism rules apply to this module).
+fn splitmix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl BlockLayout {
+    /// Builds a layout from an explicit row-major liveness grid.
+    /// `live.len()` must equal `nblocks * nblocks`; `block` and
+    /// `nblocks` must be non-zero.
+    pub fn new(block: usize, nblocks: usize, live: Vec<bool>) -> Result<Self> {
+        if block == 0 || nblocks == 0 {
+            bail!("block-sparse layout needs block ≥ 1 and nblocks ≥ 1 \
+                   (got block={block}, nblocks={nblocks})");
+        }
+        if live.len() != nblocks * nblocks {
+            bail!("block-sparse layout grid has {} entries, expected \
+                   nblocks² = {}",
+                  live.len(), nblocks * nblocks);
+        }
+        Ok(Self { block, nblocks, live })
+    }
+
+    /// Deterministic pseudo-random layout: the diagonal is always live
+    /// (so no query row is fully masked by accident in benches), and
+    /// each off-diagonal block is live with probability
+    /// `density_pct / 100`, drawn from a splitmix hash of
+    /// `(bi, bj, seed)` — same layout for the same arguments on every
+    /// platform and run.
+    pub fn random(block: usize, nblocks: usize, density_pct: usize,
+                  seed: u64) -> Result<Self> {
+        if density_pct > 100 {
+            bail!("block-sparse density must be 0..=100 percent \
+                   (got {density_pct})");
+        }
+        let live = (0..nblocks * nblocks)
+            .map(|idx| {
+                let (bi, bj) = (idx / nblocks, idx % nblocks);
+                let h = splitmix(seed
+                                     ^ ((bi as u64) << 32)
+                                     ^ bj as u64);
+                bi == bj || (h % 100) < density_pct as u64
+            })
+            .collect();
+        Self::new(block, nblocks, live)
+    }
+
+    /// Side length of one square block.
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    /// Number of blocks along each axis.
+    pub fn nblocks(&self) -> usize {
+        self.nblocks
+    }
+
+    /// Sequence length this layout covers (`block * nblocks`).
+    pub fn n(&self) -> usize {
+        self.block * self.nblocks
+    }
+
+    /// Whether block `(bi, bj)` is live.
+    pub fn is_live(&self, bi: usize, bj: usize) -> bool {
+        self.live[bi * self.nblocks + bj]
+    }
+
+    /// Number of live blocks in the grid.
+    pub fn live_blocks(&self) -> usize {
+        self.live.iter().filter(|&&b| b).count()
+    }
+}
+
+/// Which (query `i`, key `j`) attention scores are live.
+///
+/// Masked-row contract: if row `i` has no live `j` at all, attention
+/// output row `i` is exactly zero and its log-sum-exp is
+/// `f32::NEG_INFINITY` — never NaN, never uniform weights.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Mask {
+    /// Every score is live (full dense attention).
+    Dense,
+    /// Lower-triangular: key `j` is live for query `i` iff `j <= i`.
+    Causal,
+    /// Causal window of width `w`: live iff `j <= i && i - j < w`
+    /// (each query sees itself and the `w - 1` previous keys).
+    /// `w = 0` masks everything — the canonical fully-masked-row
+    /// regression input.
+    SlidingWindow {
+        /// Window width in keys, including the query position itself.
+        w: usize,
+    },
+    /// Block-granular sparsity over a [`BlockLayout`] grid; the layout
+    /// side `layout.n()` must equal the sequence length.
+    BlockSparse {
+        /// The block liveness grid.
+        layout: BlockLayout,
+    },
+}
+
+/// Live/skipped tile totals from [`Mask::tile_counts`]: the enumerator
+/// ground truth that both the pool's task set and the `iomodel`
+/// traffic counts are asserted against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileCounts {
+    /// Tiles with at least one live element (packed, scheduled,
+    /// streamed, counted).
+    pub live: usize,
+    /// Tiles provably outside the mask (never packed, never
+    /// scheduled, absent from traffic counts).
+    pub skipped: usize,
+    /// Query tiles with at least one live key tile (a query tile with
+    /// none is not even scheduled as a pool task — its output rows are
+    /// the pre-initialised zeros + `-inf` LSE sentinel).
+    pub live_q_tiles: usize,
+}
+
+impl Mask {
+    /// Whether score `(i, j)` (query `i` attends key `j`) is live.
+    pub fn live(&self, i: usize, j: usize) -> bool {
+        match self {
+            Mask::Dense => true,
+            Mask::Causal => j <= i,
+            Mask::SlidingWindow { w } => j <= i && i - j < *w,
+            Mask::BlockSparse { layout } => {
+                layout.is_live(i / layout.block, j / layout.block)
+            }
+        }
+    }
+
+    /// Whether the tile of queries `iq..iq+bq` × keys `ik..ik+bk` can
+    /// contain a live element.  Exact (true ⇔ ∃ live element), so
+    /// `!tile_live` tiles are provably skippable.
+    pub fn tile_live(&self, iq: usize, bq: usize, ik: usize, bk: usize)
+                     -> bool {
+        debug_assert!(bq >= 1 && bk >= 1);
+        match self {
+            Mask::Dense => true,
+            // feasibility of j <= i over the rectangle: min j vs max i
+            Mask::Causal => ik <= iq + bq - 1,
+            // the band 0 <= i-j <= w-1 meets the rectangle iff both
+            // one-sided diagonal bounds are achievable (the i-j range
+            // over a rectangle is a contiguous interval)
+            Mask::SlidingWindow { w } => {
+                *w > 0 && ik <= iq + bq - 1 && iq <= ik + bk + *w - 2
+            }
+            Mask::BlockSparse { layout } => {
+                let b = layout.block;
+                let (b0, b1) = (iq / b, (iq + bq - 1) / b);
+                let (c0, c1) = (ik / b, (ik + bk - 1) / b);
+                (b0..=b1.min(layout.nblocks - 1)).any(|bi| {
+                    (c0..=c1.min(layout.nblocks - 1))
+                        .any(|bj| layout.is_live(bi, bj))
+                })
+            }
+        }
+    }
+
+    /// Enumerates the `(block_q, block_k)` tile grid over an `n × n`
+    /// score matrix (trailing partial tiles included) and counts live
+    /// vs skipped tiles — the single source of truth the streaming
+    /// task builders and the `iomodel` masked traffic model both
+    /// follow.
+    pub fn tile_counts(&self, n: usize, block_q: usize, block_k: usize)
+                       -> TileCounts {
+        assert!(block_q >= 1 && block_k >= 1,
+                "tile_counts needs block_q/block_k ≥ 1");
+        let mut c = TileCounts { live: 0, skipped: 0, live_q_tiles: 0 };
+        for iq in (0..n).step_by(block_q) {
+            let bq = block_q.min(n - iq);
+            let mut row_live = 0usize;
+            for ik in (0..n).step_by(block_k) {
+                let bk = block_k.min(n - ik);
+                if self.tile_live(iq, bq, ik, bk) {
+                    row_live += 1;
+                } else {
+                    c.skipped += 1;
+                }
+            }
+            c.live += row_live;
+            if row_live > 0 {
+                c.live_q_tiles += 1;
+            }
+        }
+        c
+    }
+
+    /// Number of live score elements in an `n × n` attention matrix —
+    /// the basis for mask-aware FLOP accounting (dense `n²`, causal
+    /// `n(n+1)/2`, window ≈ `n·w`, block-sparse
+    /// `live_blocks · block²`).
+    pub fn live_elements(&self, n: usize) -> usize {
+        match self {
+            Mask::Dense => n * n,
+            Mask::Causal => n * (n + 1) / 2,
+            Mask::SlidingWindow { w } => {
+                let w = *w;
+                if w >= n {
+                    n * (n + 1) / 2
+                } else {
+                    // rows 0..w ramp up (i+1 live keys), the rest see
+                    // exactly w
+                    w * (w + 1) / 2 + (n - w) * w
+                }
+            }
+            Mask::BlockSparse { layout } => {
+                debug_assert_eq!(layout.n(), n);
+                layout.live_blocks() * layout.block * layout.block
+            }
+        }
+    }
+
+    /// Panics unless the mask is consistent with sequence length `n`
+    /// (only [`Mask::BlockSparse`] constrains it).
+    pub fn check_n(&self, n: usize) {
+        if let Mask::BlockSparse { layout } = self {
+            assert_eq!(layout.n(), n,
+                       "block-sparse layout covers n={} but attention \
+                        inputs have n={}",
+                       layout.n(), n);
+        }
+    }
+
+    /// Short stable label for bench rows and logs (`dense`, `causal`,
+    /// `win{w}`, `bs{block}x{nblocks}`).
+    pub fn label(&self) -> String {
+        match self {
+            Mask::Dense => "dense".into(),
+            Mask::Causal => "causal".into(),
+            Mask::SlidingWindow { w } => format!("win{w}"),
+            Mask::BlockSparse { layout } => {
+                format!("bs{}x{}", layout.block, layout.nblocks)
+            }
+        }
+    }
+}
+
+/// Sequence-length-independent mask description: what config
+/// (`[attention] mask`), the CLI (`--mask`/`--window`), and the bench
+/// env (`SPARK_HOST_MASKS`) parse, instantiated per shape via
+/// [`MaskSpec::build`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MaskSpec {
+    /// Full dense attention.
+    Dense,
+    /// Lower-triangular causal attention.
+    Causal,
+    /// Causal sliding window of width `w ≥ 1`.
+    SlidingWindow {
+        /// Window width in keys, including the query itself.
+        w: usize,
+    },
+    /// Deterministic pseudo-random block-sparse pattern (diagonal
+    /// always live); `block` must divide the sequence length at
+    /// [`MaskSpec::build`] time.
+    BlockSparse {
+        /// Square block side length.
+        block: usize,
+        /// Off-diagonal live probability, percent (0..=100).
+        density_pct: usize,
+        /// Layout seed (same seed ⇒ same layout everywhere).
+        seed: u64,
+    },
+}
+
+impl MaskSpec {
+    /// Parses one spec.  Grammar: `dense` | `causal` | `window:W` |
+    /// `block:B[:DENSITY_PCT[:SEED]]`.  A bare `window` takes its
+    /// width from `window` (the `--window` flag / `[attention] window`
+    /// key) and is an error when none was given.  Widths and blocks of
+    /// 0 are rejected here, at the configuration surface — the core
+    /// [`Mask`] still represents `SlidingWindow { w: 0 }` for the
+    /// fully-masked regression tests.
+    pub fn parse(text: &str, window: Option<usize>) -> Result<Self> {
+        let parts: Vec<&str> = text.trim().split(':').collect();
+        let uint = |s: &str, what: &str| -> Result<usize> {
+            s.parse::<usize>().map_err(|_| {
+                anyhow::anyhow!("mask `{text}`: {what} `{s}` is not an \
+                                 unsigned integer")
+            })
+        };
+        match parts.as_slice() {
+            ["dense"] => Ok(MaskSpec::Dense),
+            ["causal"] => Ok(MaskSpec::Causal),
+            ["window"] => match window {
+                Some(w) if w >= 1 => Ok(MaskSpec::SlidingWindow { w }),
+                Some(_) => bail!("sliding-window width must be ≥ 1 \
+                                  (window = 0 masks every key; got 0)"),
+                None => bail!("mask `window` needs a width: pass \
+                               `window:W`, or set `--window` / \
+                               `[attention] window`"),
+            },
+            ["window", w] => {
+                let w = uint(w, "width")?;
+                if w == 0 {
+                    bail!("sliding-window width must be ≥ 1 (window = 0 \
+                           masks every key; got 0)");
+                }
+                Ok(MaskSpec::SlidingWindow { w })
+            }
+            ["block", rest @ ..] if rest.len() <= 3 && !rest.is_empty() => {
+                let block = uint(rest[0], "block size")?;
+                if block == 0 {
+                    bail!("block-sparse block size must be ≥ 1 (got 0)");
+                }
+                let density_pct = match rest.get(1) {
+                    Some(s) => uint(s, "density")?,
+                    None => 25,
+                };
+                if density_pct > 100 {
+                    bail!("block-sparse density must be 0..=100 percent \
+                           (got {density_pct})");
+                }
+                let seed = match rest.get(2) {
+                    Some(s) => s.parse::<u64>().map_err(|_| {
+                        anyhow::anyhow!("mask `{text}`: seed `{s}` is not \
+                                         an unsigned integer")
+                    })?,
+                    None => 0,
+                };
+                Ok(MaskSpec::BlockSparse { block, density_pct, seed })
+            }
+            _ => bail!("unknown mask `{text}`: expected dense | causal | \
+                        window:W | block:B[:DENSITY_PCT[:SEED]]"),
+        }
+    }
+
+    /// Parses a comma-separated list of specs (bench env / `--mask`
+    /// accepts e.g. `dense,causal,window:256`).
+    pub fn parse_list(text: &str, window: Option<usize>)
+                      -> Result<Vec<Self>> {
+        text.split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| Self::parse(s, window))
+            .collect()
+    }
+
+    /// Short stable label (`dense`, `causal`, `win{w}`,
+    /// `bs{block}d{density}`) used to name bench groups.
+    pub fn label(&self) -> String {
+        match self {
+            MaskSpec::Dense => "dense".into(),
+            MaskSpec::Causal => "causal".into(),
+            MaskSpec::SlidingWindow { w } => format!("win{w}"),
+            MaskSpec::BlockSparse { block, density_pct, .. } => {
+                format!("bs{block}d{density_pct}")
+            }
+        }
+    }
+
+    /// Instantiates the spec for sequence length `n` (block-sparse
+    /// blocks must divide `n`).
+    pub fn build(&self, n: usize) -> Result<Mask> {
+        match *self {
+            MaskSpec::Dense => Ok(Mask::Dense),
+            MaskSpec::Causal => Ok(Mask::Causal),
+            MaskSpec::SlidingWindow { w } => Ok(Mask::SlidingWindow { w }),
+            MaskSpec::BlockSparse { block, density_pct, seed } => {
+                if n % block != 0 {
+                    bail!("block-sparse block {block} must divide the \
+                           sequence length (n = {n})");
+                }
+                let layout =
+                    BlockLayout::random(block, n / block, density_pct,
+                                        seed)?;
+                Ok(Mask::BlockSparse { layout })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Brute-force reference for `tile_live`: scan every element.
+    fn tile_live_ref(m: &Mask, iq: usize, bq: usize, ik: usize, bk: usize)
+                     -> bool {
+        (iq..iq + bq).any(|i| (ik..ik + bk).any(|j| m.live(i, j)))
+    }
+
+    fn roster(n: usize) -> Vec<Mask> {
+        let nb = 4;
+        let block = n / nb;
+        let mut masks = vec![
+            Mask::Dense,
+            Mask::Causal,
+            Mask::SlidingWindow { w: 0 },
+            Mask::SlidingWindow { w: 1 },
+            Mask::SlidingWindow { w: 3 },
+            Mask::SlidingWindow { w: n },
+            Mask::SlidingWindow { w: 2 * n },
+        ];
+        if block >= 1 {
+            masks.push(Mask::BlockSparse {
+                layout: BlockLayout::random(block, nb, 30, 7).unwrap(),
+            });
+            // one fully-dead query block-row (row 2), one fully-live
+            let mut live = vec![false; nb * nb];
+            for bj in 0..nb {
+                live[bj] = bj == 0;
+                live[nb + bj] = bj % 2 == 0;
+                live[3 * nb + bj] = true;
+            }
+            masks.push(Mask::BlockSparse {
+                layout: BlockLayout::new(block, nb, live).unwrap(),
+            });
+        }
+        masks
+    }
+
+    #[test]
+    fn tile_live_is_exact() {
+        for n in [8usize, 12, 16] {
+            for m in roster(n) {
+                for bq in [1usize, 2, 3, 4, 8] {
+                    for bk in [1usize, 2, 3, 4, 8] {
+                        for iq in (0..n).step_by(bq) {
+                            let tq = bq.min(n - iq);
+                            for ik in (0..n).step_by(bk) {
+                                let tk = bk.min(n - ik);
+                                assert_eq!(
+                                    m.tile_live(iq, tq, ik, tk),
+                                    tile_live_ref(&m, iq, tq, ik, tk),
+                                    "mask {m:?} tile ({iq},{tq})×\
+                                     ({ik},{tk})"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tile_counts_partition_the_grid() {
+        let n = 16;
+        for m in roster(n) {
+            for (bq, bk) in [(4usize, 4usize), (8, 4), (4, 8), (3, 5)] {
+                let c = m.tile_counts(n, bq, bk);
+                let grid = n.div_ceil(bq) * n.div_ceil(bk);
+                assert_eq!(c.live + c.skipped, grid, "mask {m:?}");
+                assert!(c.live_q_tiles <= n.div_ceil(bq));
+            }
+        }
+    }
+
+    #[test]
+    fn live_elements_matches_element_scan() {
+        for n in [8usize, 12, 16] {
+            for m in roster(n) {
+                let scan: usize = (0..n)
+                    .map(|i| (0..n).filter(|&j| m.live(i, j)).count())
+                    .sum();
+                assert_eq!(m.live_elements(n), scan, "mask {m:?} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn window_zero_masks_everything() {
+        let m = Mask::SlidingWindow { w: 0 };
+        assert_eq!(m.live_elements(8), 0);
+        assert_eq!(m.tile_counts(8, 4, 4).live, 0);
+        assert_eq!(m.tile_counts(8, 4, 4).live_q_tiles, 0);
+    }
+
+    #[test]
+    fn random_layout_is_deterministic_with_live_diagonal() {
+        let a = BlockLayout::random(8, 6, 40, 123).unwrap();
+        let b = BlockLayout::random(8, 6, 40, 123).unwrap();
+        assert_eq!(a, b);
+        for bi in 0..6 {
+            assert!(a.is_live(bi, bi), "diagonal block {bi} must be live");
+        }
+        let c = BlockLayout::random(8, 6, 40, 124).unwrap();
+        assert_ne!(a, c, "different seeds should differ (6×6 @ 40%)");
+    }
+
+    #[test]
+    fn spec_parse_grammar_and_errors() {
+        assert_eq!(MaskSpec::parse("dense", None).unwrap(), MaskSpec::Dense);
+        assert_eq!(MaskSpec::parse("causal", None).unwrap(),
+                   MaskSpec::Causal);
+        assert_eq!(MaskSpec::parse("window:7", None).unwrap(),
+                   MaskSpec::SlidingWindow { w: 7 });
+        assert_eq!(MaskSpec::parse("window", Some(9)).unwrap(),
+                   MaskSpec::SlidingWindow { w: 9 });
+        assert_eq!(MaskSpec::parse("block:16", None).unwrap(),
+                   MaskSpec::BlockSparse { block: 16, density_pct: 25,
+                                           seed: 0 });
+        assert_eq!(MaskSpec::parse("block:16:50:3", None).unwrap(),
+                   MaskSpec::BlockSparse { block: 16, density_pct: 50,
+                                           seed: 3 });
+        for bad in ["window", "window:0", "block:0", "block:8:200",
+                    "diag", "window:x"] {
+            assert!(MaskSpec::parse(bad, None).is_err(), "{bad}");
+        }
+        let list = MaskSpec::parse_list("dense, causal,window:4", None)
+            .unwrap();
+        assert_eq!(list.len(), 3);
+        assert_eq!(list[2], MaskSpec::SlidingWindow { w: 4 });
+    }
+
+    #[test]
+    fn spec_build_checks_divisibility() {
+        let spec = MaskSpec::BlockSparse { block: 6, density_pct: 25,
+                                           seed: 0 };
+        assert!(spec.build(16).is_err());
+        assert!(spec.build(12).is_ok());
+    }
+}

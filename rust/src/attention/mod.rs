@@ -21,6 +21,19 @@
 //! statistics — so for a fixed block size the result is bitwise-identical
 //! for any thread count (each tile's accumulation order never changes).
 //!
+//! **Masks.**  [`AttnParams`] carries a structured [`Mask`] (dense,
+//! causal, sliding-window, block-sparse — see [`mask`]).  Masked logits
+//! become `-inf` before the softmax, and a query row with *no* live key
+//! is defined to produce an exactly-zero output row with an LSE of
+//! `-inf` (the sentinel) — never NaN, never uniform weights — in the
+//! fused oracle, the streaming forward, and the streaming backward's
+//! recomputation, bitwise across backends and thread counts.  The
+//! streaming tilings are *skip-aware*: score tiles provably outside the
+//! mask ([`Mask::tile_live`]) are never packed or scheduled on the
+//! pool (a query tile with no live key tile doesn't even become a
+//! task), and the same enumeration drives the `iomodel` masked traffic
+//! accounting.
+//!
 //! **Precision.**  The streaming paths also honour the backend's
 //! [`exec::Precision`]: under a mixed-precision backend the leaf
 //! operands (Q, K, V, dO) are quantized to bf16 once at entry — the
@@ -36,14 +49,23 @@
 //! RNG (`python/compile/kernels/rng.py`), so cross-checking dropout paths
 //! happens in the Python test suite where both sides share the RNG.
 
+pub mod mask;
 pub mod streaming_bwd;
 
+pub use mask::{BlockLayout, Mask, MaskSpec, TileCounts};
 pub use streaming_bwd::mha_backward_streaming;
 
 use crate::exec::{self, Backend, ExecOptions, Precision, Task};
 use crate::tensor::{bf16, Tensor};
+use anyhow::{bail, Result};
 
-/// Value used for masked-out logits (matches the kernels' `NEG_INF`).
+/// Finite stand-in for `-inf` used by the *device* kernels for masked
+/// logits (matches `python/compile/kernels`' `NEG_INF`).  The host
+/// paths now use true `f32::NEG_INFINITY` internally, which is
+/// bitwise-equivalent for every partially-masked row (`exp` underflows
+/// to exactly 0.0 either way) but — unlike a finite sentinel — makes a
+/// fully-masked row detectable as `row max == -inf` instead of
+/// silently softmaxing into uniform weights over forbidden keys.
 pub const NEG_INF: f32 = -1e30;
 
 /// Rows of the score matrix handled per worker task in the fused
@@ -52,19 +74,29 @@ pub const NEG_INF: f32 = -1e30;
 const SOFTMAX_ROWS_PER_TASK: usize = 16;
 
 /// Static attention parameters.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct AttnParams {
-    /// Mask out future positions (autoregressive attention).
-    pub causal: bool,
+    /// Which (query, key) scores are live (see [`mask`]).
+    pub mask: Mask,
     /// Softmax temperature; the standard choice is `1/sqrt(d)`.
     pub scale: f32,
 }
 
 impl AttnParams {
     /// Parameters for head dimension `d` with the standard `1/sqrt(d)`
-    /// temperature.
-    pub fn new(d: usize, causal: bool) -> Self {
-        AttnParams { causal, scale: 1.0 / (d as f32).sqrt() }
+    /// temperature and a dense or causal mask.  `d = 0` is rejected
+    /// (the scale would be `inf` and every output NaN).
+    pub fn new(d: usize, causal: bool) -> Result<Self> {
+        Self::with_mask(d, if causal { Mask::Causal } else { Mask::Dense })
+    }
+
+    /// Parameters for head dimension `d` with an explicit [`Mask`].
+    pub fn with_mask(d: usize, mask: Mask) -> Result<Self> {
+        if d == 0 {
+            bail!("attention head dimension d must be ≥ 1: d = 0 gives \
+                   scale = 1/sqrt(0) = inf and NaN outputs");
+        }
+        Ok(AttnParams { mask, scale: 1.0 / (d as f32).sqrt() })
     }
 }
 
@@ -73,7 +105,8 @@ impl AttnParams {
 pub struct ForwardResult {
     /// (bh, n, d) attention output.
     pub output: Tensor,
-    /// (bh, n) row-wise log-sum-exp — the paper's "LES" record.
+    /// (bh, n) row-wise log-sum-exp — the paper's "LES" record.  A
+    /// fully-masked query row carries the `-inf` sentinel.
     pub lse: Tensor,
 }
 
@@ -98,13 +131,17 @@ fn dims(q: &Tensor, k: &Tensor, v: &Tensor) -> (usize, usize, usize) {
     (bh, n, d)
 }
 
-/// Fused scale → causal-mask → softmax pass over raw scores, row-parallel
-/// on the backend pool.  Writes the row-wise log-sum-exp into `lse`
-/// (pass a scratch slice if the caller doesn't need it).  Element-for-
-/// element this performs the same operations in the same order as the
-/// unfused `scale` + `apply_causal_mask` + `softmax_lastdim` sequence, so
-/// it is bitwise-stable across backends and thread counts.
-fn finish_scores(s: &mut Tensor, lse: &mut [f32], p: AttnParams,
+/// Fused scale → mask → softmax pass over raw scores, row-parallel on
+/// the backend pool.  Writes the row-wise log-sum-exp into `lse` (pass
+/// a scratch slice if the caller doesn't need it).  Masked logits
+/// become `-inf`; a row whose max is still `-inf` after masking has no
+/// live key and is written as exact zeros with the `-inf` LSE sentinel
+/// (softmaxing such a row would divide uniform `exp(0)` weights over
+/// forbidden keys).  Element-for-element this performs the same
+/// operations in the same order as the unfused `scale` + mask +
+/// `softmax_lastdim` sequence, so it is bitwise-stable across backends
+/// and thread counts.
+fn finish_scores(s: &mut Tensor, lse: &mut [f32], p: &AttnParams,
                  be: &dyn Backend) {
     let (bh, nq, nk) = match *s.shape() {
         [a, b, c] => (a, b, c),
@@ -130,13 +167,21 @@ fn finish_scores(s: &mut Tensor, lse: &mut [f32], p: AttnParams,
             {
                 let i = (r0 + ri) % nq; // query position within the batch
                 for (j, x) in row.iter_mut().enumerate() {
-                    *x = if p.causal && j > i {
-                        NEG_INF
-                    } else {
+                    *x = if p.mask.live(i, j) {
                         *x * p.scale
+                    } else {
+                        f32::NEG_INFINITY
                     };
                 }
                 let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                if m == f32::NEG_INFINITY {
+                    // fully-masked row: zero weights + LSE sentinel
+                    for x in row.iter_mut() {
+                        *x = 0.0;
+                    }
+                    *lse1 = f32::NEG_INFINITY;
+                    continue;
+                }
                 let mut sum = 0.0;
                 for x in row.iter_mut() {
                     *x = (*x - m).exp();
@@ -153,20 +198,43 @@ fn finish_scores(s: &mut Tensor, lse: &mut [f32], p: AttnParams,
     be.run_tasks(tasks);
 }
 
+/// The mask roster `witness_self_check` sweeps: dense, causal, a
+/// sliding window, and a block-sparse layout whose query block-row 2
+/// is fully dead — so the fully-masked-row sentinel path is exercised
+/// through every backend on every startup check.
+fn witness_masks(n: usize) -> Result<Vec<Mask>> {
+    let nb = 4;
+    let block = n / nb;
+    let mut live = vec![false; nb * nb];
+    for bj in 0..nb {
+        live[bj] = bj == 0; //            row 0: first block only
+        live[nb + bj] = bj < 2; //        row 1: first two blocks
+        live[3 * nb + bj] = true; //      row 3: fully live
+    } //                                  row 2: fully masked
+    Ok(vec![
+        Mask::Dense,
+        Mask::Causal,
+        Mask::SlidingWindow { w: 5 },
+        Mask::BlockSparse { layout: BlockLayout::new(block, nb, live)? },
+    ])
+}
+
 /// Run the full algorithm witness through **every** available backend
 /// (the `exec::roster` of `opts`, not just the configured one) and
 /// cross-check the results pairwise, so a failure names the diverging
 /// pair.  Each backend's streaming forward/backward is additionally
-/// anchored against the monolithic Scalar oracle.  Pure-f32 backends
-/// must agree with each other to ~1 ulp (the determinism contract);
-/// pairs involving the mixed-precision backend get a loose
-/// bf16-derived bound — the point there is catching a broken kernel,
-/// not re-proving the quantization error analysis (which lives in
-/// `rust/tests/exec_backend.rs`).  `spark train` runs this at startup
-/// so a miscompiled or misconfigured backend aborts before any long
-/// run (the witness is what grounds trust in the fused artifacts'
-/// dataflow).
-pub fn witness_self_check(opts: ExecOptions) -> anyhow::Result<()> {
+/// anchored against the monolithic Scalar oracle.  The sweep covers
+/// every [`Mask`] variant, including a block-sparse layout with a
+/// fully-masked query block-row (the zero-output/`-inf`-LSE sentinel
+/// contract).  Pure-f32 backends must agree with each other to ~1 ulp
+/// (the determinism contract); pairs involving the mixed-precision
+/// backend get a loose bf16-derived bound — the point there is
+/// catching a broken kernel, not re-proving the quantization error
+/// analysis (which lives in `rust/tests/exec_backend.rs`).  `spark
+/// train` runs this at startup so a miscompiled or misconfigured
+/// backend aborts before any long run (the witness is what grounds
+/// trust in the fused artifacts' dataflow).
+pub fn witness_self_check(opts: ExecOptions) -> Result<()> {
     let backends = exec::roster(opts);
     let (bh, n, d) = (2usize, 32usize, 8usize);
     let mut rng = crate::tensor::Rng::new(0xBEAC);
@@ -176,17 +244,18 @@ pub fn witness_self_check(opts: ExecOptions) -> anyhow::Result<()> {
     let dout = Tensor::randn(vec![bh, n, d], &mut rng);
     // loose sanity bounds for anything involving the mixed backend
     let (mixed_ftol, mixed_btol) = (0.5f32, 1.0f32);
-    for causal in [false, true] {
-        let p = AttnParams::new(d, causal);
-        let oracle = mha_forward(&q, &k, &v, p, &exec::Scalar);
-        let oracle_bwd = mha_backward(&q, &k, &v, &dout, p, &exec::Scalar);
+    for mask in witness_masks(n)? {
+        let label = mask.label();
+        let p = AttnParams::with_mask(d, mask)?;
+        let oracle = mha_forward(&q, &k, &v, &p, &exec::Scalar);
+        let oracle_bwd = mha_backward(&q, &k, &v, &dout, &p, &exec::Scalar);
         let mut results: Vec<(String, Precision, ForwardResult, Grads)> =
             Vec::new();
         for be in &backends {
-            let fwd = mha_forward_streaming(&q, &k, &v, p, 8, 16,
+            let fwd = mha_forward_streaming(&q, &k, &v, &p, 8, 16,
                                             be.as_ref());
             let bwd = mha_backward_streaming(&q, &k, &v, &dout,
-                                             &oracle.lse, p, 8, 16,
+                                             &oracle.lse, &p, 8, 16,
                                              be.as_ref());
             results.push((be.name(), be.precision(), fwd, bwd));
         }
@@ -199,18 +268,18 @@ pub fn witness_self_check(opts: ExecOptions) -> anyhow::Result<()> {
             };
             let err = fwd.output.max_abs_diff(&oracle.output);
             if err > ftol {
-                anyhow::bail!("backend {name}: streaming forward \
-                               deviates from the oracle (causal={causal}, \
-                               max err {err}, tol {ftol})");
+                bail!("backend {name}: streaming forward deviates from \
+                       the oracle (mask={label}, max err {err}, \
+                       tol {ftol})");
             }
             for (gname, g, w) in [("dq", &bwd.dq, &oracle_bwd.dq),
                                   ("dk", &bwd.dk, &oracle_bwd.dk),
                                   ("dv", &bwd.dv, &oracle_bwd.dv)] {
                 let err = g.max_abs_diff(w);
                 if err > btol {
-                    anyhow::bail!("backend {name}: streaming backward \
-                                   {gname} deviates (causal={causal}, \
-                                   max err {err}, tol {btol})");
+                    bail!("backend {name}: streaming backward {gname} \
+                           deviates (mask={label}, max err {err}, \
+                           tol {btol})");
                 }
             }
         }
@@ -226,10 +295,10 @@ pub fn witness_self_check(opts: ExecOptions) -> anyhow::Result<()> {
                 let err = results[i].2.output
                     .max_abs_diff(&results[j].2.output);
                 if err > ftol {
-                    anyhow::bail!("witness self-check: backends {} and {} \
-                                   diverge on the streaming forward \
-                                   (causal={causal}, max err {err})",
-                                  results[i].0, results[j].0);
+                    bail!("witness self-check: backends {} and {} \
+                           diverge on the streaming forward \
+                           (mask={label}, max err {err})",
+                          results[i].0, results[j].0);
                 }
                 for (gname, gi, gj) in
                     [("dq", &results[i].3.dq, &results[j].3.dq),
@@ -238,10 +307,10 @@ pub fn witness_self_check(opts: ExecOptions) -> anyhow::Result<()> {
                 {
                     let err = gi.max_abs_diff(gj);
                     if err > btol {
-                        anyhow::bail!("witness self-check: backends {} \
-                                       and {} diverge on streaming {gname} \
-                                       (causal={causal}, max err {err})",
-                                      results[i].0, results[j].0);
+                        bail!("witness self-check: backends {} and {} \
+                               diverge on streaming {gname} \
+                               (mask={label}, max err {err})",
+                              results[i].0, results[j].0);
                     }
                 }
             }
@@ -250,10 +319,62 @@ pub fn witness_self_check(opts: ExecOptions) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Validate and exercise the *configured* mask (from `[attention]` or
+/// `--mask`/`--window`) before a long run.  Builds the spec at a small
+/// witness length compatible with it (block-sparse needs
+/// `block | n`), then checks streaming-vs-oracle forward parity under
+/// the configured backend at the configured streaming block shape
+/// (clamped to divisors of the witness length).  `spark train` calls
+/// this at startup so a typo'd mask or an impossible block shape
+/// aborts before step 0, with the mask named in the error.  Very large
+/// block-sparse blocks (witness length > 4096) get construction
+/// validation only — the quadratic oracle would cost more than it
+/// assures.
+pub fn configured_mask_self_check(spec: MaskSpec, block_q: usize,
+                                  block_k: usize, opts: ExecOptions)
+                                  -> Result<()> {
+    if block_q == 0 || block_k == 0 {
+        bail!("streaming blocks must be ≥ 1 (got block_q={block_q}, \
+               block_k={block_k}); a zero block is rejected, not \
+               clamped");
+    }
+    let n = match spec {
+        MaskSpec::BlockSparse { block, .. } => block * 4,
+        _ => 32,
+    };
+    let mask = spec.build(n)?;
+    let (bh, d) = (2usize, 8usize);
+    let p = AttnParams::with_mask(d, mask)?;
+    if n > 4096 {
+        return Ok(());
+    }
+    let mut rng = crate::tensor::Rng::new(0xC0F1);
+    let q = Tensor::randn(vec![bh, n, d], &mut rng);
+    let k = Tensor::randn(vec![bh, n, d], &mut rng);
+    let v = Tensor::randn(vec![bh, n, d], &mut rng);
+    // streaming requires dividing blocks: clamp each to the largest
+    // divisor of the witness length that does not exceed it
+    let clamp = |b: usize| (1..=b.min(n)).rev().find(|x| n % x == 0)
+        .unwrap_or(1);
+    let (bq, bk) = (clamp(block_q), clamp(block_k));
+    let be = opts.build();
+    let oracle = mha_forward(&q, &k, &v, &p, &exec::Scalar);
+    let got = mha_forward_streaming(&q, &k, &v, &p, bq, bk, be.as_ref());
+    let tol = if be.precision() == Precision::Mixed { 0.5 } else { 1e-4 };
+    let err = got.output.max_abs_diff(&oracle.output);
+    if err > tol {
+        bail!("configured mask {}: streaming forward deviates from the \
+               oracle under backend {} (blocks {bq}×{bk}, max err {err}, \
+               tol {tol})", spec.label(), be.name());
+    }
+    Ok(())
+}
+
 /// Oracle forward: materialises S and P (the unfused dataflow), f32 math.
-pub fn mha_forward(q: &Tensor, k: &Tensor, v: &Tensor, p: AttnParams,
+pub fn mha_forward(q: &Tensor, k: &Tensor, v: &Tensor, p: &AttnParams,
                    be: &dyn Backend) -> ForwardResult {
     let (bh, n, _d) = dims(q, k, v);
+    p.mask.check_n(n);
     let mut s = be.batch_matmul_nt(q, k);
     let mut lse = vec![0.0f32; bh * n];
     finish_scores(&mut s, &mut lse, p, be);
@@ -268,13 +389,26 @@ pub fn mha_forward(q: &Tensor, k: &Tensor, v: &Tensor, p: AttnParams,
 /// Iterates K/V in `block_k` tiles per `block_q` row tile, carrying
 /// (m, l, acc) and rescaling by `exp(m_prev − m_cur)` — Equation 3.
 /// Tiles are independent `(bh, q-block)` units fanned out over the
-/// backend's pool.  Under a mixed-precision backend, Q/K/V are
-/// quantized to bf16 once here and the P tiles are quantized before
-/// the P·V accumulation (see the module docs); statistics and
-/// accumulators stay f32.
+/// backend's pool.  The enumeration is skip-aware: key tiles outside
+/// the mask ([`Mask::tile_live`]) are never streamed, and a query tile
+/// with no live key tile is never packed into a task at all — its
+/// rows keep the pre-initialised zero output and `-inf` LSE sentinel.
+/// Task builders declare only the live write-sets, so the debug-build
+/// race detector covers exactly the scheduled work.  Under a
+/// mixed-precision backend, Q/K/V are quantized to bf16 once here and
+/// the P tiles are quantized before the P·V accumulation (see the
+/// module docs); statistics and accumulators stay f32.
+///
+/// `block_q`/`block_k` must be ≥ 1 (0 is rejected, not clamped);
+/// values larger than `n` are clamped down to `n`.
 pub fn mha_forward_streaming(q: &Tensor, k: &Tensor, v: &Tensor,
-                             p: AttnParams, block_q: usize, block_k: usize,
-                             be: &dyn Backend) -> ForwardResult {
+                             p: &AttnParams, block_q: usize,
+                             block_k: usize, be: &dyn Backend)
+                             -> ForwardResult {
+    assert!(block_q >= 1 && block_k >= 1,
+            "streaming blocks must be ≥ 1 (got block_q={block_q}, \
+             block_k={block_k}); a zero block is a misconfiguration, \
+             not a request for the smallest tile");
     let mixed = be.precision() == Precision::Mixed;
     let qx;
     let kx;
@@ -288,6 +422,7 @@ pub fn mha_forward_streaming(q: &Tensor, k: &Tensor, v: &Tensor,
         (q, k, v)
     };
     let (bh, n, d) = dims(q, k, v);
+    p.mask.check_n(n);
     let bq = block_q.min(n).max(1);
     let bk = block_k.min(n).max(1);
     assert!(n % bq == 0 && n % bk == 0,
@@ -296,7 +431,9 @@ pub fn mha_forward_streaming(q: &Tensor, k: &Tensor, v: &Tensor,
     let kd = k.data();
     let vd = v.data();
     let mut out = vec![0.0f32; bh * n * d];
-    let mut lse = vec![0.0f32; bh * n];
+    // pre-seeded with the fully-masked sentinel: rows of query tiles
+    // that are never scheduled keep -inf here and 0.0 in `out`
+    let mut lse = vec![f32::NEG_INFINITY; bh * n];
     {
         let mut orest: &mut [f32] = &mut out;
         let mut lrest: &mut [f32] = &mut lse;
@@ -305,6 +442,11 @@ pub fn mha_forward_streaming(q: &Tensor, k: &Tensor, v: &Tensor,
             for iq in (0..n).step_by(bq) {
                 let otile = exec::carve(&mut orest, bq * d);
                 let ltile = exec::carve(&mut lrest, bq);
+                if !(0..n).step_by(bk)
+                    .any(|ik| p.mask.tile_live(iq, bq, ik, bk))
+                {
+                    continue; // no live key tile: never becomes a task
+                }
                 exec::pool::declare_task_writes(&[
                     exec::pool::span(&*otile),
                     exec::pool::span(&*ltile),
@@ -323,23 +465,27 @@ pub fn mha_forward_streaming(q: &Tensor, k: &Tensor, v: &Tensor,
     }
 }
 
-/// One `(bh, q-block)` tile of the streaming forward: sweeps K/V blocks
-/// carrying per-row (m, l) statistics and a rescaled accumulator.
-/// `mixed` quantizes each P value to bf16 before it enters the P·V
-/// accumulation (its operand role in the second GEMM); the (m, l)
+/// One `(bh, q-block)` tile of the streaming forward: sweeps the
+/// mask-live K/V blocks carrying per-row (m, l) statistics and a
+/// rescaled accumulator.  Tiles with no live element are skipped
+/// before any packing (same predicate as the builder's task
+/// enumeration).  A row that never sees a live key keeps `l = 0` and
+/// is finished as exact zeros + `-inf` LSE instead of dividing into
+/// NaN.  `mixed` quantizes each P value to bf16 before it enters the
+/// P·V accumulation (its operand role in the second GEMM); the (m, l)
 /// statistics and the accumulator itself stay f32.
 fn streaming_fwd_tile(qd: &[f32], kd: &[f32], vd: &[f32], otile: &mut [f32],
-                      ltile: &mut [f32], p: AttnParams, b: usize, iq: usize,
-                      bq: usize, bk: usize, n: usize, d: usize,
+                      ltile: &mut [f32], p: &AttnParams, b: usize,
+                      iq: usize, bq: usize, bk: usize, n: usize, d: usize,
                       mixed: bool) {
     let mut m = vec![f32::NEG_INFINITY; bq];
     let mut l = vec![0.0f32; bq];
     let mut acc = vec![0.0f32; bq * d];
     for ik in (0..n).step_by(bk) {
-        if p.causal && ik > iq + bq - 1 {
-            continue; // fully-masked tile: skipped, like the kernel
+        if !p.mask.tile_live(iq, bq, ik, bk) {
+            continue; // provably outside the mask: never packed
         }
-        // s_tile = Q_tile · K_tileᵀ · scale  (+ causal mask)
+        // s_tile = Q_tile · K_tileᵀ · scale  (masked → -inf)
         for r in 0..bq {
             let qrow = &qd[(b * n + iq + r) * d..(b * n + iq + r + 1) * d];
             let mut srow = vec![0.0f32; bk];
@@ -350,14 +496,18 @@ fn streaming_fwd_tile(qd: &[f32], kd: &[f32], vd: &[f32], otile: &mut [f32],
                 for (x, y) in qrow.iter().zip(krow) {
                     dot += x * y;
                 }
-                *sv = if p.causal && ik + c > iq + r {
-                    NEG_INF
-                } else {
+                *sv = if p.mask.live(iq + r, ik + c) {
                     dot * p.scale
+                } else {
+                    f32::NEG_INFINITY
                 };
             }
             // online softmax update for row r
             let m_cur = srow.iter().cloned().fold(m[r], f32::max);
+            if m_cur == f32::NEG_INFINITY {
+                continue; // row fully masked so far: exp(-inf − -inf)
+                          // is NaN, so skip the update entirely
+            }
             let alpha = if m[r] == f32::NEG_INFINITY {
                 0.0
             } else {
@@ -387,21 +537,31 @@ fn streaming_fwd_tile(qd: &[f32], kd: &[f32], vd: &[f32], otile: &mut [f32],
     for r in 0..bq {
         let arow = &acc[r * d..(r + 1) * d];
         let orow = &mut otile[r * d..(r + 1) * d];
-        for (o, &a) in orow.iter_mut().zip(arow) {
-            *o = a / l[r];
+        if l[r] == 0.0 {
+            // no live key anywhere in this row (l ≥ 1 otherwise: the
+            // max element contributes exp(0) = 1): sentinel contract
+            for o in orow.iter_mut() {
+                *o = 0.0;
+            }
+            ltile[r] = f32::NEG_INFINITY;
+        } else {
+            for (o, &a) in orow.iter_mut().zip(arow) {
+                *o = a / l[r];
+            }
+            ltile[r] = m[r] + l[r].ln();
         }
-        ltile[r] = m[r] + l[r].ln();
     }
 }
 
 /// Oracle backward (Equation 4), recomputing the forward internally.
 pub fn mha_backward(q: &Tensor, k: &Tensor, v: &Tensor, dout: &Tensor,
-                    p: AttnParams, be: &dyn Backend) -> Grads {
+                    p: &AttnParams, be: &dyn Backend) -> Grads {
     let (bh, n, _d) = dims(q, k, v);
+    p.mask.check_n(n);
     let mut s = be.batch_matmul_nt(q, k);
     let mut lse_scratch = vec![0.0f32; bh * n];
     finish_scores(&mut s, &mut lse_scratch, p, be);
-    let pm = s; // P
+    let pm = s; // P (fully-masked rows are exact zeros → zero grads)
 
     // dV = Pᵀ · dO
     let dv = be.batch_matmul_tn(&pm, dout);
@@ -436,13 +596,26 @@ pub fn mha_backward(q: &Tensor, k: &Tensor, v: &Tensor, dout: &Tensor,
 }
 
 /// Matmul FLOPs of one MHA (Fig 10/11 TFLOPs denominator; mirrors
-/// `python/compile/kernels/ref.py::attention_flops`).
+/// `python/compile/kernels/ref.py::attention_flops`).  Coarse paper
+/// accounting: dense `n²` with a flat ÷2 for causal.  For exact
+/// per-mask counts use [`attention_flops_masked`].
 pub fn attention_flops(bh: usize, n: usize, d: usize, causal: bool,
                        backward: bool) -> u64 {
     let matmuls: u64 = if backward { 5 } else { 2 };
     let flops = matmuls * 2 * (n as u64) * (n as u64) * (d as u64)
         * (bh as u64);
     if causal { flops / 2 } else { flops }
+}
+
+/// Exact matmul FLOPs of one masked MHA: every GEMM touches only the
+/// mask's live score elements ([`Mask::live_elements`]), so dense
+/// reproduces [`attention_flops`] and a sliding window scales as
+/// `n·w` instead of `n²` — the per-mask TFLOPs denominator for the
+/// bench rows.
+pub fn attention_flops_masked(bh: usize, n: usize, d: usize, mask: &Mask,
+                              backward: bool) -> u64 {
+    let matmuls: u64 = if backward { 5 } else { 2 };
+    matmuls * 2 * (mask.live_elements(n) as u64) * (d as u64) * (bh as u64)
 }
 
 #[cfg(test)]
@@ -464,7 +637,8 @@ mod tests {
         // q = 0 → uniform softmax → output = column mean of V
         let (_, k, v) = rand_qkv(1, 8, 4, 1);
         let q = Tensor::zeros(vec![1, 8, 4]);
-        let r = mha_forward(&q, &k, &v, AttnParams::new(4, false), &Scalar);
+        let p = AttnParams::new(4, false).unwrap();
+        let r = mha_forward(&q, &k, &v, &p, &Scalar);
         let vd = v.data();
         for c in 0..4 {
             let mean: f32 = (0..8).map(|i| vd[i * 4 + c]).sum::<f32>() / 8.0;
@@ -477,7 +651,8 @@ mod tests {
     #[test]
     fn causal_first_row_copies_v0() {
         let (q, k, v) = rand_qkv(2, 16, 8, 2);
-        let r = mha_forward(&q, &k, &v, AttnParams::new(8, true), &Scalar);
+        let p = AttnParams::new(8, true).unwrap();
+        let r = mha_forward(&q, &k, &v, &p, &Scalar);
         for b in 0..2 {
             for c in 0..8 {
                 assert!((r.output.at(&[b, 0, c]) - v.at(&[b, 0, c])).abs()
@@ -487,12 +662,35 @@ mod tests {
     }
 
     #[test]
+    fn d_zero_is_rejected_at_construction() {
+        let err = AttnParams::new(0, false).unwrap_err().to_string();
+        assert!(err.contains("d = 0"), "{err}");
+        assert!(AttnParams::with_mask(0, Mask::Causal).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "streaming blocks must be ≥ 1")]
+    fn zero_block_q_is_rejected_not_clamped() {
+        let (q, k, v) = rand_qkv(1, 8, 4, 1);
+        let p = AttnParams::new(4, false).unwrap();
+        mha_forward_streaming(&q, &k, &v, &p, 0, 8, &Scalar);
+    }
+
+    #[test]
+    #[should_panic(expected = "streaming blocks must be ≥ 1")]
+    fn zero_block_k_is_rejected_not_clamped() {
+        let (q, k, v) = rand_qkv(1, 8, 4, 1);
+        let p = AttnParams::new(4, false).unwrap();
+        mha_forward_streaming(&q, &k, &v, &p, 8, 0, &Scalar);
+    }
+
+    #[test]
     fn streaming_matches_oracle_full() {
         let (q, k, v) = rand_qkv(2, 32, 8, 3);
-        let p = AttnParams::new(8, false);
-        let a = mha_forward(&q, &k, &v, p, &Scalar);
+        let p = AttnParams::new(8, false).unwrap();
+        let a = mha_forward(&q, &k, &v, &p, &Scalar);
         for (bq, bk) in [(32, 32), (8, 8), (16, 4), (4, 16), (1, 1)] {
-            let b = mha_forward_streaming(&q, &k, &v, p, bq, bk, &Scalar);
+            let b = mha_forward_streaming(&q, &k, &v, &p, bq, bk, &Scalar);
             assert!(a.output.max_abs_diff(&b.output) < 1e-4,
                     "blocks ({bq},{bk})");
             assert!(a.lse.max_abs_diff(&b.lse) < 1e-4);
@@ -502,23 +700,130 @@ mod tests {
     #[test]
     fn streaming_matches_oracle_causal() {
         let (q, k, v) = rand_qkv(2, 32, 8, 4);
-        let p = AttnParams::new(8, true);
-        let a = mha_forward(&q, &k, &v, p, &Scalar);
+        let p = AttnParams::new(8, true).unwrap();
+        let a = mha_forward(&q, &k, &v, &p, &Scalar);
         for (bq, bk) in [(8, 8), (16, 8), (8, 16)] {
-            let b = mha_forward_streaming(&q, &k, &v, p, bq, bk, &Scalar);
+            let b = mha_forward_streaming(&q, &k, &v, &p, bq, bk, &Scalar);
             assert!(a.output.max_abs_diff(&b.output) < 1e-4,
                     "blocks ({bq},{bk})");
         }
     }
 
     #[test]
+    fn streaming_matches_oracle_sliding_window() {
+        let (q, k, v) = rand_qkv(2, 32, 8, 14);
+        for w in [1usize, 3, 8, 40] {
+            let p = AttnParams::with_mask(8, Mask::SlidingWindow { w })
+                .unwrap();
+            let a = mha_forward(&q, &k, &v, &p, &Scalar);
+            for (bq, bk) in [(8, 8), (16, 4), (4, 16), (32, 32)] {
+                let b =
+                    mha_forward_streaming(&q, &k, &v, &p, bq, bk, &Scalar);
+                assert!(a.output.max_abs_diff(&b.output) < 1e-4,
+                        "w={w} blocks ({bq},{bk})");
+                assert!(a.lse.max_abs_diff(&b.lse) < 1e-4, "w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_matches_oracle_block_sparse() {
+        let (q, k, v) = rand_qkv(2, 32, 8, 15);
+        let layout = BlockLayout::random(8, 4, 40, 3).unwrap();
+        let p = AttnParams::with_mask(8, Mask::BlockSparse { layout })
+            .unwrap();
+        let a = mha_forward(&q, &k, &v, &p, &Scalar);
+        for (bq, bk) in [(8, 8), (16, 8), (4, 4), (32, 16)] {
+            let b = mha_forward_streaming(&q, &k, &v, &p, bq, bk, &Scalar);
+            assert!(a.output.max_abs_diff(&b.output) < 1e-4,
+                    "blocks ({bq},{bk})");
+            assert!(a.lse.max_abs_diff(&b.lse) < 1e-4);
+        }
+    }
+
+    /// The headline bugfix regression: a fully-masked row must be
+    /// exact zeros with an LSE of -inf — not uniform attention over
+    /// forbidden keys (fused path) and not NaN from l = 0 (streaming
+    /// path) — bitwise-identically across backends and thread counts.
+    #[test]
+    fn fully_masked_rows_are_zeros_with_lse_sentinel() {
+        let (q, k, v) = rand_qkv(2, 16, 8, 7);
+        // window of width 0 masks every (i, j): every row is the edge
+        let p = AttnParams::with_mask(8, Mask::SlidingWindow { w: 0 })
+            .unwrap();
+        let fused = mha_forward(&q, &k, &v, &p, &Scalar);
+        let stream = mha_forward_streaming(&q, &k, &v, &p, 4, 8, &Scalar);
+        for r in [&fused, &stream] {
+            for &x in r.output.data() {
+                assert_eq!(x.to_bits(), 0.0f32.to_bits(),
+                           "output must be exact zeros, got {x}");
+            }
+            for &x in r.lse.data() {
+                assert_eq!(x, f32::NEG_INFINITY, "LSE sentinel");
+            }
+        }
+        // bitwise across backends and thread counts
+        for threads in [1usize, 2, 8] {
+            for be in [&Blocked::new(threads) as &dyn Backend,
+                       &exec::Simd::new(threads, Precision::F32)] {
+                let f = mha_forward(&q, &k, &v, &p, be);
+                let s = mha_forward_streaming(&q, &k, &v, &p, 4, 8, be);
+                assert_eq!(fused.output.data(), f.output.data());
+                assert_eq!(fused.lse.data(), f.lse.data());
+                assert_eq!(stream.output.data(), s.output.data());
+                assert_eq!(stream.lse.data(), s.lse.data());
+            }
+        }
+        // the oracle backward of an all-masked pattern is zero grads
+        let dout = Tensor::full(vec![2, 16, 8], 1.0);
+        let g = mha_backward(&q, &k, &v, &dout, &p, &Scalar);
+        for t in [&g.dq, &g.dk, &g.dv] {
+            for &x in t.data() {
+                assert_eq!(x, 0.0, "masked rows must carry zero grads");
+            }
+        }
+    }
+
+    /// Same contract reached through a `BlockSparse` row with no live
+    /// blocks, with the other rows still live (mixed live/dead rows in
+    /// one launch).
+    #[test]
+    fn block_sparse_empty_row_is_zero_others_match_oracle() {
+        let (q, k, v) = rand_qkv(1, 16, 4, 8);
+        // 4×4 grid of 4-wide blocks; query block-row 1 fully dead
+        let mut live = vec![true; 16];
+        for bj in 0..4 {
+            live[4 + bj] = false;
+        }
+        let layout = BlockLayout::new(4, 4, live).unwrap();
+        let p = AttnParams::with_mask(4, Mask::BlockSparse { layout })
+            .unwrap();
+        let fused = mha_forward(&q, &k, &v, &p, &Scalar);
+        let stream = mha_forward_streaming(&q, &k, &v, &p, 4, 4, &Scalar);
+        for r in [&fused, &stream] {
+            for i in 4..8 {
+                for c in 0..4 {
+                    assert_eq!(r.output.at(&[0, i, c]), 0.0,
+                               "dead row {i} must be zero");
+                }
+                assert_eq!(r.lse.at(&[0, i]), f32::NEG_INFINITY);
+            }
+            for i in (0..4).chain(8..16) {
+                assert!(r.lse.at(&[0, i]).is_finite(),
+                        "live row {i} must have finite LSE");
+            }
+        }
+        assert!(fused.output.max_abs_diff(&stream.output) < 1e-4);
+    }
+
+    #[test]
     fn backends_agree_bitwise_on_forward() {
         let (q, k, v) = rand_qkv(3, 32, 16, 9);
         for causal in [false, true] {
-            let p = AttnParams::new(16, causal);
-            let a = mha_forward(&q, &k, &v, p, &Scalar);
+            let p = AttnParams::new(16, causal).unwrap();
+            let a = mha_forward(&q, &k, &v, &p, &Scalar);
             for threads in [1usize, 2, 8] {
-                let b = mha_forward(&q, &k, &v, p, &Blocked::new(threads));
+                let b = mha_forward(&q, &k, &v, &p, &Blocked::new(threads));
                 assert_eq!(a.output.data(), b.output.data(),
                            "causal={causal} threads={threads}");
                 assert_eq!(a.lse.data(), b.lse.data());
@@ -529,11 +834,11 @@ mod tests {
     #[test]
     fn streaming_thread_count_invariant() {
         let (q, k, v) = rand_qkv(2, 64, 8, 10);
-        let p = AttnParams::new(8, true);
-        let base = mha_forward_streaming(&q, &k, &v, p, 16, 16,
+        let p = AttnParams::new(8, true).unwrap();
+        let base = mha_forward_streaming(&q, &k, &v, &p, 16, 16,
                                          &Blocked::new(1));
         for threads in [2usize, 8] {
-            let got = mha_forward_streaming(&q, &k, &v, p, 16, 16,
+            let got = mha_forward_streaming(&q, &k, &v, &p, 16, 16,
                                             &Blocked::new(threads));
             assert_eq!(base.output.data(), got.output.data(),
                        "threads={threads}");
@@ -544,12 +849,12 @@ mod tests {
     #[test]
     fn backward_matches_finite_differences() {
         let (q, k, v) = rand_qkv(1, 6, 4, 5);
-        let p = AttnParams::new(4, false);
+        let p = AttnParams::new(4, false).unwrap();
         let dout = Tensor::full(vec![1, 6, 4], 1.0);
-        let g = mha_backward(&q, &k, &v, &dout, p, &Scalar);
+        let g = mha_backward(&q, &k, &v, &dout, &p, &Scalar);
         let eps = 1e-3f32;
         let f = |q: &Tensor, k: &Tensor, v: &Tensor| -> f32 {
-            mha_forward(q, k, v, p, &Scalar).output.data().iter().sum()
+            mha_forward(q, k, v, &p, &Scalar).output.data().iter().sum()
         };
         // spot-check several coordinates of dq, dk, dv
         for (which, grad) in [("q", &g.dq), ("k", &g.dk), ("v", &g.dv)] {
@@ -589,17 +894,17 @@ mod tests {
     fn simd_f32_forward_is_bitwise_scalar() {
         let (q, k, v) = rand_qkv(2, 32, 8, 11);
         for causal in [false, true] {
-            let p = AttnParams::new(8, causal);
-            let want = mha_forward(&q, &k, &v, p, &Scalar);
+            let p = AttnParams::new(8, causal).unwrap();
+            let want = mha_forward(&q, &k, &v, &p, &Scalar);
             for threads in [1usize, 2, 8] {
                 let be = exec::Simd::new(threads, exec::Precision::F32);
-                let got = mha_forward(&q, &k, &v, p, &be);
+                let got = mha_forward(&q, &k, &v, &p, &be);
                 assert_eq!(want.output.data(), got.output.data(),
                            "causal={causal} threads={threads}");
                 assert_eq!(want.lse.data(), got.lse.data());
-                let stream = mha_forward_streaming(&q, &k, &v, p, 8, 8,
+                let stream = mha_forward_streaming(&q, &k, &v, &p, 8, 8,
                                                    &be);
-                let stream_s = mha_forward_streaming(&q, &k, &v, p, 8, 8,
+                let stream_s = mha_forward_streaming(&q, &k, &v, &p, 8, 8,
                                                      &Scalar);
                 assert_eq!(stream_s.output.data(), stream.output.data());
             }
@@ -618,11 +923,11 @@ mod tests {
         let vmax = v.data().iter().fold(0.0f32, |m, &x| m.max(x.abs()));
         let tol = 16.0 * crate::tensor::bf16::EPSILON * (1.0 + vmax);
         for causal in [false, true] {
-            let p = AttnParams::new(8, causal);
-            let want = mha_forward_streaming(&qq, &kq, &vq, p, 8, 8,
+            let p = AttnParams::new(8, causal).unwrap();
+            let want = mha_forward_streaming(&qq, &kq, &vq, &p, 8, 8,
                                              &Scalar);
             let be = exec::Simd::new(2, exec::Precision::Mixed);
-            let got = mha_forward_streaming(&q, &k, &v, p, 8, 8, &be);
+            let got = mha_forward_streaming(&q, &k, &v, &p, 8, 8, &be);
             let err = got.output.max_abs_diff(&want.output);
             assert!(err < tol, "causal={causal}: err {err} ≥ tol {tol}");
         }
@@ -631,7 +936,8 @@ mod tests {
     #[test]
     fn lse_is_finite() {
         let (q, k, v) = rand_qkv(1, 16, 8, 6);
-        let r = mha_forward(&q, &k, &v, AttnParams::new(8, false), &Scalar);
+        let p = AttnParams::new(8, false).unwrap();
+        let r = mha_forward(&q, &k, &v, &p, &Scalar);
         for &x in r.lse.data() {
             assert!(x.is_finite());
         }
@@ -644,5 +950,21 @@ mod tests {
         // backward = 5 matmuls vs forward 2
         assert_eq!(attention_flops(1, 128, 64, false, true) * 2,
                    attention_flops(1, 128, 64, false, false) * 5);
+    }
+
+    #[test]
+    fn masked_flops_are_exact() {
+        // dense reproduces the coarse accounting exactly
+        assert_eq!(attention_flops_masked(4, 256, 64, &Mask::Dense, false),
+                   attention_flops(4, 256, 64, false, false));
+        // causal is n(n+1)/2 live elements — exact, not the flat ÷2
+        assert_eq!(attention_flops_masked(1, 4, 2, &Mask::Causal, false),
+                   2 * 2 * 10 * 2);
+        // a window of width w ≪ n is linear in n
+        let w = Mask::SlidingWindow { w: 4 };
+        let f1 = attention_flops_masked(1, 256, 8, &w, false);
+        let f2 = attention_flops_masked(1, 512, 8, &w, false);
+        assert!(f2 < 2 * f1 + 8 * 4 * 4 * 2 * 2,
+                "window flops must scale ~linearly: {f1} → {f2}");
     }
 }

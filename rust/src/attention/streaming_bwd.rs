@@ -17,6 +17,15 @@
 //! fixed by the block sizes alone, keeping results bitwise-deterministic
 //! across thread counts.
 //!
+//! Like the streaming forward, both grids are *skip-aware* under a
+//! structured [`super::Mask`]: inner sweeps skip score tiles outside
+//! the mask ([`super::Mask::tile_live`]), and an outer tile whose
+//! entire sweep is dead (a q-tile with no live k-tile, or a k-tile no
+//! live q-tile attends to) is never packed into a pool task — its
+//! gradient slice keeps the pre-initialised zeros, which is exact: a
+//! fully-masked row/column receives no gradient.  Task builders
+//! declare only the live write-sets for the debug-build race detector.
+//!
 //! Property tests pin this block-streamed backward against the monolithic
 //! oracle for arbitrary tilings — independent evidence that the
 //! recomputation algebra (Equation 4 + dPsum) is tiling-invariant, which
@@ -28,15 +37,22 @@ use crate::tensor::{bf16, Tensor};
 
 /// Block-streamed backward with forward recomputation from (Q, K, LSE).
 ///
-/// `lse` must be the forward's log-sum-exp (e.g. from `mha_forward`).
-/// Under a mixed-precision backend, Q/K/V/dO are quantized to bf16
-/// once at entry and the recomputed P and dS tiles are quantized
-/// before their GEMM-operand roles (P → dV fold, dS → dQ/dK folds);
-/// the Δ statistics and every gradient accumulator stay f32.
+/// `lse` must be the forward's log-sum-exp (e.g. from `mha_forward`);
+/// fully-masked rows carry the `-inf` sentinel there and contribute
+/// exactly zero gradient.  Under a mixed-precision backend, Q/K/V/dO
+/// are quantized to bf16 once at entry and the recomputed P and dS
+/// tiles are quantized before their GEMM-operand roles (P → dV fold,
+/// dS → dQ/dK folds); the Δ statistics and every gradient accumulator
+/// stay f32.  `block_q`/`block_k` must be ≥ 1 (0 is rejected, not
+/// clamped); values larger than `n` are clamped down to `n`.
 pub fn mha_backward_streaming(q: &Tensor, k: &Tensor, v: &Tensor,
-                              dout: &Tensor, lse: &Tensor, p: AttnParams,
+                              dout: &Tensor, lse: &Tensor, p: &AttnParams,
                               block_q: usize, block_k: usize,
                               be: &dyn Backend) -> Grads {
+    assert!(block_q >= 1 && block_k >= 1,
+            "streaming blocks must be ≥ 1 (got block_q={block_q}, \
+             block_k={block_k}); a zero block is a misconfiguration, \
+             not a request for the smallest tile");
     let mixed = be.precision() == Precision::Mixed;
     let qx;
     let kx;
@@ -55,6 +71,7 @@ pub fn mha_backward_streaming(q: &Tensor, k: &Tensor, v: &Tensor,
         [a, b, c] => (a, b, c),
         ref s => panic!("q must be rank-3, got {s:?}"),
     };
+    p.mask.check_n(n);
     let bq = block_q.min(n).max(1);
     let bk = block_k.min(n).max(1);
     assert!(n % bq == 0 && n % bk == 0,
@@ -85,9 +102,15 @@ pub fn mha_backward_streaming(q: &Tensor, k: &Tensor, v: &Tensor,
         let mut tasks: Vec<Task<'_>> = Vec::new();
 
         // Kernel 1 — dq: grid over Q tiles, inner sweep over K tiles.
+        // A q-tile with no live k-tile is never packed (zero gradient).
         for b in 0..bh {
             for iq in (0..n).step_by(bq) {
                 let dq_tile = exec::carve(&mut dq_rest, bq * d);
+                if !(0..n).step_by(bk)
+                    .any(|ik| p.mask.tile_live(iq, bq, ik, bk))
+                {
+                    continue;
+                }
                 exec::pool::declare_task_writes(&[
                     exec::pool::span(&*dq_tile),
                 ]);
@@ -99,10 +122,16 @@ pub fn mha_backward_streaming(q: &Tensor, k: &Tensor, v: &Tensor,
         }
 
         // Kernel 2 — dk/dv: grid over K tiles, inner sweep over Q tiles.
+        // A k-tile no live q-tile attends to is never packed.
         for b in 0..bh {
             for ik in (0..n).step_by(bk) {
                 let dk_tile = exec::carve(&mut dk_rest, bk * d);
                 let dv_tile = exec::carve(&mut dv_rest, bk * d);
+                if !(0..n).step_by(bq)
+                    .any(|iq| p.mask.tile_live(iq, bq, ik, bk))
+                {
+                    continue;
+                }
                 exec::pool::declare_task_writes(&[
                     exec::pool::span(&*dk_tile),
                     exec::pool::span(&*dv_tile),
@@ -125,11 +154,14 @@ pub fn mha_backward_streaming(q: &Tensor, k: &Tensor, v: &Tensor,
 }
 
 /// Tile-local recompute of one (r, c) score entry's P from (Q, K, LSE).
-/// `mixed` quantizes the result to bf16 — P's operand role in the
-/// dV/dP GEMMs (the statistics in `ld` stay f32).
-fn p_entry(qd: &[f32], kd: &[f32], ld: &[f32], p: AttnParams, n: usize,
+/// The mask check comes first: masked entries are exactly 0.0 and the
+/// row's LSE — which is the `-inf` sentinel when the whole row is
+/// masked — is never exponentiated for them (`exp(s − -inf)` would be
+/// `+inf`).  `mixed` quantizes the result to bf16 — P's operand role
+/// in the dV/dP GEMMs (the statistics in `ld` stay f32).
+fn p_entry(qd: &[f32], kd: &[f32], ld: &[f32], p: &AttnParams, n: usize,
            d: usize, b: usize, r: usize, c: usize, mixed: bool) -> f32 {
-    if p.causal && c > r {
+    if !p.mask.live(r, c) {
         return 0.0;
     }
     let qrow = &qd[(b * n + r) * d..(b * n + r + 1) * d];
@@ -143,15 +175,15 @@ fn p_entry(qd: &[f32], kd: &[f32], ld: &[f32], p: AttnParams, n: usize,
     if mixed { bf16::quantize(pe) } else { pe }
 }
 
-/// dq for one `(bh, q-tile)`: sweep K tiles, fold `dS·K` locally.
-/// `mixed` quantizes the recomputed P and the dS value at their
-/// GEMM-operand boundaries; the fold accumulator stays f32.
+/// dq for one `(bh, q-tile)`: sweep the mask-live K tiles, fold `dS·K`
+/// locally.  `mixed` quantizes the recomputed P and the dS value at
+/// their GEMM-operand boundaries; the fold accumulator stays f32.
 fn dq_tile_task(qd: &[f32], kd: &[f32], vd: &[f32], dod: &[f32],
                 ld: &[f32], delta: &[f32], dq_tile: &mut [f32],
-                p: AttnParams, b: usize, iq: usize, bq: usize, bk: usize,
+                p: &AttnParams, b: usize, iq: usize, bq: usize, bk: usize,
                 n: usize, d: usize, mixed: bool) {
     for ik in (0..n).step_by(bk) {
-        if p.causal && ik > iq + bq - 1 {
+        if !p.mask.tile_live(iq, bq, ik, bk) {
             continue;
         }
         for r in 0..bq {
@@ -180,15 +212,16 @@ fn dq_tile_task(qd: &[f32], kd: &[f32], vd: &[f32], dod: &[f32],
     }
 }
 
-/// dk/dv for one `(bh, k-tile)`: sweep Q tiles (the grid transpose),
-/// fold `Pᵀ·dO` and `dSᵀ·Q` locally.  `mixed` quantizes P and dS at
-/// their GEMM-operand boundaries; both fold accumulators stay f32.
+/// dk/dv for one `(bh, k-tile)`: sweep the mask-live Q tiles (the grid
+/// transpose), fold `Pᵀ·dO` and `dSᵀ·Q` locally.  `mixed` quantizes P
+/// and dS at their GEMM-operand boundaries; both fold accumulators
+/// stay f32.
 fn dkv_tile_task(qd: &[f32], kd: &[f32], vd: &[f32], dod: &[f32],
                  ld: &[f32], delta: &[f32], dk_tile: &mut [f32],
-                 dv_tile: &mut [f32], p: AttnParams, b: usize, ik: usize,
+                 dv_tile: &mut [f32], p: &AttnParams, b: usize, ik: usize,
                  bq: usize, bk: usize, n: usize, d: usize, mixed: bool) {
     for iq in (0..n).step_by(bq) {
-        if p.causal && ik > iq + bq - 1 {
+        if !p.mask.tile_live(iq, bq, ik, bk) {
             continue;
         }
         for r in 0..bq {
@@ -223,26 +256,33 @@ fn dkv_tile_task(qd: &[f32], kd: &[f32], vd: &[f32], dod: &[f32],
     }
 }
 
-/// Recompute O from (Q, K, V, LSE) — what the device backward does with
-/// its saved statistics instead of saving O's N×d… wait, it *does* read O
-/// for dPsum; here we recompute it so the witness needs only the
-/// statistics, demonstrating the stronger memory claim.
+/// Recompute O from (Q, K, V, LSE).  The device backward reads the
+/// saved O tensor for its dPsum preprocess; the host witness recomputes
+/// it from the statistics instead, so the witness needs only (Q, K, V,
+/// LSE) — demonstrating the stronger memory claim.
 fn recompute_output(q: &Tensor, k: &Tensor, v: &Tensor, lse: &Tensor,
-                    p: AttnParams, be: &dyn Backend) -> Tensor {
+                    p: &AttnParams, be: &dyn Backend) -> Tensor {
     // numerically identical to the forward given the same lse (a
     // mixed-precision backend recomputes from quantized operands, so
-    // its statistics may sit a bf16-sized step away from an f32 lse)
+    // its statistics may sit a bf16-sized step away from an f32 lse);
+    // fully-masked rows carry the -inf sentinel on both sides, which
+    // counts as equal (their difference is NaN, not a deviation)
     let f = mha_forward(q, k, v, p, be);
     let tol = if be.precision() == Precision::Mixed { 0.5 } else { 1e-3 };
-    debug_assert!(f.lse.max_abs_diff(lse) < tol,
-                  "provided LSE does not match this (q,k) pair");
+    debug_assert!(
+        f.lse.data().iter().zip(lse.data()).all(|(&a, &b)| {
+            (a == f32::NEG_INFINITY && b == f32::NEG_INFINITY)
+                || (a - b).abs() < tol
+        }),
+        "provided LSE does not match this (q,k) pair"
+    );
     f.output
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::attention::mha_backward;
+    use crate::attention::{mha_backward, BlockLayout, Mask};
     use crate::exec::{Blocked, Scalar};
     use crate::tensor::Rng;
 
@@ -258,11 +298,11 @@ mod tests {
     #[test]
     fn matches_oracle_full() {
         let (q, k, v, dout) = case(2, 32, 8, 1);
-        let p = AttnParams::new(8, false);
-        let lse = mha_forward(&q, &k, &v, p, &Scalar).lse;
-        let want = mha_backward(&q, &k, &v, &dout, p, &Scalar);
+        let p = AttnParams::new(8, false).unwrap();
+        let lse = mha_forward(&q, &k, &v, &p, &Scalar).lse;
+        let want = mha_backward(&q, &k, &v, &dout, &p, &Scalar);
         for (bq, bk) in [(32, 32), (8, 8), (16, 4)] {
-            let got = mha_backward_streaming(&q, &k, &v, &dout, &lse, p,
+            let got = mha_backward_streaming(&q, &k, &v, &dout, &lse, &p,
                                              bq, bk, &Scalar);
             assert!(got.dq.max_abs_diff(&want.dq) < 1e-3, "dq ({bq},{bk})");
             assert!(got.dk.max_abs_diff(&want.dk) < 1e-3, "dk ({bq},{bk})");
@@ -273,11 +313,11 @@ mod tests {
     #[test]
     fn matches_oracle_causal() {
         let (q, k, v, dout) = case(1, 32, 8, 2);
-        let p = AttnParams::new(8, true);
-        let lse = mha_forward(&q, &k, &v, p, &Scalar).lse;
-        let want = mha_backward(&q, &k, &v, &dout, p, &Scalar);
+        let p = AttnParams::new(8, true).unwrap();
+        let lse = mha_forward(&q, &k, &v, &p, &Scalar).lse;
+        let want = mha_backward(&q, &k, &v, &dout, &p, &Scalar);
         for (bq, bk) in [(8, 8), (16, 8), (8, 16)] {
-            let got = mha_backward_streaming(&q, &k, &v, &dout, &lse, p,
+            let got = mha_backward_streaming(&q, &k, &v, &dout, &lse, &p,
                                              bq, bk, &Scalar);
             assert!(got.dq.max_abs_diff(&want.dq) < 1e-3, "dq ({bq},{bk})");
             assert!(got.dk.max_abs_diff(&want.dk) < 1e-3, "dk ({bq},{bk})");
@@ -286,14 +326,73 @@ mod tests {
     }
 
     #[test]
+    fn matches_oracle_sliding_window_and_block_sparse() {
+        let (q, k, v, dout) = case(1, 32, 8, 4);
+        let mut live = vec![true; 16];
+        for bj in 0..4 {
+            live[2 * 4 + bj] = false; // query block-row 2 fully masked
+        }
+        let masks = [
+            Mask::SlidingWindow { w: 1 },
+            Mask::SlidingWindow { w: 6 },
+            Mask::BlockSparse {
+                layout: BlockLayout::new(8, 4, live).unwrap(),
+            },
+        ];
+        for mask in masks {
+            let p = AttnParams::with_mask(8, mask).unwrap();
+            let lse = mha_forward(&q, &k, &v, &p, &Scalar).lse;
+            let want = mha_backward(&q, &k, &v, &dout, &p, &Scalar);
+            for (bq, bk) in [(8, 8), (16, 8), (8, 16)] {
+                let got = mha_backward_streaming(&q, &k, &v, &dout, &lse,
+                                                 &p, bq, bk, &Scalar);
+                for (name, g, w) in [("dq", &got.dq, &want.dq),
+                                     ("dk", &got.dk, &want.dk),
+                                     ("dv", &got.dv, &want.dv)] {
+                    assert!(g.max_abs_diff(w) < 1e-3,
+                            "{name} ({bq},{bk}) mask {:?}", p.mask);
+                }
+            }
+        }
+    }
+
+    /// The recomputation path must survive fully-masked rows: the LSE
+    /// carries -inf sentinels and the gradients are exactly zero for
+    /// those rows (no NaN anywhere).
+    #[test]
+    fn fully_masked_rows_give_zero_grads() {
+        let (q, k, v, dout) = case(1, 16, 4, 5);
+        let p = AttnParams::with_mask(4, Mask::SlidingWindow { w: 0 })
+            .unwrap();
+        let lse = mha_forward(&q, &k, &v, &p, &Scalar).lse;
+        let got = mha_backward_streaming(&q, &k, &v, &dout, &lse, &p,
+                                         4, 4, &Scalar);
+        for (name, g) in [("dq", &got.dq), ("dk", &got.dk),
+                          ("dv", &got.dv)] {
+            for &x in g.data() {
+                assert_eq!(x, 0.0, "{name} must be exactly zero");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "streaming blocks must be ≥ 1")]
+    fn zero_blocks_are_rejected() {
+        let (q, k, v, dout) = case(1, 8, 4, 6);
+        let p = AttnParams::new(4, false).unwrap();
+        let lse = mha_forward(&q, &k, &v, &p, &Scalar).lse;
+        mha_backward_streaming(&q, &k, &v, &dout, &lse, &p, 0, 0, &Scalar);
+    }
+
+    #[test]
     fn thread_count_invariant() {
         let (q, k, v, dout) = case(2, 32, 8, 3);
-        let p = AttnParams::new(8, true);
-        let lse = mha_forward(&q, &k, &v, p, &Scalar).lse;
-        let base = mha_backward_streaming(&q, &k, &v, &dout, &lse, p, 8, 8,
+        let p = AttnParams::new(8, true).unwrap();
+        let lse = mha_forward(&q, &k, &v, &p, &Scalar).lse;
+        let base = mha_backward_streaming(&q, &k, &v, &dout, &lse, &p, 8, 8,
                                           &Blocked::new(1));
         for threads in [2usize, 8] {
-            let got = mha_backward_streaming(&q, &k, &v, &dout, &lse, p,
+            let got = mha_backward_streaming(&q, &k, &v, &dout, &lse, &p,
                                              8, 8, &Blocked::new(threads));
             assert_eq!(base.dq.data(), got.dq.data(), "threads={threads}");
             assert_eq!(base.dk.data(), got.dk.data());

@@ -10,6 +10,7 @@ use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::attention::MaskSpec;
 use crate::exec::{BackendKind, ExecOptions, Precision};
 
 /// A scalar-ish TOML value.
@@ -264,6 +265,66 @@ pub fn exec_backend_explicit(doc: &Document) -> bool {
     doc.get("exec", "backend").is_some()
 }
 
+/// `[attention]` section → structured mask + streaming block shape.
+///
+/// ```toml
+/// [attention]
+/// mask = "window"      # dense | causal | window | window:W |
+///                      # block:B[:DENSITY_PCT[:SEED]]
+/// window = 256         # width for a bare mask = "window"
+/// block_q = 64         # streaming q-tile rows (must be ≥ 1)
+/// block_k = 64         # streaming k-tile rows (must be ≥ 1)
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AttnConfig {
+    /// Structured mask specification (see [`MaskSpec`]).
+    pub mask: MaskSpec,
+    /// Streaming q-tile rows.
+    pub block_q: usize,
+    /// Streaming k-tile rows.
+    pub block_k: usize,
+}
+
+impl Default for AttnConfig {
+    fn default() -> Self {
+        AttnConfig { mask: MaskSpec::Dense, block_q: 64, block_k: 64 }
+    }
+}
+
+/// Parse the `[attention]` section (defaults fill absent keys).
+/// Zero streaming blocks and a zero window width are rejected here
+/// with section/key-named errors — the streaming entry points treat a
+/// zero block as a misconfiguration, never a request to clamp.
+pub fn attn_from_doc(doc: &Document) -> Result<AttnConfig> {
+    let d = AttnConfig::default();
+    let window = match doc.get("attention", "window") {
+        None => None,
+        Some(v) => Some(
+            v.as_i64().filter(|&i| i >= 1).map(|i| i as usize).ok_or_else(
+                || anyhow!("[attention] window must be an integer ≥ 1 \
+                            (width 0 would mask every key)"))?),
+    };
+    let mask = match doc.get("attention", "mask") {
+        None => d.mask,
+        Some(v) => {
+            let text = v.as_str().ok_or_else(
+                || anyhow!("[attention] mask must be a string"))?;
+            MaskSpec::parse(text, window)
+                .map_err(|e| anyhow!("[attention] mask: {e}"))?
+        }
+    };
+    let block_q = doc.usize_or("attention", "block_q", d.block_q)?;
+    let block_k = doc.usize_or("attention", "block_k", d.block_k)?;
+    for (key, val) in [("block_q", block_q), ("block_k", block_k)] {
+        if val == 0 {
+            bail!("[attention] {key} must be ≥ 1 (a zero streaming \
+                   block is rejected, not clamped up to the smallest \
+                   tile)");
+        }
+    }
+    Ok(AttnConfig { mask, block_q, block_k })
+}
+
 /// Training-run configuration (`spark train --config …`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct TrainConfig {
@@ -287,6 +348,8 @@ pub struct TrainConfig {
     pub metrics_out: Option<String>,
     /// Host execution backend (`[exec]` section).
     pub exec: ExecOptions,
+    /// Attention mask + streaming blocks (`[attention]` section).
+    pub attn: AttnConfig,
 }
 
 impl Default for TrainConfig {
@@ -302,6 +365,7 @@ impl Default for TrainConfig {
             corpus_tokens: 1 << 20,
             metrics_out: None,
             exec: ExecOptions::default(),
+            attn: AttnConfig::default(),
         }
     }
 }
@@ -326,6 +390,7 @@ impl TrainConfig {
             metrics_out: doc.get("train", "metrics_out")
                 .and_then(Toml::as_str).map(String::from),
             exec: exec_from_doc(doc)?,
+            attn: attn_from_doc(doc)?,
         };
         if cfg.steps == 0 {
             bail!("[train] steps must be > 0");
@@ -522,6 +587,58 @@ threads = 4
         let _ = std::fs::remove_file(&path);
         assert_eq!(crate::exec::tune::installed().unwrap().len(), 1);
         crate::exec::tune::uninstall();
+    }
+
+    #[test]
+    fn attention_section_parses() {
+        let doc = Document::parse(
+            "[attention]\nmask = \"window\"\nwindow = 256\n\
+             block_q = 32\nblock_k = 128").unwrap();
+        let cfg = attn_from_doc(&doc).unwrap();
+        assert_eq!(cfg.mask, MaskSpec::SlidingWindow { w: 256 });
+        assert_eq!((cfg.block_q, cfg.block_k), (32, 128));
+        let doc = Document::parse(
+            "[attention]\nmask = \"block:64:40:9\"").unwrap();
+        assert_eq!(attn_from_doc(&doc).unwrap().mask,
+                   MaskSpec::BlockSparse { block: 64, density_pct: 40,
+                                           seed: 9 });
+        // absent section → dense defaults
+        let cfg = attn_from_doc(&Document::parse("").unwrap()).unwrap();
+        assert_eq!(cfg, AttnConfig::default());
+    }
+
+    #[test]
+    fn attention_errors_name_section_and_key() {
+        // zero streaming blocks are rejected, never clamped
+        for key in ["block_q", "block_k"] {
+            let doc = Document::parse(&format!("[attention]\n{key} = 0"))
+                .unwrap();
+            let err = attn_from_doc(&doc).unwrap_err().to_string();
+            assert!(err.contains("[attention]"), "{err}");
+            assert!(err.contains(key), "{err}");
+            assert!(err.contains("not clamped"), "{err}");
+        }
+        // a zero window width masks every key — rejected at parse
+        let doc = Document::parse("[attention]\nmask = \"window\"\n\
+                                   window = 0").unwrap();
+        let err = attn_from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("[attention]") && err.contains("window"),
+                "{err}");
+        // bare "window" without a width names its remedies
+        let doc = Document::parse("[attention]\nmask = \"window\"")
+            .unwrap();
+        let err = attn_from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("[attention]") && err.contains("window:W"),
+                "{err}");
+        // unknown mask grammar
+        let doc = Document::parse("[attention]\nmask = \"diag\"").unwrap();
+        assert!(attn_from_doc(&doc).is_err());
+        // malformed value still names line/section/key (PR-7 style)
+        let err = Document::parse("[attention]\nmask = @?!\n")
+            .unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(err.contains("[attention]"), "{err}");
+        assert!(err.contains("`mask`"), "{err}");
     }
 
     #[test]

@@ -20,7 +20,7 @@ use anyhow::{bail, Context, Result};
 use log::{info, warn};
 
 use super::inputs::synth_inputs;
-use crate::attention::{self, AttnParams};
+use crate::attention::{self, AttnParams, MaskSpec};
 use crate::bench::{measure, measure_wallclock, skipped_row, Options,
                    Report, Row};
 use crate::exec::{self, Backend, ExecOptions, Scalar};
@@ -322,8 +322,8 @@ pub fn accuracy_report(eng: &Engine) -> Result<Vec<AccuracyRow>> {
                          ins[3].as_tensor()?);
         let d = meta.attr_i64("d").unwrap_or(64) as usize;
         let causal = meta.attr_bool("causal").unwrap_or(false);
-        let oracle = attention::mha_forward(
-            &q, &k, &v, AttnParams::new(d, causal), &Scalar).output;
+        let p = AttnParams::new(d, causal)?;
+        let oracle = attention::mha_forward(&q, &k, &v, &p, &Scalar).output;
         rows.push(accuracy_row(&meta.name, &o_dev, &oracle));
     }
 
@@ -339,8 +339,8 @@ pub fn accuracy_report(eng: &Engine) -> Result<Vec<AccuracyRow>> {
         let dout = ins[6].as_tensor()?;
         let d = meta.attr_i64("d").unwrap_or(64) as usize;
         let causal = meta.attr_bool("causal").unwrap_or(false);
-        let g = attention::mha_backward(
-            &q, &k, &v, &dout, AttnParams::new(d, causal), &Scalar);
+        let p = AttnParams::new(d, causal)?;
+        let g = attention::mha_backward(&q, &k, &v, &dout, &p, &Scalar);
         for (i, (gname, oracle)) in [("dq", &g.dq), ("dk", &g.dk),
                                      ("dv", &g.dv)].iter().enumerate() {
             let dev = out[i].as_tensor()?;
@@ -455,8 +455,16 @@ pub fn projected_fig12(machine: &Machine) -> Report {
 /// as report notes (max ULP distance + max abs error, mirroring the
 /// paper's §4.2.3 accuracy table), alongside per-backend speedup
 /// summaries.
+///
+/// `masks` selects the structured-attention variants to sweep.  The
+/// dense mask keeps the historical `host/d{d}` group (so trajectory
+/// gates keyed on it stay comparable PR-over-PR); every other mask gets
+/// its own `host/d{d}/{label}` group with the *same* variant names, and
+/// its rows carry exact per-mask FLOPs so TFLOP/s stays honest when
+/// skip-aware tiling removes work.
 pub fn host_backend_report(ns: &[usize], bh: usize, d: usize,
-                           backward: bool, opts: HarnessOptions)
+                           backward: bool, masks: &[MaskSpec],
+                           opts: HarnessOptions)
                            -> Result<Report> {
     let pass = if backward { "backward" } else { "forward" };
     let mut report = Report::new(format!(
@@ -471,8 +479,6 @@ pub fn host_backend_report(ns: &[usize], bh: usize, d: usize,
     }
     let block = 64usize;
     for &n in ns {
-        let group = format!("host/d{d}");
-        let p = AttnParams::new(d, false);
         let mut rng = Rng::new(0x5A11 + n as u64);
         let q = Tensor::randn(vec![bh, n, d], &mut rng);
         let k = Tensor::randn(vec![bh, n, d], &mut rng);
@@ -480,85 +486,96 @@ pub fn host_backend_report(ns: &[usize], bh: usize, d: usize,
         let dout = Tensor::randn(vec![bh, n, d], &mut rng);
         // largest block ≤ 64 that divides n (streaming requires n % bq == 0)
         let bq = (1..=block.min(n)).rev().find(|b| n % b == 0).unwrap_or(1);
-        let flops = attention::attention_flops(bh, n, d, false, backward);
-        // the pass under one backend, for cross-checking
-        let run_pass = |be: &dyn Backend| -> Tensor {
-            if backward {
-                let lse = attention::mha_forward(&q, &k, &v, p, be).lse;
-                attention::mha_backward(&q, &k, &v, &dout, p, be).dq
-                    .add(&attention::mha_backward_streaming(
-                        &q, &k, &v, &dout, &lse, p, bq, bq, be).dq)
+        for spec in masks {
+            let group = if *spec == MaskSpec::Dense {
+                format!("host/d{d}")
             } else {
-                attention::mha_forward(&q, &k, &v, p, be).output
-            }
-        };
-        // only needed when there is a second backend to cross-check
-        let reference = if backends.len() > 1 {
-            Some(run_pass(&Scalar))
-        } else {
-            None
-        };
-        for (bi, be) in backends.iter().enumerate() {
-            let be = be.as_ref();
-            let mixed = be.precision() == exec::Precision::Mixed;
-            // Numeric cross-check before timing — skipped for the
-            // Scalar entry, which *is* the reference.
-            if bi > 0 {
-                let reference = reference.as_ref()
-                    .expect("reference exists when roster > 1");
-                let check = run_pass(be);
-                let err = check.max_abs_diff(reference);
-                if mixed {
-                    // deviates by design: record, don't gate
-                    report.note(
-                        format!("{} vs f32 max_ulp ({pass}, n={n})",
-                                be.name()),
-                        check.max_ulp_diff(reference) as f64);
-                    report.note(
-                        format!("{} vs f32 max_abs ({pass}, n={n})",
-                                be.name()),
-                        err as f64);
-                } else if err > 1e-4 {
-                    bail!("backend {} disagrees with scalar on host \
-                           {pass} (n={n}, max err {err})", be.name());
-                }
-            }
-            let time = if backward {
-                let lse = attention::mha_forward(&q, &k, &v, p, be).lse;
-                measure_wallclock(opts.bench, || {
-                    attention::mha_backward_streaming(
-                        &q, &k, &v, &dout, &lse, p, bq, bq, be);
-                    Ok(())
-                })?
-            } else {
-                measure_wallclock(opts.bench, || {
-                    attention::mha_forward(&q, &k, &v, p, be);
-                    Ok(())
-                })?
+                format!("host/d{d}/{}", spec.label())
             };
-            report.push(Row {
-                group: group.clone(),
-                variant: be.name(),
-                x: n,
-                time,
-                flops,
-                status: "ok".into(),
-            });
-            // the streamed (flash-dataflow) variant of the same pass
-            if !backward {
-                let time = measure_wallclock(opts.bench, || {
-                    attention::mha_forward_streaming(&q, &k, &v, p,
-                                                     bq, bq, be);
-                    Ok(())
-                })?;
+            let p = AttnParams::with_mask(d, spec.build(n)?)?;
+            let p = &p;
+            let flops = attention::attention_flops_masked(
+                bh, n, d, &p.mask, backward);
+            // the pass under one backend, for cross-checking
+            let run_pass = |be: &dyn Backend| -> Tensor {
+                if backward {
+                    let lse = attention::mha_forward(&q, &k, &v, p, be).lse;
+                    attention::mha_backward(&q, &k, &v, &dout, p, be).dq
+                        .add(&attention::mha_backward_streaming(
+                            &q, &k, &v, &dout, &lse, p, bq, bq, be).dq)
+                } else {
+                    attention::mha_forward(&q, &k, &v, p, be).output
+                }
+            };
+            // only needed when there is a second backend to cross-check
+            let reference = if backends.len() > 1 {
+                Some(run_pass(&Scalar))
+            } else {
+                None
+            };
+            for (bi, be) in backends.iter().enumerate() {
+                let be = be.as_ref();
+                let mixed = be.precision() == exec::Precision::Mixed;
+                // Numeric cross-check before timing — skipped for the
+                // Scalar entry, which *is* the reference.
+                if bi > 0 {
+                    let reference = reference.as_ref()
+                        .expect("reference exists when roster > 1");
+                    let check = run_pass(be);
+                    let err = check.max_abs_diff(reference);
+                    if mixed {
+                        // deviates by design: record, don't gate
+                        report.note(
+                            format!("{} vs f32 max_ulp ({pass}, n={n}, \
+                                     mask={})", be.name(), spec.label()),
+                            check.max_ulp_diff(reference) as f64);
+                        report.note(
+                            format!("{} vs f32 max_abs ({pass}, n={n}, \
+                                     mask={})", be.name(), spec.label()),
+                            err as f64);
+                    } else if err > 1e-4 {
+                        bail!("backend {} disagrees with scalar on host \
+                               {pass} (n={n}, mask={}, max err {err})",
+                              be.name(), spec.label());
+                    }
+                }
+                let time = if backward {
+                    let lse = attention::mha_forward(&q, &k, &v, p, be).lse;
+                    measure_wallclock(opts.bench, || {
+                        attention::mha_backward_streaming(
+                            &q, &k, &v, &dout, &lse, p, bq, bq, be);
+                        Ok(())
+                    })?
+                } else {
+                    measure_wallclock(opts.bench, || {
+                        attention::mha_forward(&q, &k, &v, p, be);
+                        Ok(())
+                    })?
+                };
                 report.push(Row {
                     group: group.clone(),
-                    variant: format!("{}_stream", be.name()),
+                    variant: be.name(),
                     x: n,
                     time,
                     flops,
                     status: "ok".into(),
                 });
+                // the streamed (flash-dataflow) variant of the same pass
+                if !backward {
+                    let time = measure_wallclock(opts.bench, || {
+                        attention::mha_forward_streaming(&q, &k, &v, p,
+                                                         bq, bq, be);
+                        Ok(())
+                    })?;
+                    report.push(Row {
+                        group: group.clone(),
+                        variant: format!("{}_stream", be.name()),
+                        x: n,
+                        time,
+                        flops,
+                        status: "ok".into(),
+                    });
+                }
             }
         }
     }

@@ -14,7 +14,14 @@
 //!    asserted.
 //!
 //! Both feed `perfmodel` to project V100-scale behaviour (experiment E5).
+//!
+//! Structured masks: `analytic_fused_fwd_masked` / `simulate_fused_fwd_masked`
+//! account only the tiles the skip-aware streaming enumeration actually
+//! touches ([`crate::attention::Mask::tile_counts`] is the shared ground
+//! truth), so tiles outside the mask vanish from the traffic counts
+//! exactly as they vanish from the pool's task set.
 
+use crate::attention::Mask;
 use std::collections::BTreeMap;
 
 /// Element width of the streamed dtype (bf16/fp16 = 2 bytes).
@@ -326,6 +333,89 @@ pub fn simulate_fused_fwd(s: MhaShape, block_q: usize, block_k: usize,
     }, overflow)
 }
 
+/// Closed-form traffic of the **masked** fused forward under skip-aware
+/// tile enumeration: per head, each *live* query tile reads its Q tile
+/// and writes its O tile + statistics once, and each *live* (q, k)
+/// score tile streams one K and one V tile — tiles outside the mask
+/// ([`Mask::tile_live`]) contribute nothing, and a query tile with no
+/// live key tile contributes nothing at all (it is never scheduled).
+/// Tile bytes use the full block size (the simulator's convention for
+/// trailing partial tiles), so with dense masks and dividing blocks
+/// this reproduces [`analytic_fused_fwd_streamed`] exactly.
+pub fn analytic_fused_fwd_masked(s: MhaShape, mask: &Mask, block_q: usize,
+                                 block_k: usize) -> Traffic {
+    let c = mask.tile_counts(s.n, block_q, block_k);
+    let q_tile = block_q * s.d * IN_BYTES;
+    let kv_tile = block_k * s.d * IN_BYTES;
+    let o_tile = block_q * s.d * IN_BYTES + block_q * STAT_BYTES;
+    Traffic {
+        read_bytes: s.bh * (c.live_q_tiles * q_tile + c.live * 2 * kv_tile),
+        write_bytes: s.bh * c.live_q_tiles * o_tile,
+        tensor_reads: 3,
+        tensor_writes: 1,
+    }
+}
+
+/// Walk the **masked** fused forward schedule: the same block-streaming
+/// walk as [`simulate_fused_fwd`], except key tiles outside the mask
+/// are never fetched and query tiles with no live key tile are skipped
+/// entirely (no Q read, no O write-back) — mirroring the streaming
+/// task builders.  With [`Mask::Dense`] this is byte-identical to
+/// [`simulate_fused_fwd`]; for every mask it must agree with
+/// [`analytic_fused_fwd_masked`] (asserted in tests and the
+/// `longseq_sparse` bench).
+pub fn simulate_fused_fwd_masked(s: MhaShape, mask: &Mask, block_q: usize,
+                                 block_k: usize, sram_bytes: usize)
+                                 -> (Traffic, bool) {
+    let mut sim = MemSim::new(sram_bytes);
+    let mut overflow = false;
+    let q_tile = block_q * s.d * IN_BYTES;
+    let kv_tile = block_k * s.d * IN_BYTES;
+    let sp_tile = block_q * block_k * STAT_BYTES;
+    let acc_tile = block_q * s.d * STAT_BYTES;
+    let stat_tile = 2 * block_q * STAT_BYTES;
+    let nq = s.n.div_ceil(block_q);
+    let nk = s.n.div_ceil(block_k);
+    let tile_live = |iq: usize, ik: usize| {
+        let (q0, k0) = (iq * block_q, ik * block_k);
+        mask.tile_live(q0, block_q.min(s.n - q0), k0,
+                       block_k.min(s.n - k0))
+    };
+
+    for b in 0..s.bh {
+        for iq in 0..nq {
+            if !(0..nk).any(|ik| tile_live(iq, ik)) {
+                continue; // dead query tile: never scheduled at all
+            }
+            let qt = b * nq + iq;
+            sim.read(Buf::Q, qt, q_tile);
+            sim.scratch(Buf::O, qt, acc_tile);
+            sim.scratch(Buf::Lse, qt, stat_tile);
+            for ik in 0..nk {
+                if !tile_live(iq, ik) {
+                    continue; // dead score tile: K/V never streamed
+                }
+                let kt = b * nk + ik;
+                sim.read(Buf::K, kt, kv_tile);
+                sim.read(Buf::V, kt, kv_tile);
+                sim.scratch(Buf::S, 0, sp_tile);
+                overflow |= sim.sram_overflow();
+                sim.evict(Buf::S, 0);
+                sim.evict(Buf::K, kt);
+                sim.evict(Buf::V, kt);
+            }
+            sim.hbm_writes += block_q * s.d * IN_BYTES + block_q * STAT_BYTES;
+            sim.flush();
+        }
+    }
+    (Traffic {
+        read_bytes: sim.hbm_reads,
+        write_bytes: sim.hbm_writes,
+        tensor_reads: 3,
+        tensor_writes: 1,
+    }, overflow)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -405,6 +495,92 @@ mod tests {
         let fb = analytic_fused_bwd(SHAPE);
         assert!(ub.total_bytes() > 2 * fb.total_bytes());
         assert_eq!(fb.tensor_writes, 3); // dQ, dK, dV
+    }
+
+    #[test]
+    fn masked_dense_reproduces_streamed_closed_form() {
+        let ana = analytic_fused_fwd_masked(SHAPE, &Mask::Dense, 128, 128);
+        let streamed = analytic_fused_fwd_streamed(SHAPE, 128);
+        assert_eq!(ana.read_bytes, streamed.read_bytes);
+        assert_eq!(ana.write_bytes, streamed.write_bytes);
+        let (sim, _) = simulate_fused_fwd_masked(SHAPE, &Mask::Dense,
+                                                 128, 128, 16 << 20);
+        let (dense_sim, _) = simulate_fused_fwd(SHAPE, 128, 128, 16 << 20);
+        assert_eq!(sim.read_bytes, dense_sim.read_bytes);
+        assert_eq!(sim.write_bytes, dense_sim.write_bytes);
+    }
+
+    #[test]
+    fn masked_simulator_matches_masked_analytic() {
+        use crate::attention::BlockLayout;
+        let masks = [
+            Mask::Dense,
+            Mask::Causal,
+            Mask::SlidingWindow { w: 1 },
+            Mask::SlidingWindow { w: 200 },
+            Mask::SlidingWindow { w: 0 },
+            Mask::BlockSparse {
+                layout: BlockLayout::random(128, SHAPE.n / 128, 30, 5)
+                    .unwrap(),
+            },
+        ];
+        for mask in &masks {
+            for (bq, bk) in [(128usize, 128usize), (64, 128), (128, 64)] {
+                let (sim, _) =
+                    simulate_fused_fwd_masked(SHAPE, mask, bq, bk,
+                                              16 << 20);
+                let ana = analytic_fused_fwd_masked(SHAPE, mask, bq, bk);
+                assert_eq!(sim.read_bytes, ana.read_bytes,
+                           "mask {mask:?} blocks ({bq},{bk})");
+                assert_eq!(sim.write_bytes, ana.write_bytes,
+                           "mask {mask:?} blocks ({bq},{bk})");
+            }
+        }
+    }
+
+    #[test]
+    fn skipped_tiles_vanish_from_traffic() {
+        // a fully-masked problem moves zero bytes
+        let zero = analytic_fused_fwd_masked(SHAPE,
+                                             &Mask::SlidingWindow { w: 0 },
+                                             128, 128);
+        assert_eq!(zero.total_bytes(), 0);
+        // causal skips ~half the tiles; its K/V streaming must shrink
+        // accordingly relative to dense
+        let dense = analytic_fused_fwd_masked(SHAPE, &Mask::Dense,
+                                              128, 128);
+        let causal = analytic_fused_fwd_masked(SHAPE, &Mask::Causal,
+                                               128, 128);
+        assert!(causal.read_bytes < dense.read_bytes);
+        let c = Mask::Causal.tile_counts(SHAPE.n, 128, 128);
+        assert!(c.skipped > 0);
+        let kv = 128 * SHAPE.d * IN_BYTES;
+        assert_eq!(dense.read_bytes - causal.read_bytes,
+                   SHAPE.bh * c.skipped * 2 * kv,
+                   "every skipped tile must remove exactly one K+V \
+                    stream");
+    }
+
+    #[test]
+    fn window_traffic_scales_linearly_dense_quadratically() {
+        let w = 128usize;
+        let mut prev_win = 0usize;
+        let mut prev_dense = 0usize;
+        for n in [2048usize, 4096, 8192] {
+            let s = MhaShape::new(1, n, 64);
+            let win = analytic_fused_fwd_masked(
+                s, &Mask::SlidingWindow { w }, 128, 128);
+            let dense = analytic_fused_fwd_masked(s, &Mask::Dense,
+                                                  128, 128);
+            if prev_win > 0 {
+                let wr = win.read_bytes as f64 / prev_win as f64;
+                let dr = dense.read_bytes as f64 / prev_dense as f64;
+                assert!(wr < 2.5, "window reads must ~double: {wr}");
+                assert!(dr > 3.5, "dense reads must ~quadruple: {dr}");
+            }
+            prev_win = win.read_bytes;
+            prev_dense = dense.read_bytes;
+        }
     }
 
     #[test]

@@ -18,6 +18,7 @@
 
 use anyhow::{bail, Result};
 use log::info;
+use sparkattention::attention::MaskSpec;
 use sparkattention::bench::Options;
 use sparkattention::cli::{Command, Parsed};
 use sparkattention::config::TrainConfig;
@@ -117,6 +118,23 @@ fn exec_from_flags(p: &Parsed, base: ExecOptions,
     Ok(e)
 }
 
+/// Resolve `--mask` / `--window` into a [`MaskSpec`] override, if any.
+/// A bare `--window W` with no `--mask` means `window:W`; `--window 0`
+/// is rejected here (a zero-width window masks every key) so the error
+/// names the flag, not an internal invariant.
+fn mask_from_flags(p: &Parsed) -> Result<Option<MaskSpec>> {
+    let window = match p.get_usize("window")? {
+        Some(0) => bail!("--window must be ≥ 1 (width 0 would mask \
+                          every key)"),
+        w => w,
+    };
+    match (p.get("mask"), window) {
+        (Some(text), w) => Ok(Some(MaskSpec::parse(text, w)?)),
+        (None, Some(w)) => Ok(Some(MaskSpec::SlidingWindow { w })),
+        (None, None) => Ok(None),
+    }
+}
+
 fn cmd_train(args: &[String]) -> Result<()> {
     let cmd = Command::new("train", "train the LM via the train_step artifact")
         .flag("config", "TOML config path", None)
@@ -125,6 +143,10 @@ fn cmd_train(args: &[String]) -> Result<()> {
         .flag("seed", "run seed", None)
         .flag("checkpoint-every", "steps between checkpoints (0 = off)", None)
         .flag("metrics-out", "write metrics JSON here", None)
+        .flag("mask", "attention mask: dense | causal | window[:W] | \
+                       block:B[:DENSITY_PCT[:SEED]]", None)
+        .flag("window", "sliding-window width (pairs with --mask window)",
+              None)
         .flag("backend", "host exec backend: scalar | blocked | simd", None)
         .flag("threads", "host exec worker threads (0 = auto)", None)
         .flag("precision", "simd numeric mode: f32 | mixed \
@@ -156,6 +178,9 @@ fn cmd_train(args: &[String]) -> Result<()> {
     if let Some(m) = p.get("metrics-out") {
         cfg.metrics_out = Some(m.to_string());
     }
+    if let Some(spec) = mask_from_flags(&p)? {
+        cfg.attn.mask = spec;
+    }
     cfg.exec = exec_from_flags(&p, cfg.exec, backend_in_config)?;
 
     // Training compute runs inside the device artifacts; the host
@@ -165,10 +190,15 @@ fn cmd_train(args: &[String]) -> Result<()> {
     // or diverging backend aborts here, not mid-evaluation.
     exec::self_check(cfg.exec)?;
     sparkattention::attention::witness_self_check(cfg.exec)?;
+    sparkattention::attention::configured_mask_self_check(
+        cfg.attn.mask, cfg.attn.block_q, cfg.attn.block_k, cfg.exec)?;
     let backend = cfg.exec.build();
     info!("host exec backend {} ({} threads): pairwise matmul self-check \
            and attention witness passed", backend.name(),
           backend.threads());
+    info!("attention mask {} (streaming blocks {}×{}): configured-mask \
+           witness passed", cfg.attn.mask.label(), cfg.attn.block_q,
+          cfg.attn.block_k);
 
     let engine = Engine::new(&cfg.artifact_dir)?;
     let metrics_out = cfg.metrics_out.clone();
@@ -261,6 +291,11 @@ fn cmd_bench_host(args: &[String]) -> Result<()> {
         .flag("ns", "comma-separated sequence lengths", Some("256,512"))
         .flag("bh", "batch × heads", Some("8"))
         .flag("d", "head dimension", Some("64"))
+        .flag("mask", "comma-separated masks: dense | causal | \
+                       window[:W] | block:B[:DENSITY_PCT[:SEED]]",
+              Some("dense,causal"))
+        .flag("window", "sliding-window width for bare `window` specs",
+              None)
         .flag("iters", "measured iterations", Some("3"))
         .flag("warmup", "warmup iterations", Some("1"))
         .flag("backend", "pin the figure to scalar + this backend \
@@ -291,9 +326,20 @@ fn cmd_bench_host(args: &[String]) -> Result<()> {
             || p.get("precision").is_some(),
         ..HarnessOptions::default()
     };
+    let window = match p.get_usize("window")? {
+        Some(0) => bail!("--window must be ≥ 1 (width 0 would mask \
+                          every key)"),
+        w => w,
+    };
+    let masks = MaskSpec::parse_list(
+        p.get("mask").unwrap_or("dense,causal"), window)?;
+    if masks.is_empty() {
+        bail!("--mask selected no masks");
+    }
     let report = coordinator::host_backend_report(
         &ns, p.get_usize("bh")?.unwrap_or(8),
-        p.get_usize("d")?.unwrap_or(64), p.switch("backward"), opts)?;
+        p.get_usize("d")?.unwrap_or(64), p.switch("backward"), &masks,
+        opts)?;
     // speedup + accuracy summaries are part of the report notes
     print!("{}", report.emit(p.get("json-out"))?);
     Ok(())

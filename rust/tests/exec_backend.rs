@@ -195,7 +195,11 @@ fn simd_mixed_error_bounded_and_thread_invariant() {
     });
 }
 
-/// Random attention problem with valid streaming blocks.
+/// Random attention problem with valid streaming blocks.  `window`
+/// (when set) swaps the dense/causal mask for a sliding window of that
+/// width — width 0 included, which fully masks *every* row (the
+/// headline-bugfix edge: zero outputs, `-inf` LSE sentinels, and the
+/// bitwise contracts below must all still hold).
 #[derive(Debug, Clone)]
 struct AttnCase {
     bh: usize,
@@ -204,7 +208,18 @@ struct AttnCase {
     block_q: usize,
     block_k: usize,
     causal: bool,
+    window: Option<usize>,
     seed: u64,
+}
+
+impl AttnCase {
+    fn params(&self) -> AttnParams {
+        match self.window {
+            Some(w) => AttnParams::with_mask(
+                self.d, attention::Mask::SlidingWindow { w }).unwrap(),
+            None => AttnParams::new(self.d, self.causal).unwrap(),
+        }
+    }
 }
 
 struct AttnGen;
@@ -223,6 +238,11 @@ impl Gen for AttnGen {
             block_q: blocks.generate(rng),
             block_k: blocks.generate(rng),
             causal: rng.uniform() < 0.5,
+            window: if rng.uniform() < 0.4 {
+                Some(USize { lo: 0, hi: n }.generate(rng))
+            } else {
+                None
+            },
             seed: rng.next_u64(),
         }
     }
@@ -243,7 +263,7 @@ fn qkv(c: &AttnCase) -> (Tensor, Tensor, Tensor, Tensor) {
 fn attention_path_backend_parity_and_thread_invariance() {
     check("attn-backend-parity", &AttnGen, default_cases() / 2, |c| {
         let (q, k, v, dout) = qkv(&c);
-        let p = AttnParams::new(c.d, c.causal);
+        let p = &c.params();
 
         let fwd_s = attention::mha_forward(&q, &k, &v, p, &Scalar);
         let stream_s = attention::mha_forward_streaming(
@@ -325,7 +345,7 @@ fn attention_path_backend_parity_and_thread_invariance() {
 fn simd_mixed_attention_bounded_and_thread_invariant() {
     check("simd-mixed-attention", &AttnGen, default_cases() / 2, |c| {
         let (q, k, v, _dout) = qkv(&c);
-        let p = AttnParams::new(c.d, c.causal);
+        let p = &c.params();
         let qq = q.clone().quantize_bf16();
         let kq = k.clone().quantize_bf16();
         let vq = v.clone().quantize_bf16();

@@ -13,9 +13,10 @@
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
+use sparkattention::attention::{self, AttnParams, BlockLayout, Mask};
 use sparkattention::bench::Options;
 use sparkattention::exec::{self, tune, Backend, BackendKind, Blocked,
-                           Precision, Simd, Task};
+                           Precision, Scalar, Simd, Task};
 use sparkattention::proptest::{check, default_cases, Gen, OneOf, USize};
 use sparkattention::tensor::{Rng, Tensor};
 
@@ -262,4 +263,62 @@ fn tuner_round_trips_through_json() {
     let reloaded = tune::TuningTable::load(&path).expect("load");
     std::fs::remove_file(&path).ok();
     assert_eq!(reloaded, table, "JSON round-trip must preserve the table");
+}
+
+/// The skip-aware streaming task builders (fwd and bwd) run under the
+/// debug write-set race detector: every `run_tasks` call on a pooled
+/// backend first drains the builders' declared byte ranges through
+/// `verify_declared_disjoint`.  A builder that packed a dead tile, or
+/// declared a write set it doesn't own, would panic here.  Masks are
+/// chosen to stress the skip logic: a narrow sliding window (most
+/// tiles dead), the fully-masked `w = 0` degenerate, and a block-
+/// sparse grid with a fully dead block-row and a single-live-tile
+/// row.  Results must also stay bitwise equal to the scalar inline
+/// path — skipping tiles may change the task set, never the bits.
+#[test]
+fn masked_streaming_builders_pass_write_set_race_detector() {
+    let (bh, n, d) = (2usize, 32usize, 8usize);
+    let mut rng = Rng::new(0x8A5E);
+    let q = Tensor::randn(vec![bh, n, d], &mut rng);
+    let k = Tensor::randn(vec![bh, n, d], &mut rng);
+    let v = Tensor::randn(vec![bh, n, d], &mut rng);
+    let dout = Tensor::randn(vec![bh, n, d], &mut rng);
+
+    let layout = BlockLayout::new(8, 4, vec![
+        true,  false, false, false,
+        false, false, false, false, // queries 8..16: fully masked rows
+        true,  false, false, false, // single live tile
+        false, true,  true,  true,
+    ]).expect("layout");
+    let masks = [Mask::SlidingWindow { w: 3 },
+                 Mask::SlidingWindow { w: 0 },
+                 Mask::BlockSparse { layout }];
+    for mask in masks {
+        let p = AttnParams::with_mask(d, mask).expect("params");
+        let want = attention::mha_forward_streaming(&q, &k, &v, &p, 8, 8,
+                                                    &Scalar);
+        let gw = attention::mha_backward_streaming(&q, &k, &v, &dout,
+                                                   &want.lse, &p, 8, 8,
+                                                   &Scalar);
+        for threads in [2usize, 8] {
+            let be = Blocked::new(threads);
+            let got = attention::mha_forward_streaming(&q, &k, &v, &p,
+                                                       8, 8, &be);
+            assert_eq!(got.output.data(), want.output.data(),
+                       "fwd output bits (threads={threads}, {:?})",
+                       p.mask);
+            assert_eq!(got.lse.data(), want.lse.data(),
+                       "fwd lse bits (threads={threads}, {:?})", p.mask);
+            let gb = attention::mha_backward_streaming(&q, &k, &v, &dout,
+                                                       &got.lse, &p, 8, 8,
+                                                       &be);
+            for (g, w, nm) in [(&gb.dq, &gw.dq, "dq"),
+                               (&gb.dk, &gw.dk, "dk"),
+                               (&gb.dv, &gw.dv, "dv")] {
+                assert_eq!(g.data(), w.data(),
+                           "bwd {nm} bits (threads={threads}, {:?})",
+                           p.mask);
+            }
+        }
+    }
 }

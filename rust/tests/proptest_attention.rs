@@ -1,9 +1,9 @@
 //! Property tests: online-softmax algebra, I/O model, and coordinator
 //! invariants over randomized inputs (seeded; see `proptest` module docs).
 
-use sparkattention::attention::{self, AttnParams};
+use sparkattention::attention::{self, AttnParams, BlockLayout, Mask};
 use sparkattention::data::Batcher;
-use sparkattention::exec::Scalar;
+use sparkattention::exec::{Backend, Blocked, Precision, Scalar, Simd};
 use sparkattention::iomodel::{self, MhaShape};
 use sparkattention::proptest::{check, default_cases, Gen, OneOf, USize};
 use sparkattention::tensor::{bf16, Rng, Tensor};
@@ -56,10 +56,10 @@ fn qkv(c: &MhaCase) -> (Tensor, Tensor, Tensor) {
 fn streaming_equals_oracle_for_any_blocks() {
     check("streaming=oracle", &MhaGen, default_cases(), |c| {
         let (q, k, v) = qkv(&c);
-        let p = AttnParams::new(c.d, c.causal);
-        let a = attention::mha_forward(&q, &k, &v, p, &Scalar);
+        let p = AttnParams::new(c.d, c.causal).unwrap();
+        let a = attention::mha_forward(&q, &k, &v, &p, &Scalar);
         let b = attention::mha_forward_streaming(
-            &q, &k, &v, p, c.block_q, c.block_k, &Scalar);
+            &q, &k, &v, &p, c.block_q, c.block_k, &Scalar);
         let err = a.output.max_abs_diff(&b.output);
         if err > 1e-3 {
             return Err(format!("output err {err} for {c:?}"));
@@ -78,8 +78,8 @@ fn streaming_equals_oracle_for_any_blocks() {
 fn output_within_v_hull() {
     check("output-in-hull", &MhaGen, default_cases(), |c| {
         let (q, k, v) = qkv(&c);
-        let p = AttnParams::new(c.d, c.causal);
-        let o = attention::mha_forward(&q, &k, &v, p, &Scalar).output;
+        let p = AttnParams::new(c.d, c.causal).unwrap();
+        let o = attention::mha_forward(&q, &k, &v, &p, &Scalar).output;
         for b in 0..c.bh {
             for col in 0..c.d {
                 let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
@@ -107,8 +107,8 @@ fn causal_ignores_future() {
     check("causal-no-future", &MhaGen, default_cases() / 2, |mut c| {
         c.causal = true;
         let (q, k, v) = qkv(&c);
-        let p = AttnParams::new(c.d, true);
-        let o1 = attention::mha_forward(&q, &k, &v, p, &Scalar).output;
+        let p = AttnParams::new(c.d, true).unwrap();
+        let o1 = attention::mha_forward(&q, &k, &v, &p, &Scalar).output;
         // perturb the last K/V row; everything before must be unchanged
         let mut k2 = k.clone();
         let mut v2 = v.clone();
@@ -118,7 +118,7 @@ fn causal_ignores_future() {
                 v2.set(&[b, c.n - 1, col], -9.0);
             }
         }
-        let o2 = attention::mha_forward(&q, &k2, &v2, p, &Scalar).output;
+        let o2 = attention::mha_forward(&q, &k2, &v2, &p, &Scalar).output;
         for b in 0..c.bh {
             for i in 0..c.n - 1 {
                 for col in 0..c.d {
@@ -139,12 +139,164 @@ fn causal_ignores_future() {
 fn zero_cotangent_zero_grads() {
     check("zero-dO", &MhaGen, default_cases() / 2, |c| {
         let (q, k, v) = qkv(&c);
-        let p = AttnParams::new(c.d, c.causal);
+        let p = AttnParams::new(c.d, c.causal).unwrap();
         let dout = Tensor::zeros(vec![c.bh, c.n, c.d]);
-        let g = attention::mha_backward(&q, &k, &v, &dout, p, &Scalar);
+        let g = attention::mha_backward(&q, &k, &v, &dout, &p, &Scalar);
         for (nm, t) in [("dq", &g.dq), ("dk", &g.dk), ("dv", &g.dv)] {
             if t.data().iter().any(|&x| x != 0.0) {
                 return Err(format!("{nm} nonzero under zero cotangent"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Random *masked* MHA case: every `Mask` variant, with the edge cases
+/// the fully-masked-row bugfix exists for — a zero-width window (every
+/// row fully masked), a width-1 window (exactly one live element per
+/// row), and a hand-built block-sparse layout with one fully-dead
+/// block row and one single-live-tile row.
+#[derive(Debug, Clone)]
+struct MaskedCase {
+    bh: usize,
+    n: usize,
+    d: usize,
+    block_q: usize,
+    block_k: usize,
+    mask: Mask,
+    seed: u64,
+}
+
+struct MaskedGen;
+
+impl Gen for MaskedGen {
+    type Value = MaskedCase;
+
+    fn generate(&self, rng: &mut Rng) -> MaskedCase {
+        let n = OneOf(vec![8usize, 16, 32]).generate(rng);
+        let divisors: Vec<usize> = (1..=n).filter(|b| n % b == 0).collect();
+        let blocks = OneOf(divisors);
+        let mask = match rng.below(6) {
+            0 => Mask::Dense,
+            1 => Mask::Causal,
+            2 => Mask::SlidingWindow { w: 0 },
+            3 => Mask::SlidingWindow { w: 1 },
+            4 => Mask::SlidingWindow {
+                w: USize { lo: 1, hi: n }.generate(rng),
+            },
+            _ => {
+                // 4×4 block grid: row 1 fully dead (empty-row edge),
+                // row 2 a single live tile, rest random-ish
+                let b = n / 4;
+                let mut live = vec![false; 16];
+                for (bi, row) in live.chunks_mut(4).enumerate() {
+                    match bi {
+                        1 => {}
+                        2 => row[0] = true,
+                        _ => {
+                            for (bj, cell) in row.iter_mut().enumerate() {
+                                *cell = bj <= bi || rng.uniform() < 0.4;
+                            }
+                        }
+                    }
+                }
+                Mask::BlockSparse {
+                    layout: BlockLayout::new(b, 4, live).unwrap(),
+                }
+            }
+        };
+        MaskedCase {
+            bh: USize { lo: 1, hi: 2 }.generate(rng),
+            n,
+            d: OneOf(vec![2usize, 4, 8]).generate(rng),
+            block_q: blocks.generate(rng),
+            block_k: blocks.generate(rng),
+            mask,
+            seed: rng.next_u64(),
+        }
+    }
+}
+
+/// Masked streaming ≡ masked oracle for every `Mask` variant, with the
+/// fully-masked-row contract (exact-zero output rows, `-inf` LSE
+/// sentinel in both paths) and bitwise determinism across the
+/// f32 backend roster and thread counts.
+#[test]
+fn masked_streaming_matches_oracle_across_backends() {
+    check("masked-streaming", &MaskedGen, default_cases() / 2, |c| {
+        let mut r = Rng::new(c.seed);
+        let q = Tensor::randn(vec![c.bh, c.n, c.d], &mut r);
+        let k = Tensor::randn(vec![c.bh, c.n, c.d], &mut r);
+        let v = Tensor::randn(vec![c.bh, c.n, c.d], &mut r);
+        let dout = Tensor::randn(vec![c.bh, c.n, c.d], &mut r);
+        let p = AttnParams::with_mask(c.d, c.mask.clone()).unwrap();
+        let oracle = attention::mha_forward(&q, &k, &v, &p, &Scalar);
+        let want = attention::mha_forward_streaming(
+            &q, &k, &v, &p, c.block_q, c.block_k, &Scalar);
+        let err = want.output.max_abs_diff(&oracle.output);
+        if err > 1e-3 {
+            return Err(format!("output err {err} for {c:?}"));
+        }
+        // per-row contract (element-wise: -inf sentinels poison
+        // max_abs_diff, so lse is checked row by row)
+        for b in 0..c.bh {
+            for i in 0..c.n {
+                let row_live = (0..c.n).any(|j| p.mask.live(i, j));
+                let (lo, ls) = (oracle.lse.at(&[b, i]),
+                                want.lse.at(&[b, i]));
+                if row_live {
+                    if !lo.is_finite() || (lo - ls).abs() > 1e-3 {
+                        return Err(format!(
+                            "live row {i}: lse {lo} vs {ls} for {c:?}"));
+                    }
+                } else {
+                    if lo != f32::NEG_INFINITY || ls != f32::NEG_INFINITY {
+                        return Err(format!(
+                            "masked row {i}: lse {lo}/{ls}, want -inf \
+                             for {c:?}"));
+                    }
+                    for col in 0..c.d {
+                        let (a, s) = (oracle.output.at(&[b, i, col]),
+                                      want.output.at(&[b, i, col]));
+                        if a.to_bits() != 0 || s.to_bits() != 0 {
+                            return Err(format!(
+                                "masked row {i} output {a}/{s} ≠ +0.0 \
+                                 for {c:?}"));
+                        }
+                    }
+                }
+            }
+        }
+        // bitwise determinism across f32 backends and thread counts
+        let bwd_s = attention::mha_backward_streaming(
+            &q, &k, &v, &dout, &oracle.lse, &p, c.block_q, c.block_k,
+            &Scalar);
+        for threads in [1usize, 2, 8] {
+            let backends: Vec<Box<dyn Backend>> = vec![
+                Box::new(Blocked::new(threads)),
+                Box::new(Simd::new(threads, Precision::F32)),
+            ];
+            for be in &backends {
+                let got = attention::mha_forward_streaming(
+                    &q, &k, &v, &p, c.block_q, c.block_k, be.as_ref());
+                if got.output.data() != want.output.data()
+                    || got.lse.data() != want.lse.data()
+                {
+                    return Err(format!(
+                        "{} t={threads}: streamed fwd bits differ \
+                         for {c:?}", be.name()));
+                }
+                let bwd = attention::mha_backward_streaming(
+                    &q, &k, &v, &dout, &oracle.lse, &p, c.block_q,
+                    c.block_k, be.as_ref());
+                if bwd.dq.data() != bwd_s.dq.data()
+                    || bwd.dk.data() != bwd_s.dk.data()
+                    || bwd.dv.data() != bwd_s.dv.data()
+                {
+                    return Err(format!(
+                        "{} t={threads}: streamed bwd bits differ \
+                         for {c:?}", be.name()));
+                }
             }
         }
         Ok(())
@@ -178,6 +330,31 @@ fn io_model_invariants() {
             || sim.write_bytes != ana.write_bytes {
             return Err(format!(
                 "simulator {sim:?} != analytic {ana:?} at {s:?} bq={bq}"));
+        }
+        // masked variants: the skip-aware simulator must agree with the
+        // tile-count closed form for every mask, including a zero-width
+        // window (all tiles skipped → zero traffic)
+        for mask in [Mask::Dense, Mask::Causal,
+                     Mask::SlidingWindow { w: s.n / 4 },
+                     Mask::SlidingWindow { w: 0 },
+                     Mask::BlockSparse {
+                         layout: BlockLayout::random(s.n / 4, 4, 30, 7)
+                             .unwrap(),
+                     }] {
+            let (ms, _) = iomodel::simulate_fused_fwd_masked(
+                s, &mask, bq, bq, 16 << 20);
+            let ma = iomodel::analytic_fused_fwd_masked(s, &mask, bq, bq);
+            if ms.read_bytes != ma.read_bytes
+                || ms.write_bytes != ma.write_bytes {
+                return Err(format!(
+                    "masked simulator {ms:?} != analytic {ma:?} at {s:?} \
+                     bq={bq} mask={}", mask.label()));
+            }
+            if mask == (Mask::SlidingWindow { w: 0 })
+                && ms.total_bytes() != 0 {
+                return Err(format!(
+                    "w=0 must produce zero traffic, got {ms:?}"));
+            }
         }
         Ok(())
     });

@@ -44,8 +44,8 @@ fn fused_fwd_matches_rust_oracle() {
     assert_eq!(out.len(), meta.outputs.len());
     let o_dev = out[0].as_tensor().unwrap();
 
-    let o_ref = attention::mha_forward(&q, &k, &v, attention::AttnParams {
-        causal: false,
+    let o_ref = attention::mha_forward(&q, &k, &v, &attention::AttnParams {
+        mask: attention::Mask::Dense,
         scale: 1.0 / (d as f32).sqrt(),
     }, &Scalar).output;
     let err = o_dev.max_abs_diff(&o_ref);
@@ -72,8 +72,8 @@ fn fused_fwd_causal_matches_rust_oracle() {
     ];
     let out = eng.execute(name, &inputs).expect("execute");
     let o_dev = out[0].as_tensor().unwrap();
-    let o_ref = attention::mha_forward(&q, &k, &v, attention::AttnParams {
-        causal: true,
+    let o_ref = attention::mha_forward(&q, &k, &v, &attention::AttnParams {
+        mask: attention::Mask::Causal,
         scale: 1.0 / (d as f32).sqrt(),
     }, &Scalar).output;
     let err = o_dev.max_abs_diff(&o_ref);
@@ -107,9 +107,9 @@ fn fused_bwd_matches_rust_oracle() {
         HostValue::from_tensor(&v), o.clone(), lse.clone(),
         HostValue::from_tensor(&dout),
     ]).expect("bwd");
-    let params = attention::AttnParams { causal: false,
+    let params = attention::AttnParams { mask: attention::Mask::Dense,
                                          scale: 1.0 / (d as f32).sqrt() };
-    let grads = attention::mha_backward(&q, &k, &v, &dout, params,
+    let grads = attention::mha_backward(&q, &k, &v, &dout, &params,
                                         &Scalar);
     for (dev, oracle, nm) in [(&b[0], &grads.dq, "dq"),
                               (&b[1], &grads.dk, "dk"),

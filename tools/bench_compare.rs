@@ -107,7 +107,10 @@ fn run() -> Result<bool> {
     };
     println!("bench_compare: sweeping ns={ns:?} bh={bh} d={d} \
               threads={threads} (warmup {warmup}, iters {iters})");
-    let fresh = host_backend_report(&ns, bh, d, false, opts)
+    // the trajectory gate compares dense-mask rows only: masked-variant
+    // groups carry different FLOPs and would corrupt the family ratios
+    let masks = [sparkattention::attention::MaskSpec::Dense];
+    let fresh = host_backend_report(&ns, bh, d, false, &masks, opts)
         .context("running the host backend sweep")?;
     let fresh_json = fresh.to_json();
 
