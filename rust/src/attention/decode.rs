@@ -1,0 +1,375 @@
+//! Decode-step attention: one query token against a paged K/V cache.
+//!
+//! Serving appends a single token per sequence per scheduler step, so
+//! the forward pass degenerates to one query row per head attending to
+//! the cached history — the `bq = 1` corner of the streaming tiling.
+//! [`decode_step`] replays `streaming_fwd_tile`'s per-row online
+//! softmax *exactly*: the same score computation (mul-then-add dot in
+//! key order, masked logits to `-inf`), the same `(m, l, acc)` update
+//! with `alpha = exp(m_prev − m_cur)` rescaling, the same
+//! fully-masked-row contract (exact zeros + `-inf` LSE), and the same
+//! `pv != 0` accumulation skip.  Each cache block plays the role of
+//! one `block_k` key tile, so when the cache's `block_tokens` divides
+//! the prefix length the result is **bitwise identical** to row
+//! `pos` of [`super::mha_forward_streaming`] with `block_k =
+//! block_tokens` over the same prefix — the property the serve tests
+//! pin.  (Processing order over key blocks is the only degree of
+//! freedom, and a key block that is dead for this row is a bitwise
+//! no-op either way: with `m = -inf` the update is skipped outright,
+//! and with `m > -inf` it multiplies the accumulator by
+//! `exp(0) = 1.0` exactly and adds `exp(-inf) = 0.0` to `l`.)
+//!
+//! **Masks.**  `i` is the query's absolute position `pos`, `j` a
+//! cached key's absolute position — so `Mask::Causal` is always live
+//! (the cache only holds the past), `SlidingWindow` drops keys older
+//! than `w`, and `BlockSparse` must cover `pos` (its layout `n` bounds
+//! the sequence, checked here like `check_n` does for the full paths).
+//!
+//! **Precision.**  `mixed` quantizes the query row once and each
+//! cached K/V element at its operand boundary — bf16 quantization is
+//! idempotent, so this is bitwise-equivalent to the streaming path's
+//! quantize-whole-tensors-at-entry under the same inputs.
+
+use crate::tensor::bf16;
+use crate::tensor::paged::KvBlockView;
+
+use super::AttnParams;
+
+/// One decode step for one sequence: the query row `q` (`heads · d`
+/// f32s, the token at absolute position `pos`) attends to the cached
+/// history in `blocks` (which must cover exactly positions
+/// `0..=pos`).  Writes the attention output into `out` (`heads · d`)
+/// and the per-head log-sum-exp into `lse` (`heads`); a head whose
+/// row is fully masked gets exact zeros and the `-inf` sentinel,
+/// matching the streaming contract.
+pub fn decode_step(q: &[f32], blocks: &[KvBlockView<'_>], heads: usize,
+                   d: usize, pos: usize, p: &AttnParams, mixed: bool,
+                   out: &mut [f32], lse: &mut [f32]) {
+    let width = heads * d;
+    assert!(heads > 0 && d > 0, "decode needs heads ≥ 1 and d ≥ 1");
+    assert_eq!(q.len(), width, "query row must be heads·d");
+    assert_eq!(out.len(), width, "output row must be heads·d");
+    assert_eq!(lse.len(), heads, "lse must have one slot per head");
+    let cached: usize = blocks.iter().map(|b| b.tokens).sum();
+    assert_eq!(cached, pos + 1,
+               "cache holds {cached} tokens but the query sits at \
+                position {pos}: append the query's own K/V first");
+    if let super::Mask::BlockSparse { layout } = &p.mask {
+        assert!(pos < layout.n(),
+                "block-sparse layout covers n={} but decode position \
+                 is {pos}", layout.n());
+    }
+
+    for h in 0..heads {
+        let mut m = f32::NEG_INFINITY;
+        let mut l = 0.0f32;
+        let mut acc = vec![0.0f32; d];
+        let qrow: Vec<f32> = q[h * d..(h + 1) * d].iter()
+            .map(|&x| if mixed { bf16::quantize(x) } else { x })
+            .collect();
+        for blk in blocks {
+            debug_assert!(blk.tokens >= 1);
+            if !p.mask.tile_live(pos, 1, blk.start, blk.tokens) {
+                continue; // provably outside the mask, like streaming
+            }
+            // srow = q · K_blockᵀ · scale  (masked → -inf), key order
+            let mut srow = vec![0.0f32; blk.tokens];
+            for (c, sv) in srow.iter_mut().enumerate() {
+                let krow = &blk.k[c * width + h * d
+                                  ..c * width + (h + 1) * d];
+                let mut dot = 0.0;
+                for (x, &y) in qrow.iter().zip(krow) {
+                    let y = if mixed { bf16::quantize(y) } else { y };
+                    dot += x * y;
+                }
+                *sv = if p.mask.live(pos, blk.start + c) {
+                    dot * p.scale
+                } else {
+                    f32::NEG_INFINITY
+                };
+            }
+            // online softmax update — streaming_fwd_tile verbatim
+            let m_cur = srow.iter().cloned().fold(m, f32::max);
+            if m_cur == f32::NEG_INFINITY {
+                continue; // row fully masked so far
+            }
+            let alpha = if m == f32::NEG_INFINITY {
+                0.0
+            } else {
+                (m - m_cur).exp()
+            };
+            let mut psum = 0.0;
+            for x in acc.iter_mut() {
+                *x *= alpha;
+            }
+            for (c, &sv) in srow.iter().enumerate() {
+                let pv = (sv - m_cur).exp();
+                let pv = if mixed { bf16::quantize(pv) } else { pv };
+                psum += pv;
+                if pv != 0.0 {
+                    let vrow = &blk.v[c * width + h * d
+                                      ..c * width + (h + 1) * d];
+                    for (a, &vv) in acc.iter_mut().zip(vrow) {
+                        let vv =
+                            if mixed { bf16::quantize(vv) } else { vv };
+                        *a += pv * vv;
+                    }
+                }
+            }
+            l = l * alpha + psum;
+            m = m_cur;
+        }
+        let orow = &mut out[h * d..(h + 1) * d];
+        if l == 0.0 {
+            for o in orow.iter_mut() {
+                *o = 0.0;
+            }
+            lse[h] = f32::NEG_INFINITY;
+        } else {
+            for (o, &a) in orow.iter_mut().zip(&acc) {
+                *o = a / l;
+            }
+            lse[h] = m + l.ln();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{mha_forward, mha_forward_streaming,
+                           BlockLayout, Mask};
+    use crate::exec::{ExecOptions, Scalar};
+    use crate::tensor::paged::{KvCache, SeqKv};
+    use crate::tensor::{Rng, Tensor};
+
+    /// Masks exercised by every equivalence test; `n` is the full
+    /// sequence length the cache grows to.
+    fn mask_roster(n: usize) -> Vec<Mask> {
+        vec![
+            Mask::Dense,
+            Mask::Causal,
+            Mask::SlidingWindow { w: 1 },
+            Mask::SlidingWindow { w: 3 },
+            Mask::SlidingWindow { w: n },
+            Mask::BlockSparse {
+                layout: BlockLayout::random(n / 4, 4, 30, 7).unwrap(),
+            },
+        ]
+    }
+
+    /// Fills a cache with the rows of (heads, n, d) K/V tensors and
+    /// returns the per-token flattened (heads·d) query rows.
+    fn fill_cache(c: &mut KvCache, s: &mut SeqKv, k: &Tensor, v: &Tensor,
+                  upto: usize, heads: usize, d: usize, n: usize) {
+        let width = heads * d;
+        for t in 0..upto {
+            let mut krow = vec![0.0f32; width];
+            let mut vrow = vec![0.0f32; width];
+            for h in 0..heads {
+                let base = (h * n + t) * d;
+                krow[h * d..(h + 1) * d]
+                    .copy_from_slice(&k.data()[base..base + d]);
+                vrow[h * d..(h + 1) * d]
+                    .copy_from_slice(&v.data()[base..base + d]);
+            }
+            c.append(s, &krow, &vrow).unwrap();
+        }
+    }
+
+    fn qrow_flat(q: &Tensor, t: usize, heads: usize, d: usize, n: usize)
+                 -> Vec<f32> {
+        let mut row = vec![0.0f32; heads * d];
+        for h in 0..heads {
+            let base = (h * n + t) * d;
+            row[h * d..(h + 1) * d]
+                .copy_from_slice(&q.data()[base..base + d]);
+        }
+        row
+    }
+
+    // Bitwise: when block_tokens divides the prefix length, every
+    // decode step equals the matching row of the streaming forward
+    // with block_k = block_tokens, for every mask variant.
+    #[test]
+    fn decode_is_bitwise_streaming_row() {
+        let (heads, d, n, bt) = (2usize, 4usize, 8usize, 4usize);
+        let mut rng = Rng::new(0xDEC0DE);
+        let q = Tensor::randn(vec![heads, n, d], &mut rng);
+        let k = Tensor::randn(vec![heads, n, d], &mut rng);
+        let v = Tensor::randn(vec![heads, n, d], &mut rng);
+        for mask in mask_roster(n) {
+            let p = AttnParams::with_mask(d, mask).unwrap();
+            let mut cache = KvCache::new(n / bt + 1, bt, heads, d);
+            let mut seq = SeqKv::new();
+            for pos in 0..n {
+                // append exactly token `pos`'s K/V, then decode it
+                let width = heads * d;
+                let mut krow = vec![0.0f32; width];
+                let mut vrow = vec![0.0f32; width];
+                for h in 0..heads {
+                    let base = (h * n + pos) * d;
+                    krow[h * d..(h + 1) * d]
+                        .copy_from_slice(&k.data()[base..base + d]);
+                    vrow[h * d..(h + 1) * d]
+                        .copy_from_slice(&v.data()[base..base + d]);
+                }
+                cache.append(&mut seq, &krow, &vrow).unwrap();
+                // only compare at prefixes the streaming path can tile
+                let t = pos + 1;
+                if t % bt != 0 {
+                    continue;
+                }
+                if let Mask::BlockSparse { layout } = &p.mask {
+                    if layout.n() != t {
+                        continue; // layout pinned to one n
+                    }
+                }
+                let qt = Tensor::new(vec![heads, t, d],
+                    (0..heads).flat_map(|h| {
+                        q.data()[h * n * d..(h * n + t) * d].to_vec()
+                    }).collect());
+                let kt = Tensor::new(vec![heads, t, d],
+                    (0..heads).flat_map(|h| {
+                        k.data()[h * n * d..(h * n + t) * d].to_vec()
+                    }).collect());
+                let vt = Tensor::new(vec![heads, t, d],
+                    (0..heads).flat_map(|h| {
+                        v.data()[h * n * d..(h * n + t) * d].to_vec()
+                    }).collect());
+                let want = mha_forward_streaming(&qt, &kt, &vt, &p, bt,
+                                                 bt, &Scalar);
+                let mut out = vec![0.0f32; heads * d];
+                let mut lse = vec![0.0f32; heads];
+                decode_step(&qrow_flat(&q, pos, heads, d, n),
+                            &cache.blocks(&seq), heads, d, pos, &p,
+                            false, &mut out, &mut lse);
+                for h in 0..heads {
+                    let wrow = &want.output.data()
+                        [(h * t + pos) * d..(h * t + pos + 1) * d];
+                    let grow = &out[h * d..(h + 1) * d];
+                    for (a, b) in grow.iter().zip(wrow) {
+                        assert_eq!(a.to_bits(), b.to_bits(),
+                                   "mask {} pos {pos} head {h}",
+                                   p.mask.label());
+                    }
+                    let wl = want.lse.data()[h * t + pos];
+                    assert_eq!(lse[h].to_bits(), wl.to_bits(),
+                               "lse mask {} pos {pos} head {h}",
+                               p.mask.label());
+                }
+            }
+        }
+    }
+
+    // Tolerance: at prefixes the streaming tiling cannot represent
+    // (partial tail block), decode still matches the fused oracle.
+    #[test]
+    fn decode_matches_oracle_at_ragged_prefixes() {
+        let (heads, d, n, bt) = (2usize, 4usize, 8usize, 4usize);
+        let mut rng = Rng::new(0xFACADE);
+        let q = Tensor::randn(vec![heads, n, d], &mut rng);
+        let k = Tensor::randn(vec![heads, n, d], &mut rng);
+        let v = Tensor::randn(vec![heads, n, d], &mut rng);
+        for mask in [Mask::Dense, Mask::Causal,
+                     Mask::SlidingWindow { w: 3 }] {
+            let p = AttnParams::with_mask(d, mask).unwrap();
+            for pos in [2usize, 5, 6] {
+                // a cache truncated to pos+1 tokens: rebuild
+                let mut c2 = KvCache::new(n / bt + 1, bt, heads, d);
+                let mut s2 = SeqKv::new();
+                fill_cache(&mut c2, &mut s2, &k, &v, pos + 1, heads, d,
+                           n);
+                let t = pos + 1;
+                let qt = Tensor::new(vec![heads, t, d],
+                    (0..heads).flat_map(|h| {
+                        q.data()[h * n * d..(h * n + t) * d].to_vec()
+                    }).collect());
+                let kt = Tensor::new(vec![heads, t, d],
+                    (0..heads).flat_map(|h| {
+                        k.data()[h * n * d..(h * n + t) * d].to_vec()
+                    }).collect());
+                let vt = Tensor::new(vec![heads, t, d],
+                    (0..heads).flat_map(|h| {
+                        v.data()[h * n * d..(h * n + t) * d].to_vec()
+                    }).collect());
+                let want = mha_forward(&qt, &kt, &vt, &p, &Scalar);
+                let mut out = vec![0.0f32; heads * d];
+                let mut lse = vec![0.0f32; heads];
+                decode_step(&qrow_flat(&q, pos, heads, d, n),
+                            &c2.blocks(&s2), heads, d, pos, &p, false,
+                            &mut out, &mut lse);
+                for h in 0..heads {
+                    let wrow = &want.output.data()
+                        [(h * t + pos) * d..(h * t + pos + 1) * d];
+                    for (a, b) in out[h * d..(h + 1) * d].iter()
+                        .zip(wrow)
+                    {
+                        assert!((a - b).abs() < 1e-5,
+                                "mask {} pos {pos} head {h}: {a} vs {b}",
+                                p.mask.label());
+                    }
+                }
+            }
+        }
+    }
+
+    // A fully-masked decode row (window 0 analogue can't come from the
+    // spec surface, but the core Mask can express it) produces exact
+    // zeros and the -inf sentinel.
+    #[test]
+    fn fully_masked_decode_row_is_zero_with_sentinel() {
+        let (heads, d, bt) = (2usize, 3usize, 2usize);
+        let p = AttnParams::with_mask(
+            d, Mask::SlidingWindow { w: 0 }).unwrap();
+        let mut cache = KvCache::new(4, bt, heads, d);
+        let mut seq = SeqKv::new();
+        let width = heads * d;
+        for t in 0..3 {
+            let row: Vec<f32> =
+                (0..width).map(|i| (t * width + i) as f32).collect();
+            cache.append(&mut seq, &row, &row).unwrap();
+        }
+        let qv = vec![1.0f32; width];
+        let mut out = vec![9.0f32; width];
+        let mut lse = vec![9.0f32; heads];
+        decode_step(&qv, &cache.blocks(&seq), heads, d, 2, &p, false,
+                    &mut out, &mut lse);
+        assert!(out.iter().all(|x| x.to_bits() == 0));
+        assert!(lse.iter().all(|x| *x == f32::NEG_INFINITY));
+    }
+
+    // Mixed precision: decode's quantize-at-read equals streaming's
+    // quantize-at-entry bitwise.
+    #[test]
+    fn mixed_decode_is_bitwise_mixed_streaming_row() {
+        let (heads, d, n, bt) = (2usize, 4usize, 8usize, 4usize);
+        let mut rng = Rng::new(0xB16B00);
+        let q = Tensor::randn(vec![heads, n, d], &mut rng);
+        let k = Tensor::randn(vec![heads, n, d], &mut rng);
+        let v = Tensor::randn(vec![heads, n, d], &mut rng);
+        let p = AttnParams::new(d, true).unwrap();
+        let be =
+            ExecOptions::simd(2, crate::exec::Precision::Mixed).build();
+        let want = mha_forward_streaming(&q, &k, &v, &p, bt, bt,
+                                         be.as_ref());
+        let mut cache = KvCache::new(n / bt, bt, heads, d);
+        let mut seq = SeqKv::new();
+        fill_cache(&mut cache, &mut seq, &k, &v, n, heads, d, n);
+        let pos = n - 1;
+        let mut out = vec![0.0f32; heads * d];
+        let mut lse = vec![0.0f32; heads];
+        decode_step(&qrow_flat(&q, pos, heads, d, n),
+                    &cache.blocks(&seq), heads, d, pos, &p, true,
+                    &mut out, &mut lse);
+        for h in 0..heads {
+            let wrow = &want.output.data()
+                [(h * n + pos) * d..(h * n + pos + 1) * d];
+            for (a, b) in out[h * d..(h + 1) * d].iter().zip(wrow) {
+                assert_eq!(a.to_bits(), b.to_bits(), "head {h}");
+            }
+            assert_eq!(lse[h].to_bits(),
+                       want.lse.data()[h * n + pos].to_bits());
+        }
+    }
+}

@@ -49,9 +49,11 @@
 //! RNG (`python/compile/kernels/rng.py`), so cross-checking dropout paths
 //! happens in the Python test suite where both sides share the RNG.
 
+pub mod decode;
 pub mod mask;
 pub mod streaming_bwd;
 
+pub use decode::decode_step;
 pub use mask::{BlockLayout, Mask, MaskSpec, TileCounts};
 pub use streaming_bwd::mha_backward_streaming;
 

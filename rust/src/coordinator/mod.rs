@@ -7,13 +7,17 @@
 //!   (Fig 10/11/12, the §4.2.3 accuracy table, the §2.3 I/O claim) from
 //!   the artifact set + the analytic models.
 //! * `inputs` — deterministic artifact input synthesis from manifest specs.
+//! * `serve` — the `spark serve` inference path: continuous-batching
+//!   scheduler + paged KV-cache + line-JSON TCP front-end.
 
 pub mod checkpoint;
 pub mod harness;
 pub mod inputs;
+pub mod serve;
 pub mod trainer;
 
 pub use harness::{accuracy_report, fig10_forward, fig11_backward,
                   fig12_e2e, host_backend_report, io_report,
                   projected_fig10, projected_fig12, report_roster};
+pub use serve::{Request, Response, Scheduler, ServeConfig, TcpServer};
 pub use trainer::{TrainOutcome, Trainer};

@@ -1,0 +1,848 @@
+//! `spark serve`: continuous-batching inference over the paged KV-cache.
+//!
+//! The serving layer is three pieces:
+//!
+//! * [`Scheduler`] — the deterministic core.  Requests carry an
+//!   *arrival ticket* assigned at submission; every scheduling decision
+//!   (admission order, eviction victim, retirement) is a pure function
+//!   of ticket order and cache occupancy — never of wall-clock time,
+//!   which is used only to *report* latency.  Each [`Scheduler::step`]
+//!   is one decode step for the whole running batch: retire finished
+//!   sequences, admit from the queue up to `max_batch`, append one
+//!   K/V row per sequence into the paged cache (evicting under
+//!   pressure), then decode every appended row in parallel on the
+//!   exec backend.
+//! * [`crate::tensor::paged::KvCache`] — fixed-size blocks from one
+//!   arena
+//!   with LIFO free-list reuse, so block placement is reproducible.
+//! * [`crate::attention::decode_step`] — the `bq = 1` streaming-attention
+//!   kernel over the cached blocks; bitwise-identical to the full
+//!   streaming forward (see its module docs), which is what makes the
+//!   core serving property testable: **a request's output fingerprint
+//!   is independent of batching** — the same request alone, batched,
+//!   or evicted-and-retried produces bit-identical decode outputs.
+//!
+//! **Continuous batching.**  New arrivals join the running batch at
+//! step boundaries; finished sequences retire immediately, freeing
+//! their blocks for the same step's admissions.  Under cache pressure
+//! the *youngest* arrival is evicted (released, fingerprint reset,
+//! requeued at the queue front), so the oldest running request always
+//! makes progress — combined with the config guarantee that a lone
+//! sequence always fits (`ceil(max_gen_len / block_tokens) ≤
+//! pool_blocks`), every admitted request terminates.  Evicted requests
+//! restart from step 0; their synthetic rows are a pure function of
+//! `(seed, step)`, so the recomputation is bitwise identical.
+//!
+//! **Workload.**  Requests are synthetic decode streams: step `s` of a
+//! request with seed `σ` derives its query and K/V rows from
+//! `Rng::new(σ).fork(s)`.  This models the memory/scheduling behaviour
+//! of real decoding (the paper's host attention path per token) while
+//! keeping every byte reproducible — the same property the trainer's
+//! synthetic corpus relies on.
+//!
+//! The TCP front-end ([`TcpServer`]) speaks line-delimited JSON and
+//! exists so a load generator (`spark load`) can drive thousands of
+//! concurrent requests through a real socket; it assigns tickets in
+//! inbox drain order, after which everything is the deterministic core.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+use log::{info, warn};
+
+use crate::attention::{decode_step, AttnParams, MaskSpec};
+use crate::exec::{self, Backend, ExecOptions, Precision, Task};
+use crate::jsonio;
+use crate::metrics::Registry;
+use crate::tensor::paged::{CacheFull, KvCache, SeqKv};
+use crate::tensor::Rng;
+
+/// FNV-1a offset basis: the initial per-request output fingerprint.
+const FP_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// One FNV-1a fold of a 32-bit word into a fingerprint.
+fn fp_fold(h: u64, bits: u32) -> u64 {
+    (h ^ bits as u64).wrapping_mul(0x0000_0100_0000_01B3)
+}
+
+/// Serving configuration (dimensions, cache sizing, batching policy).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Attention heads per request.
+    pub heads: usize,
+    /// Head dimension.
+    pub d: usize,
+    /// Tokens per KV-cache block.
+    pub block_tokens: usize,
+    /// Total blocks in the cache pool.
+    pub pool_blocks: usize,
+    /// Maximum sequences decoding concurrently.
+    pub max_batch: usize,
+    /// Upper bound on a request's `gen_len` (also the sequence length
+    /// the mask is instantiated for).
+    pub max_gen_len: usize,
+    /// Attention mask applied to every request.
+    pub mask: MaskSpec,
+    /// Exec backend running the parallel decode tasks.
+    pub exec: ExecOptions,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            heads: 4,
+            d: 32,
+            block_tokens: 16,
+            pool_blocks: 64,
+            max_batch: 8,
+            max_gen_len: 64,
+            mask: MaskSpec::Causal,
+            exec: ExecOptions::default(),
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Reject configurations that cannot serve: zero dimensions, an
+    /// exec combination the backends refuse, a mask that cannot cover
+    /// `max_gen_len`, or — the liveness-critical one — a pool too
+    /// small for a *lone* maximum-length sequence.  Eviction frees
+    /// other sequences' blocks, so the sole-sequence bound is exactly
+    /// what guarantees the oldest request always finishes.
+    pub fn validate(&self) -> Result<()> {
+        if self.heads == 0 || self.d == 0 || self.block_tokens == 0
+            || self.pool_blocks == 0 || self.max_batch == 0
+            || self.max_gen_len == 0
+        {
+            bail!("serve config dimensions must all be ≥ 1 (heads={} \
+                   d={} block_tokens={} pool_blocks={} max_batch={} \
+                   max_gen_len={})",
+                  self.heads, self.d, self.block_tokens,
+                  self.pool_blocks, self.max_batch, self.max_gen_len);
+        }
+        let need = self.max_gen_len.div_ceil(self.block_tokens);
+        if need > self.pool_blocks {
+            bail!("cache pool too small: a lone max-length sequence \
+                   needs {need} blocks (max_gen_len={} / \
+                   block_tokens={}) but the pool has {} — no eviction \
+                   policy can make such a request finish",
+                  self.max_gen_len, self.block_tokens,
+                  self.pool_blocks);
+        }
+        self.exec.validate()?;
+        self.mask.build(self.max_gen_len).context(
+            "serve mask must instantiate at max_gen_len")?;
+        Ok(())
+    }
+}
+
+/// One inference request: `gen_len` synthetic decode steps whose rows
+/// derive from `seed` (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Request {
+    /// Caller-chosen id, echoed in the [`Response`].
+    pub id: u64,
+    /// Seed of the synthetic token stream.
+    pub seed: u64,
+    /// Decode steps to run (must be `1..=max_gen_len`).
+    pub gen_len: usize,
+}
+
+/// A completed request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Response {
+    /// The request's `id`.
+    pub id: u64,
+    /// The arrival ticket the scheduler assigned at submission.
+    pub ticket: u64,
+    /// FNV-1a fold of every decode output and LSE bit the request
+    /// produced, in step order — the batching-independent identity of
+    /// the computation.
+    pub fingerprint: u64,
+    /// Decode steps executed (== `gen_len`).
+    pub steps: usize,
+    /// Times this request was evicted and restarted.
+    pub evictions: u64,
+    /// Submission-to-completion wall time, seconds (reporting only —
+    /// never consulted by scheduling).
+    pub latency_s: f64,
+}
+
+/// Synthetic rows for step `step` of a request seeded `seed`: the
+/// flattened `(heads·d)` query, key, and value rows, in that order.
+/// Pure in `(seed, step, width)` — an evicted request regenerates
+/// byte-identical rows on retry.
+pub fn synth_rows(seed: u64, step: usize, width: usize)
+                  -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed).fork(step as u64);
+    (rng.normal_vec(width), rng.normal_vec(width),
+     rng.normal_vec(width))
+}
+
+/// A submitted request the scheduler is tracking (queued or running).
+#[derive(Debug)]
+struct Active {
+    req: Request,
+    ticket: u64,
+    seq: SeqKv,
+    step: usize,
+    fingerprint: u64,
+    evictions: u64,
+    submitted: Instant,
+}
+
+/// The continuous-batching scheduler (see the module docs).
+pub struct Scheduler {
+    cfg: ServeConfig,
+    params: AttnParams,
+    backend: Box<dyn Backend>,
+    cache: KvCache,
+    /// Waiting requests in arrival order.  Invariant: every queued
+    /// ticket is greater than every running ticket *except* evicted
+    /// requeues, which are pushed to the front — preserving global
+    /// ascending ticket order across `running ++ queue`.
+    queue: VecDeque<Active>,
+    /// Running batch, ascending ticket order (admission appends,
+    /// eviction pops the back, retirement removes anywhere).
+    running: Vec<Active>,
+    next_ticket: u64,
+    /// Serving metrics: `request_latency` / `serve_step` series,
+    /// admission/eviction/completion counters, occupancy gauges.
+    pub metrics: Registry,
+}
+
+impl Scheduler {
+    /// Build a scheduler from a validated config.
+    pub fn new(cfg: ServeConfig) -> Result<Self> {
+        cfg.validate()?;
+        let mask = cfg.mask.build(cfg.max_gen_len)?;
+        let params = AttnParams::with_mask(cfg.d, mask)?;
+        let backend = cfg.exec.build();
+        let cache = KvCache::new(cfg.pool_blocks, cfg.block_tokens,
+                                 cfg.heads, cfg.d);
+        Ok(Scheduler {
+            cfg,
+            params,
+            backend,
+            cache,
+            queue: VecDeque::new(),
+            running: Vec::new(),
+            next_ticket: 0,
+            metrics: Registry::new(),
+        })
+    }
+
+    /// The configuration this scheduler was built from.
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// Blocks currently free in the cache pool.
+    pub fn free_blocks(&self) -> usize {
+        self.cache.free_blocks()
+    }
+
+    /// Total blocks in the cache pool.
+    pub fn capacity_blocks(&self) -> usize {
+        self.cache.capacity_blocks()
+    }
+
+    /// Whether any request is queued or running.
+    pub fn has_work(&self) -> bool {
+        !self.queue.is_empty() || !self.running.is_empty()
+    }
+
+    /// Queued (not yet admitted) requests.
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Currently running requests.
+    pub fn running(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Submit a request; returns its arrival ticket.  Tickets are
+    /// assigned in submission order and are the *only* input to
+    /// admission/eviction ordering.
+    pub fn submit(&mut self, req: Request) -> Result<u64> {
+        if req.gen_len == 0 || req.gen_len > self.cfg.max_gen_len {
+            bail!("request {} gen_len {} out of range 1..={}",
+                  req.id, req.gen_len, self.cfg.max_gen_len);
+        }
+        let ticket = self.next_ticket;
+        self.next_ticket += 1;
+        self.queue.push_back(Active {
+            req,
+            ticket,
+            seq: SeqKv::new(),
+            step: 0,
+            fingerprint: FP_SEED,
+            evictions: 0,
+            submitted: Instant::now(),
+        });
+        self.metrics.inc("requests", 1);
+        Ok(ticket)
+    }
+
+    /// Evict the youngest running request: release its blocks, reset
+    /// its decode state (rows are f(seed, step), so the retry is
+    /// bitwise identical), and requeue it at the *front* — youngest
+    /// running is still older than everything queued, so ascending
+    /// ticket order is preserved.
+    fn evict_youngest(&mut self) {
+        let mut r = self.running.pop()
+            .expect("eviction from an empty batch");
+        self.cache.release(&mut r.seq);
+        r.step = 0;
+        r.fingerprint = FP_SEED;
+        r.evictions += 1;
+        self.metrics.inc("evicted", 1);
+        self.queue.push_front(r);
+    }
+
+    /// One scheduler step: admit → append (evicting under pressure) →
+    /// parallel decode → fold fingerprints → retire.  Returns the
+    /// requests that completed this step, in ascending ticket order.
+    pub fn step(&mut self) -> Vec<Response> {
+        let t_step = Instant::now();
+        let (heads, d) = (self.cfg.heads, self.cfg.d);
+        let width = heads * d;
+
+        // Admission: queue front → batch back, up to max_batch.  New
+        // arrivals only ever join here, at a step boundary.
+        while self.running.len() < self.cfg.max_batch {
+            let Some(a) = self.queue.pop_front() else { break };
+            self.metrics.inc("admitted", 1);
+            self.running.push(a);
+        }
+
+        // Append phase: one K/V row per running sequence, oldest
+        // first.  Cache pressure evicts from the back (youngest), so
+        // index i is only ever removed when it *is* the back.
+        let mut decoded: Vec<usize> = Vec::new();
+        let mut qrows: Vec<Vec<f32>> = Vec::new();
+        let mut i = 0;
+        while i < self.running.len() {
+            let (qrow, krow, vrow) = synth_rows(
+                self.running[i].req.seed, self.running[i].step, width);
+            let appended = loop {
+                match self.cache.append(&mut self.running[i].seq,
+                                        &krow, &vrow) {
+                    Ok(()) => break true,
+                    Err(CacheFull) => {
+                        if self.running.len() - 1 > i {
+                            self.evict_youngest();
+                        } else if i > 0 {
+                            self.evict_youngest(); // i itself
+                            break false;
+                        } else {
+                            // A lone sequence always fits by
+                            // ServeConfig::validate's pool bound.
+                            panic!("kv pool exhausted by a lone \
+                                    sequence — validate() bound \
+                                    violated");
+                        }
+                    }
+                }
+            };
+            if appended {
+                decoded.push(i);
+                qrows.push(qrow);
+                i += 1;
+            }
+            // else: i was the back and got evicted; loop condition
+            // now fails (i == len) and the step moves on.
+        }
+
+        // Decode phase: every appended row attends to its own cached
+        // prefix, fanned out over the backend pool.  Tasks write
+        // disjoint carved slices (declared for the race detector);
+        // the cache is only read.
+        let mut outs = vec![0.0f32; decoded.len() * width];
+        let mut lses = vec![0.0f32; decoded.len() * heads];
+        {
+            let mixed = self.backend.precision() == Precision::Mixed;
+            let params = &self.params;
+            let cache = &self.cache;
+            let mut orest: &mut [f32] = &mut outs;
+            let mut lrest: &mut [f32] = &mut lses;
+            let mut tasks: Vec<Task<'_>> = Vec::new();
+            for (slot, &idx) in decoded.iter().enumerate() {
+                let otile = exec::carve(&mut orest, width);
+                let ltile = exec::carve(&mut lrest, heads);
+                let blocks = cache.blocks(&self.running[idx].seq);
+                let pos = self.running[idx].seq.len() - 1;
+                let qrow = std::mem::take(&mut qrows[slot]);
+                exec::pool::declare_task_writes(&[
+                    exec::pool::span(&*otile),
+                    exec::pool::span(&*ltile),
+                ]);
+                tasks.push(Box::new(move || {
+                    decode_step(&qrow, &blocks, heads, d, pos, params,
+                                mixed, otile, ltile);
+                }));
+            }
+            self.backend.run_tasks(tasks);
+        }
+
+        // Fold + retire.  Fingerprints accumulate every output and
+        // LSE bit in step order; a finished sequence retires
+        // immediately, freeing its blocks for next step's admissions.
+        let mut completed: Vec<usize> = Vec::new();
+        for (slot, &idx) in decoded.iter().enumerate() {
+            let r = &mut self.running[idx];
+            let mut fp = r.fingerprint;
+            for x in &outs[slot * width..(slot + 1) * width] {
+                fp = fp_fold(fp, x.to_bits());
+            }
+            for x in &lses[slot * heads..(slot + 1) * heads] {
+                fp = fp_fold(fp, x.to_bits());
+            }
+            r.fingerprint = fp;
+            r.step += 1;
+            if r.step == r.req.gen_len {
+                completed.push(idx);
+            }
+        }
+        self.metrics.inc("decode_tokens", decoded.len() as u64);
+        let mut responses = Vec::with_capacity(completed.len());
+        for &idx in completed.iter().rev() {
+            let mut r = self.running.remove(idx);
+            self.cache.release(&mut r.seq);
+            let latency_s = r.submitted.elapsed().as_secs_f64();
+            self.metrics.time("request_latency", latency_s);
+            self.metrics.inc("completed", 1);
+            responses.push(Response {
+                id: r.req.id,
+                ticket: r.ticket,
+                fingerprint: r.fingerprint,
+                steps: r.step,
+                evictions: r.evictions,
+                latency_s,
+            });
+        }
+        responses.reverse(); // ascending ticket order
+
+        self.metrics.time("serve_step", t_step.elapsed().as_secs_f64());
+        self.metrics.set_gauge("running", self.running.len() as f64);
+        self.metrics.set_gauge("queued", self.queue.len() as f64);
+        self.metrics.set_gauge("free_blocks",
+                               self.cache.free_blocks() as f64);
+        responses
+    }
+
+    /// Drive `n` synthetic requests to completion through the batching
+    /// scheduler and return their responses in completion order.
+    /// Request `i` gets `id = i`, a seed forked from `base_seed`, and
+    /// a deterministic `gen_len` in `1..=max_gen_len`.  Errors if the
+    /// run fails to drain or leaks cache blocks (free list not fully
+    /// restored) — the guarantees the CI smoke job pins.
+    pub fn run_synthetic(&mut self, n: usize, base_seed: u64)
+                         -> Result<Vec<Response>> {
+        let mut seeder = Rng::new(base_seed);
+        for i in 0..n as u64 {
+            let seed = seeder.next_u64();
+            let gen_len =
+                1 + (seed % self.cfg.max_gen_len as u64) as usize;
+            self.submit(Request { id: i, seed, gen_len })?;
+        }
+        let mut responses = Vec::with_capacity(n);
+        // Progress bound: the oldest running request advances every
+        // step, so total steps ≤ Σ gen_len + admissions slack; the cap
+        // below turns a scheduler livelock bug into an error instead
+        // of a hang.
+        let cap = 2 * n * self.cfg.max_gen_len + n + 64;
+        let mut steps = 0usize;
+        while self.has_work() {
+            if steps > cap {
+                bail!("scheduler failed to drain {n} requests within \
+                       {cap} steps ({} responses so far) — livelock",
+                      responses.len());
+            }
+            responses.extend(self.step());
+            steps += 1;
+        }
+        if self.free_blocks() != self.capacity_blocks() {
+            bail!("cache block leak after drain: {} of {} blocks free",
+                  self.free_blocks(), self.capacity_blocks());
+        }
+        if responses.len() != n {
+            bail!("drained with {} responses for {n} requests",
+                  responses.len());
+        }
+        Ok(responses)
+    }
+}
+
+/// The non-batched oracle: run one request alone, no scheduler, and
+/// return the fingerprint its decode outputs fold to.  The serving
+/// contract — pinned by the serve tests and the CI smoke job — is
+/// that [`Scheduler`] produces *bitwise* this fingerprint for the
+/// same request regardless of batching, admission order, or eviction.
+pub fn single_request_fingerprint(cfg: &ServeConfig, req: &Request)
+                                  -> Result<u64> {
+    cfg.validate()?;
+    if req.gen_len == 0 || req.gen_len > cfg.max_gen_len {
+        bail!("request gen_len {} out of range 1..={}", req.gen_len,
+              cfg.max_gen_len);
+    }
+    let mask = cfg.mask.build(cfg.max_gen_len)?;
+    let params = AttnParams::with_mask(cfg.d, mask)?;
+    let backend = cfg.exec.build();
+    let mixed = backend.precision() == Precision::Mixed;
+    let width = cfg.heads * cfg.d;
+    let mut cache = KvCache::new(cfg.pool_blocks, cfg.block_tokens,
+                                 cfg.heads, cfg.d);
+    let mut seq = SeqKv::new();
+    let mut fp = FP_SEED;
+    let mut out = vec![0.0f32; width];
+    let mut lse = vec![0.0f32; cfg.heads];
+    for step in 0..req.gen_len {
+        let (qrow, krow, vrow) = synth_rows(req.seed, step, width);
+        cache.append(&mut seq, &krow, &vrow).map_err(|e| {
+            anyhow!("single-request cache full at step {step}: {e}")
+        })?;
+        decode_step(&qrow, &cache.blocks(&seq), cfg.heads, cfg.d, step,
+                    &params, mixed, &mut out, &mut lse);
+        for x in &out {
+            fp = fp_fold(fp, x.to_bits());
+        }
+        for x in &lse {
+            fp = fp_fold(fp, x.to_bits());
+        }
+    }
+    cache.release(&mut seq);
+    Ok(fp)
+}
+
+/// Format a completed response as the line-JSON the TCP front-end and
+/// `spark load` exchange (fingerprint in hex — it is an identity, not
+/// a number).
+pub fn response_json(r: &Response) -> String {
+    jsonio::to_string(&jsonio::obj(vec![
+        ("id", jsonio::num(r.id as f64)),
+        ("fingerprint", jsonio::s(format!("{:016x}", r.fingerprint))),
+        ("steps", jsonio::num(r.steps as f64)),
+        ("evictions", jsonio::num(r.evictions as f64)),
+        ("latency_s", jsonio::num(r.latency_s)),
+    ]))
+}
+
+/// Parse one request line: `{"id": N, "seed": N, "gen_len": N}`.
+/// `seed` defaults to `id`; `gen_len` defaults to `default_gen`.
+pub fn parse_request_line(line: &str, default_gen: usize)
+                          -> Result<Request> {
+    let v = jsonio::parse(line.trim())
+        .map_err(|e| anyhow!("bad request line: {e}"))?;
+    let id = v.get("id").and_then(|x| x.as_i64())
+        .ok_or_else(|| anyhow!("request needs an integer \"id\""))?
+        as u64;
+    let seed = v.get("seed").and_then(|x| x.as_i64())
+        .map(|s| s as u64).unwrap_or(id);
+    let gen_len = match v.get("gen_len").map(|x| x.as_i64()) {
+        Some(Some(g)) if g >= 1 => g as usize,
+        Some(_) => bail!("\"gen_len\" must be a positive integer"),
+        None => default_gen,
+    };
+    Ok(Request { id, seed, gen_len })
+}
+
+/// A line-JSON TCP front-end running a [`Scheduler`] on its own
+/// thread.  Connections are accepted non-blockingly from the serve
+/// loop; each gets a reader thread that parses request lines into a
+/// shared inbox.  The serve loop drains the inbox (assigning arrival
+/// tickets in drain order), steps the scheduler while work exists,
+/// and writes each response back to the connection that asked.
+pub struct TcpServer {
+    /// The bound port (resolves an ephemeral bind with `port = 0`).
+    pub port: u16,
+    stop: Arc<AtomicBool>,
+    thread: std::thread::JoinHandle<Result<Registry>>,
+}
+
+type Inbox = Arc<Mutex<VecDeque<(Request, Arc<Mutex<TcpStream>>)>>>;
+
+/// Reader thread: one per connection.  Parses request lines into the
+/// inbox until EOF, error, or server stop; malformed lines get an
+/// error response immediately (they never reach the scheduler).
+fn reader_loop(stream: TcpStream, writer: Arc<Mutex<TcpStream>>,
+               inbox: Inbox, stop: Arc<AtomicBool>, default_gen: usize) {
+    let mut br = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match br.read_line(&mut line) {
+            Ok(0) => break, // client closed
+            Ok(_) => match parse_request_line(&line, default_gen) {
+                Ok(req) => inbox.lock().expect("inbox lock")
+                    .push_back((req, Arc::clone(&writer))),
+                Err(e) => {
+                    let msg = jsonio::to_string(&jsonio::obj(vec![
+                        ("error", jsonio::s(format!("{e}"))),
+                    ]));
+                    let mut w = writer.lock().expect("writer lock");
+                    let _ = writeln!(w, "{msg}");
+                }
+            },
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock
+                || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+impl TcpServer {
+    /// Bind `127.0.0.1:port` (0 = ephemeral) and start serving `cfg`
+    /// on a background thread.
+    pub fn spawn(cfg: ServeConfig, port: u16) -> Result<TcpServer> {
+        cfg.validate()?;
+        let listener = TcpListener::bind(("127.0.0.1", port))
+            .with_context(|| format!("binding 127.0.0.1:{port}"))?;
+        let port = listener.local_addr()?.port();
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let thread = std::thread::spawn(move || {
+            serve_loop(cfg, listener, stop2)
+        });
+        info!("spark serve listening on 127.0.0.1:{port}");
+        Ok(TcpServer { port, stop, thread })
+    }
+
+    /// Signal the serve loop to finish in-flight work and exit, then
+    /// return its final metrics.
+    pub fn stop(self) -> Result<Registry> {
+        self.stop.store(true, Ordering::Relaxed);
+        self.thread.join()
+            .map_err(|_| anyhow!("serve thread panicked"))?
+    }
+
+    /// Block until the serve loop exits on its own (it only does on
+    /// an I/O error — the CLI's run-forever mode).
+    pub fn join(self) -> Result<Registry> {
+        self.thread.join()
+            .map_err(|_| anyhow!("serve thread panicked"))?
+    }
+}
+
+/// The serve-thread body: accept connections, drain the inbox into
+/// the scheduler, step while work exists, route responses back.
+fn serve_loop(cfg: ServeConfig, listener: TcpListener,
+              stop: Arc<AtomicBool>) -> Result<Registry> {
+    let default_gen = cfg.max_gen_len;
+    let mut sched = Scheduler::new(cfg)?;
+    let inbox: Inbox = Arc::new(Mutex::new(VecDeque::new()));
+    let mut responders: BTreeMap<u64, Arc<Mutex<TcpStream>>> =
+        BTreeMap::new();
+    loop {
+        // accept any waiting connections (non-blocking)
+        loop {
+            match listener.accept() {
+                Ok((conn, peer)) => {
+                    conn.set_read_timeout(
+                        Some(Duration::from_millis(50)))?;
+                    let writer = Arc::new(Mutex::new(conn.try_clone()?));
+                    let inbox = Arc::clone(&inbox);
+                    let stop = Arc::clone(&stop);
+                    info!("serve: connection from {peer}");
+                    std::thread::spawn(move || {
+                        reader_loop(conn, writer, inbox, stop,
+                                    default_gen);
+                    });
+                }
+                Err(e) if e.kind()
+                    == std::io::ErrorKind::WouldBlock => break,
+                Err(e) => return Err(e.into()),
+            }
+        }
+        // drain the inbox: tickets are assigned in drain order, and
+        // from here on scheduling is the deterministic core
+        let drained: Vec<(Request, Arc<Mutex<TcpStream>>)> = {
+            let mut q = inbox.lock().expect("inbox lock");
+            q.drain(..).collect()
+        };
+        for (req, writer) in drained {
+            match sched.submit(req) {
+                Ok(ticket) => {
+                    responders.insert(ticket, writer);
+                }
+                Err(e) => {
+                    let msg = jsonio::to_string(&jsonio::obj(vec![
+                        ("id", jsonio::num(req.id as f64)),
+                        ("error", jsonio::s(format!("{e}"))),
+                    ]));
+                    let mut w = writer.lock().expect("writer lock");
+                    let _ = writeln!(w, "{msg}");
+                }
+            }
+        }
+        if sched.has_work() {
+            for r in sched.step() {
+                let Some(writer) = responders.remove(&r.ticket) else {
+                    warn!("serve: no responder for ticket {}",
+                          r.ticket);
+                    continue;
+                };
+                let mut w = writer.lock().expect("writer lock");
+                if let Err(e) = writeln!(w, "{}", response_json(&r)) {
+                    warn!("serve: dropping response for request {}: \
+                           {e}", r.id);
+                }
+            }
+        } else {
+            if stop.load(Ordering::Relaxed) {
+                return Ok(sched.metrics);
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ServeConfig {
+        ServeConfig {
+            heads: 2,
+            d: 4,
+            block_tokens: 4,
+            pool_blocks: 8,
+            max_batch: 4,
+            max_gen_len: 12,
+            mask: MaskSpec::Causal,
+            exec: ExecOptions::scalar(),
+        }
+    }
+
+    #[test]
+    fn config_validation_rejects_unfinishable_pools() {
+        let mut cfg = tiny_cfg();
+        cfg.pool_blocks = 2; // max_gen_len 12 needs ceil(12/4) = 3
+        assert!(cfg.validate().is_err());
+        cfg.pool_blocks = 3;
+        assert!(cfg.validate().is_ok());
+        cfg.max_batch = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn batched_fingerprints_match_single_request_path() {
+        let cfg = tiny_cfg();
+        let mut sched = Scheduler::new(cfg.clone()).unwrap();
+        let responses = sched.run_synthetic(8, 0xA11CE).unwrap();
+        assert_eq!(responses.len(), 8);
+        for r in &responses {
+            // reconstruct the request run_synthetic generated
+            let mut seeder = Rng::new(0xA11CE);
+            let seed = (0..=r.id).map(|_| seeder.next_u64()).last()
+                .unwrap();
+            let gen_len =
+                1 + (seed % cfg.max_gen_len as u64) as usize;
+            assert_eq!(r.steps, gen_len, "request {}", r.id);
+            let want = single_request_fingerprint(
+                &cfg, &Request { id: r.id, seed, gen_len }).unwrap();
+            assert_eq!(r.fingerprint, want,
+                       "request {} batched ≠ single", r.id);
+        }
+    }
+
+    #[test]
+    fn eviction_under_pressure_is_bitwise_equal_to_retry() {
+        // Pool of 3 blocks, max_gen_len 12 (needs 3): any batch > 1
+        // fights for blocks, forcing mid-step evictions.
+        let cfg = ServeConfig {
+            pool_blocks: 3,
+            ..tiny_cfg()
+        };
+        let mut sched = Scheduler::new(cfg.clone()).unwrap();
+        let responses = sched.run_synthetic(6, 0xBEEF).unwrap();
+        assert!(sched.metrics.counter("evicted") > 0,
+                "pressure config must actually evict");
+        let mut seeder = Rng::new(0xBEEF);
+        let seeds: Vec<u64> = (0..6).map(|_| seeder.next_u64())
+            .collect();
+        for r in &responses {
+            let seed = seeds[r.id as usize];
+            let gen_len =
+                1 + (seed % cfg.max_gen_len as u64) as usize;
+            let want = single_request_fingerprint(
+                &cfg, &Request { id: r.id, seed, gen_len }).unwrap();
+            assert_eq!(r.fingerprint, want,
+                       "request {} (evicted {}×) diverged", r.id,
+                       r.evictions);
+        }
+        assert_eq!(sched.free_blocks(), sched.capacity_blocks());
+    }
+
+    #[test]
+    fn identical_runs_are_identical() {
+        let run = || {
+            let mut s = Scheduler::new(ServeConfig {
+                pool_blocks: 4,
+                ..tiny_cfg()
+            }).unwrap();
+            let rs = s.run_synthetic(10, 7).unwrap();
+            rs.iter().map(|r| (r.id, r.ticket, r.steps, r.fingerprint))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn submit_rejects_out_of_range_gen_len() {
+        let mut s = Scheduler::new(tiny_cfg()).unwrap();
+        assert!(s.submit(Request { id: 0, seed: 1, gen_len: 0 })
+            .is_err());
+        assert!(s.submit(Request { id: 0, seed: 1, gen_len: 13 })
+            .is_err());
+        assert!(s.submit(Request { id: 0, seed: 1, gen_len: 12 })
+            .is_ok());
+    }
+
+    #[test]
+    fn continuous_batching_admits_mid_run() {
+        let mut s = Scheduler::new(tiny_cfg()).unwrap();
+        s.submit(Request { id: 0, seed: 10, gen_len: 8 }).unwrap();
+        // first step admits and decodes request 0 alone
+        assert!(s.step().is_empty());
+        assert_eq!(s.running(), 1);
+        // a late arrival joins the running batch at the next boundary
+        s.submit(Request { id: 1, seed: 11, gen_len: 2 }).unwrap();
+        assert!(s.step().is_empty());
+        assert_eq!(s.running(), 2);
+        // request 1 (2 steps) retires while request 0 keeps going
+        let done = s.step();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 1);
+        assert_eq!(s.running(), 1);
+        while s.has_work() {
+            s.step();
+        }
+        assert_eq!(s.free_blocks(), s.capacity_blocks());
+    }
+
+    #[test]
+    fn request_line_parsing() {
+        let r = parse_request_line(
+            "{\"id\": 3, \"seed\": 9, \"gen_len\": 5}", 64).unwrap();
+        assert_eq!(r, Request { id: 3, seed: 9, gen_len: 5 });
+        let r = parse_request_line("{\"id\": 4}", 64).unwrap();
+        assert_eq!(r, Request { id: 4, seed: 4, gen_len: 64 });
+        assert!(parse_request_line("not json", 64).is_err());
+        assert!(parse_request_line("{\"seed\": 1}", 64).is_err());
+        assert!(parse_request_line("{\"id\":1,\"gen_len\":0}", 64)
+            .is_err());
+    }
+}

@@ -4,6 +4,8 @@
 //!
 //! ```text
 //! spark train              train the LM end-to-end (E7)
+//! spark serve              continuous-batching inference server
+//! spark load               load generator against a running server
 //! spark bench-forward      Fig 10 sweep (E1)
 //! spark bench-backward     Fig 11 sweep (E2)
 //! spark bench-e2e          Fig 12 encoder latency (E4)
@@ -42,6 +44,10 @@ fn top_usage() -> String {
         "spark {} — SparkAttention coordinator\n\n\
          commands:\n\
          \x20 train              train the LM on a synthetic corpus (E7)\n\
+         \x20 serve              continuous-batching inference server \
+         (paged KV-cache)\n\
+         \x20 load               drive a running server with synthetic \
+         requests\n\
          \x20 bench-forward      Fig 10: MHA-Forward sweep (E1)\n\
          \x20 bench-backward     Fig 11: MHA-Backward sweep (E2)\n\
          \x20 bench-e2e          Fig 12: encoder-forward latency (E4)\n\
@@ -66,6 +72,8 @@ fn dispatch(args: &[String]) -> Result<()> {
     let rest = &args[1..];
     match cmd.as_str() {
         "train" => cmd_train(rest),
+        "serve" => cmd_serve(rest),
+        "load" => cmd_load(rest),
         "bench-forward" => cmd_bench(rest, Figure::Forward),
         "bench-backward" => cmd_bench(rest, Figure::Backward),
         "bench-e2e" => cmd_bench(rest, Figure::E2e),
@@ -214,6 +222,208 @@ fn cmd_train(args: &[String]) -> Result<()> {
         std::fs::write(&path,
                        jsonio::to_string(&trainer.metrics.to_json()))?;
         println!("metrics → {path}");
+    }
+    Ok(())
+}
+
+/// Build a `ServeConfig` from the shared serve/load flag set.
+fn serve_cfg_from_flags(p: &Parsed)
+                        -> Result<coordinator::serve::ServeConfig> {
+    let mut cfg = coordinator::serve::ServeConfig {
+        heads: p.get_usize("heads")?.unwrap_or(4),
+        d: p.get_usize("d")?.unwrap_or(32),
+        block_tokens: p.get_usize("block-tokens")?.unwrap_or(16),
+        pool_blocks: p.get_usize("blocks")?.unwrap_or(64),
+        max_batch: p.get_usize("max-batch")?.unwrap_or(8),
+        max_gen_len: p.get_usize("gen-len")?.unwrap_or(64),
+        ..coordinator::serve::ServeConfig::default()
+    };
+    if let Some(spec) = mask_from_flags(p)? {
+        cfg.mask = spec;
+    }
+    cfg.exec = exec_from_flags(p, ExecOptions::default(), false)?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Print the serving tail-latency summary and fail on non-finite
+/// percentiles (a NaN-poisoned latency series is a serving bug, not a
+/// reporting detail — the repaired `metrics::Series` keeps the report
+/// alive so this check can run at all).
+fn serve_latency_summary(metrics: &sparkattention::metrics::Registry)
+                         -> Result<()> {
+    let Some(lat) = metrics.series("request_latency") else {
+        bail!("no request completed: request_latency series is empty");
+    };
+    let (p50, p99) = (lat.p50(), lat.p99());
+    println!("requests: {} completed, {} admitted, {} evicted",
+             metrics.counter("completed"), metrics.counter("admitted"),
+             metrics.counter("evicted"));
+    println!("latency: p50 {:.3} ms, p99 {:.3} ms, max {:.3} ms",
+             p50 * 1e3, p99 * 1e3, lat.max() * 1e3);
+    if !p50.is_finite() || !p99.is_finite() {
+        bail!("non-finite latency percentiles (p50 {p50}, p99 {p99})");
+    }
+    Ok(())
+}
+
+/// `spark serve` — the continuous-batching inference server.  With
+/// `--synthetic N` it drives N deterministic requests through the
+/// scheduler in-process (the CI smoke path: asserts full completion,
+/// finite tail latencies, and zero cache-block leaks); otherwise it
+/// listens for line-JSON requests on `--port` until killed.
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let cmd = Command::new("serve",
+                           "continuous-batching inference server")
+        .flag("port", "TCP port to listen on (0 = ephemeral)",
+              Some("4100"))
+        .flag("synthetic", "run N synthetic requests in-process and \
+                            exit (0 = serve TCP)", Some("0"))
+        .flag("seed", "synthetic workload seed", Some("1"))
+        .flag("heads", "attention heads per request", Some("4"))
+        .flag("d", "head dimension", Some("32"))
+        .flag("block-tokens", "tokens per KV-cache block", Some("16"))
+        .flag("blocks", "KV-cache pool size in blocks", Some("64"))
+        .flag("max-batch", "max sequences decoding concurrently",
+              Some("8"))
+        .flag("gen-len", "max decode steps per request", Some("64"))
+        .flag("mask", "attention mask: dense | causal | window[:W] | \
+                       block:B[:DENSITY_PCT[:SEED]]", None)
+        .flag("window", "sliding-window width (pairs with --mask \
+                         window)", None)
+        .flag("backend", "host exec backend: scalar | blocked | simd",
+              None)
+        .flag("threads", "host exec worker threads (0 = auto)", None)
+        .flag("precision", "simd numeric mode: f32 | mixed (mixed \
+                            implies --backend simd)", None)
+        .flag("tuning-table", "install a `spark tune` table for the \
+                               host backends", None)
+        .flag("metrics-out", "write metrics JSON here", None);
+    let p = cmd.parse(args)?;
+    let cfg = serve_cfg_from_flags(&p)?;
+    let n = p.get_usize("synthetic")?.unwrap_or(0);
+    if n > 0 {
+        let seed = p.get_usize("seed")?.unwrap_or(1) as u64;
+        let mut sched = coordinator::serve::Scheduler::new(cfg)?;
+        let t = std::time::Instant::now();
+        let responses = sched.run_synthetic(n, seed)?;
+        let wall = t.elapsed().as_secs_f64();
+        let tokens = sched.metrics.counter("decode_tokens");
+        println!("synthetic run: {} requests drained in {:.2} s \
+                  ({:.0} decode tokens/s)",
+                 responses.len(), wall, tokens as f64 / wall);
+        serve_latency_summary(&sched.metrics)?;
+        println!("cache: {}/{} blocks free after drain (no leaks)",
+                 sched.free_blocks(), sched.capacity_blocks());
+        if let Some(path) = p.get("metrics-out") {
+            std::fs::write(path,
+                           jsonio::to_string(&sched.metrics.to_json()))?;
+            println!("metrics → {path}");
+        }
+        return Ok(());
+    }
+    let port = p.get_usize("port")?.unwrap_or(4100) as u16;
+    let srv = coordinator::serve::TcpServer::spawn(cfg, port)?;
+    println!("spark serve listening on 127.0.0.1:{}", srv.port);
+    println!("send line-JSON requests, e.g. \
+              {{\"id\": 1, \"seed\": 7, \"gen_len\": 32}} — or run \
+              `spark load --port {}`", srv.port);
+    let metrics = srv.join()?;
+    if let Some(path) = p.get("metrics-out") {
+        std::fs::write(path, jsonio::to_string(&metrics.to_json()))?;
+    }
+    Ok(())
+}
+
+/// `spark load` — the load generator: opens `--connections` sockets to
+/// a running `spark serve`, pipelines `--requests` synthetic requests
+/// across them, and reports client-side p50/p99 latency + throughput.
+fn cmd_load(args: &[String]) -> Result<()> {
+    let cmd = Command::new("load",
+                           "drive a running server with synthetic \
+                            requests")
+        .flag("host", "server host", Some("127.0.0.1"))
+        .flag("port", "server port", Some("4100"))
+        .flag("requests", "total requests to send", Some("1000"))
+        .flag("connections", "concurrent connections", Some("8"))
+        .flag("gen-len", "decode steps per request", Some("32"))
+        .flag("seed", "workload seed base", Some("1"));
+    let p = cmd.parse(args)?;
+    let host = p.get("host").unwrap_or("127.0.0.1").to_string();
+    let port = p.get_usize("port")?.unwrap_or(4100) as u16;
+    let total = p.get_usize("requests")?.unwrap_or(1000);
+    let conns = p.get_usize("connections")?.unwrap_or(8).max(1);
+    let gen_len = p.get_usize("gen-len")?.unwrap_or(32);
+    let seed = p.get_usize("seed")?.unwrap_or(1) as u64;
+    if total == 0 {
+        bail!("--requests must be ≥ 1");
+    }
+    let t_run = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..conns {
+        let host = host.clone();
+        // connection c owns request ids c, c+conns, c+2·conns, …
+        let ids: Vec<u64> = (0..total).skip(c).step_by(conns)
+            .map(|i| i as u64).collect();
+        handles.push(std::thread::spawn(move || -> Result<Vec<f64>> {
+            use std::io::{BufRead, BufReader, Write};
+            if ids.is_empty() {
+                return Ok(Vec::new());
+            }
+            let stream =
+                std::net::TcpStream::connect((host.as_str(), port))?;
+            let mut writer = stream.try_clone()?;
+            let mut reader = BufReader::new(stream);
+            let mut sent = std::collections::BTreeMap::new();
+            for &id in &ids {
+                writeln!(writer,
+                         "{{\"id\": {id}, \"seed\": {}, \
+                          \"gen_len\": {gen_len}}}",
+                         seed.wrapping_add(id))?;
+                sent.insert(id, std::time::Instant::now());
+            }
+            writer.flush()?;
+            let mut latencies = Vec::with_capacity(ids.len());
+            let mut line = String::new();
+            while latencies.len() < ids.len() {
+                line.clear();
+                if reader.read_line(&mut line)? == 0 {
+                    bail!("server closed with {} of {} responses",
+                          latencies.len(), ids.len());
+                }
+                let v = jsonio::parse(line.trim()).map_err(
+                    |e| anyhow::anyhow!("bad response line: {e}"))?;
+                if let Some(err) = v.get("error") {
+                    bail!("server error: {:?}", err.as_str());
+                }
+                let id = v.get("id").and_then(|x| x.as_i64())
+                    .ok_or_else(|| anyhow::anyhow!(
+                        "response missing id: {line}"))? as u64;
+                let t0 = sent.remove(&id).ok_or_else(
+                    || anyhow::anyhow!("unexpected response id {id}"))?;
+                latencies.push(t0.elapsed().as_secs_f64());
+            }
+            Ok(latencies)
+        }));
+    }
+    let mut series = sparkattention::metrics::Series::default();
+    for h in handles {
+        let lats = h.join()
+            .map_err(|_| anyhow::anyhow!("load connection panicked"))??;
+        for l in lats {
+            series.record(l);
+        }
+    }
+    let wall = t_run.elapsed().as_secs_f64();
+    println!("{} requests over {conns} connections in {:.2} s \
+              ({:.1} req/s)",
+             series.count(), wall, series.count() as f64 / wall);
+    println!("latency: p50 {:.3} ms, p95 {:.3} ms, p99 {:.3} ms, \
+              max {:.3} ms",
+             series.p50() * 1e3, series.p95() * 1e3,
+             series.p99() * 1e3, series.max() * 1e3);
+    if !series.p50().is_finite() || !series.p99().is_finite() {
+        bail!("non-finite latency percentiles");
     }
     Ok(())
 }

@@ -38,18 +38,27 @@ impl Series {
         self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
     }
 
-    /// Largest sample (0 when empty).
+    /// Largest sample (−∞ when empty).  Folds from `NEG_INFINITY`, not
+    /// `0.0`: a series of all-negative samples (e.g. a delta gauge
+    /// promoted to a series) must report its true maximum, never a
+    /// phantom `0.0` that was never recorded.
     pub fn max(&self) -> f64 {
-        self.samples.iter().cloned().fold(0.0, f64::max)
+        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
     }
 
     /// Exact percentile by sorting a copy (fine for bench-scale counts).
+    ///
+    /// Sorts with `total_cmp`, so NaN samples are ordered (after +∞)
+    /// instead of panicking mid-report the way `partial_cmp().unwrap()`
+    /// did — a single poisoned sample shifts the top percentiles toward
+    /// NaN but can never take down the registry dump that would have
+    /// told you about it.
     pub fn percentile(&self, p: f64) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
         }
         let mut v = self.samples.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(f64::total_cmp);
         let idx = ((v.len() - 1) as f64 * p.clamp(0.0, 1.0)).round() as usize;
         v[idx]
     }
@@ -62,6 +71,11 @@ impl Series {
     /// 95th percentile.
     pub fn p95(&self) -> f64 {
         self.percentile(0.95)
+    }
+
+    /// 99th percentile — the serving tail-latency headline.
+    pub fn p99(&self) -> f64 {
+        self.percentile(0.99)
     }
 
     /// Sample standard deviation.
@@ -82,6 +96,7 @@ impl Series {
             ("mean_s", jsonio::num(self.mean())),
             ("p50_s", jsonio::num(self.p50())),
             ("p95_s", jsonio::num(self.p95())),
+            ("p99_s", jsonio::num(self.p99())),
             ("min_s", jsonio::num(self.min())),
             ("max_s", jsonio::num(self.max())),
             ("stddev_s", jsonio::num(self.stddev())),
@@ -183,6 +198,56 @@ mod tests {
         assert_eq!(s.p50(), 7.0);
         assert_eq!(s.p95(), 7.0);
         assert_eq!(s.stddev(), 0.0);
+    }
+
+    // Regression: `max` used to fold from 0.0, so a series whose samples
+    // are all negative reported a maximum that was never recorded.
+    #[test]
+    fn max_of_all_negative_series_is_negative() {
+        let mut s = Series::default();
+        for x in [-5.0, -1.5, -9.0] {
+            s.record(x);
+        }
+        assert_eq!(s.max(), -1.5);
+        assert_eq!(s.min(), -9.0);
+    }
+
+    #[test]
+    fn empty_series_extremes_are_infinities() {
+        let s = Series::default();
+        assert_eq!(s.max(), f64::NEG_INFINITY);
+        assert_eq!(s.min(), f64::INFINITY);
+        assert_eq!(s.percentile(0.99), 0.0);
+    }
+
+    // Regression: `percentile` used to sort with
+    // `partial_cmp(..).unwrap()`, so one NaN sample panicked any report
+    // that touched the series.  `total_cmp` orders NaN after +∞ instead:
+    // low percentiles stay real, the top of the distribution goes NaN,
+    // and the dump survives to show it.
+    #[test]
+    fn nan_sample_does_not_panic_percentiles() {
+        let mut s = Series::default();
+        for x in [3.0, f64::NAN, 1.0, 2.0] {
+            s.record(x);
+        }
+        assert_eq!(s.percentile(0.0), 1.0);
+        // sorted [1, 2, 3, NaN]: p50 index round(3·0.5) = 2
+        assert_eq!(s.p50(), 3.0);
+        assert!(s.p99().is_nan());
+        assert!(s.max().is_nan() || s.max() == 3.0);
+        // The JSON dump must also survive (non-finite renders as null).
+        let _ = s.to_json();
+    }
+
+    #[test]
+    fn p99_lands_on_the_tail() {
+        let mut s = Series::default();
+        for i in 0..100 {
+            s.record(i as f64);
+        }
+        assert_eq!(s.p99(), 98.0);
+        assert_eq!(s.percentile(1.0), 99.0);
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! the device interchange precision.
 
 pub mod bf16;
+pub mod paged;
 pub mod rng;
 
 pub use rng::Rng;

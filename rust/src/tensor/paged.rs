@@ -1,0 +1,298 @@
+//! Paged KV-cache: a fixed-size block pool over a flat `Tensor` arena.
+//!
+//! Serving keeps per-sequence key/value history in fixed-size token
+//! blocks handed out from one preallocated arena (the vLLM paging idea
+//! at host scale): a sequence owns a *block table* — an ordered list of
+//! block ids — and appends one token's K/V rows per decode step,
+//! allocating a fresh block only at block boundaries.  Freed blocks go
+//! back on a LIFO free list, so allocation order is a pure function of
+//! the alloc/free history and never of wall-clock or map iteration
+//! order — the same scheduler trace always produces the same block
+//! placement (this module is inside `tensor/`, so the `det-*` analyzer
+//! rules apply in full).
+//!
+//! Block layout: each block is `2 · block_tokens · width` f32s — the K
+//! half then the V half, each half `block_tokens` rows of `width =
+//! heads · d` (the `(bh, d)`-flattened row the decode kernel consumes).
+
+use crate::tensor::Tensor;
+
+/// Append failed: the pool has no free block for the incoming token.
+/// The cache and sequence are untouched — the caller may evict another
+/// sequence and retry, or requeue this one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheFull;
+
+impl std::fmt::Display for CacheFull {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "kv cache has no free block")
+    }
+}
+
+/// One sequence's handle into the cache: its block table + token count.
+/// Created empty via [`SeqKv::new`]; only [`KvCache`] methods mutate it.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SeqKv {
+    /// Ordered block ids; block `i` holds tokens
+    /// `[i · block_tokens, (i+1) · block_tokens)` of this sequence.
+    blocks: Vec<u32>,
+    /// Tokens appended so far.
+    len: usize,
+}
+
+impl SeqKv {
+    /// Empty handle (no blocks, zero tokens).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Tokens appended so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether no tokens have been appended.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Number of cache blocks this sequence currently owns.
+    pub fn block_count(&self) -> usize {
+        self.blocks.len()
+    }
+}
+
+/// Read-only view of one cached block: contiguous K and V row slices
+/// plus the token span they cover within the sequence.
+#[derive(Debug, Clone, Copy)]
+pub struct KvBlockView<'a> {
+    /// `tokens · width` key values, token-major.
+    pub k: &'a [f32],
+    /// `tokens · width` value values, token-major.
+    pub v: &'a [f32],
+    /// Sequence position of this block's first token.
+    pub start: usize,
+    /// Valid tokens in this block (= `block_tokens` except the tail).
+    pub tokens: usize,
+}
+
+/// The paged KV-cache: arena + free list + per-block ownership bits.
+#[derive(Debug)]
+pub struct KvCache {
+    /// Flat arena, shape `[blocks, 2 · block_tokens · width]`.
+    arena: Tensor,
+    /// LIFO free list.  Seeded so the first pops hand out block 0, 1, …
+    /// and a freed block is the next one reused — fully deterministic.
+    free: Vec<u32>,
+    /// Ownership bit per block; double-free is a caller bug and panics.
+    in_use: Vec<bool>,
+    block_tokens: usize,
+    width: usize,
+}
+
+impl KvCache {
+    /// Pool of `blocks` blocks of `block_tokens` tokens, each token a
+    /// K row + V row of `heads · d` f32s.  All dimensions must be
+    /// nonzero (asserted, matching `Tensor::new`'s contract style).
+    pub fn new(blocks: usize, block_tokens: usize, heads: usize,
+               d: usize) -> Self {
+        assert!(blocks > 0 && block_tokens > 0 && heads > 0 && d > 0,
+                "kv cache dims must be nonzero: blocks={blocks} \
+                 block_tokens={block_tokens} heads={heads} d={d}");
+        assert!(blocks <= u32::MAX as usize, "block id overflows u32");
+        let width = heads * d;
+        KvCache {
+            arena: Tensor::zeros(vec![blocks, 2 * block_tokens * width]),
+            free: (0..blocks as u32).rev().collect(),
+            in_use: vec![false; blocks],
+            block_tokens,
+            width,
+        }
+    }
+
+    /// Tokens per block.
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Per-token row width (`heads · d`).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Total blocks in the pool.
+    pub fn capacity_blocks(&self) -> usize {
+        self.in_use.len()
+    }
+
+    /// Blocks currently on the free list.  A drained server must see
+    /// this return to `capacity_blocks()` — anything less is a leak.
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Append one token's K and V rows (each `width` f32s) to `seq`,
+    /// allocating a block when `seq.len` crosses a block boundary.
+    /// On a full pool returns `Err(CacheFull)` with *nothing* mutated,
+    /// so eviction-and-retry replays from a clean state.
+    pub fn append(&mut self, seq: &mut SeqKv, k_row: &[f32],
+                  v_row: &[f32]) -> Result<(), CacheFull> {
+        assert_eq!(k_row.len(), self.width, "k row width mismatch");
+        assert_eq!(v_row.len(), self.width, "v row width mismatch");
+        if seq.len % self.block_tokens == 0 {
+            let Some(&b) = self.free.last() else {
+                return Err(CacheFull);
+            };
+            self.free.pop();
+            debug_assert!(!self.in_use[b as usize]);
+            self.in_use[b as usize] = true;
+            seq.blocks.push(b);
+        }
+        let b = *seq.blocks.last().expect("block table nonempty") as usize;
+        let slot = seq.len % self.block_tokens;
+        let half = self.block_tokens * self.width;
+        let base = b * 2 * half + slot * self.width;
+        let data = self.arena.data_mut();
+        data[base..base + self.width].copy_from_slice(k_row);
+        let vbase = base + half;
+        data[vbase..vbase + self.width].copy_from_slice(v_row);
+        seq.len += 1;
+        Ok(())
+    }
+
+    /// Return all of `seq`'s blocks to the free list (reverse table
+    /// order, so re-allocating the same sequence reuses the same
+    /// blocks in the same order) and reset the handle to empty.
+    /// Panics on a block not currently owned (double release).
+    pub fn release(&mut self, seq: &mut SeqKv) {
+        for &b in seq.blocks.iter().rev() {
+            assert!(self.in_use[b as usize],
+                    "double free of kv block {b}");
+            self.in_use[b as usize] = false;
+            self.free.push(b);
+        }
+        seq.blocks.clear();
+        seq.len = 0;
+    }
+
+    /// Views over `seq`'s cached tokens in sequence order.  Each view
+    /// exposes only the valid prefix of its block (`tokens · width`
+    /// values per half), so concatenating the views is exactly the
+    /// K/V history of the sequence.
+    pub fn blocks<'a>(&'a self, seq: &SeqKv) -> Vec<KvBlockView<'a>> {
+        let half = self.block_tokens * self.width;
+        let data = self.arena.data();
+        seq.blocks.iter().enumerate().map(|(i, &b)| {
+            let start = i * self.block_tokens;
+            let tokens = (seq.len - start).min(self.block_tokens);
+            let base = b as usize * 2 * half;
+            KvBlockView {
+                k: &data[base..base + tokens * self.width],
+                v: &data[base + half..base + half + tokens * self.width],
+                start,
+                tokens,
+            }
+        }).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(tag: f32, width: usize) -> Vec<f32> {
+        (0..width).map(|i| tag + i as f32 / 100.0).collect()
+    }
+
+    #[test]
+    fn alloc_is_deterministic_and_lifo_reuse() {
+        let mut c = KvCache::new(4, 2, 1, 3);
+        let mut a = SeqKv::new();
+        let mut b = SeqKv::new();
+        // First allocations hand out blocks 0, 1, 2 in order.
+        for t in 0..3 {
+            c.append(&mut a, &row(t as f32, 3), &row(t as f32, 3))
+                .unwrap();
+        }
+        c.append(&mut b, &row(9.0, 3), &row(9.0, 3)).unwrap();
+        assert_eq!(a.block_count(), 2);
+        assert_eq!(b.block_count(), 1);
+        assert_eq!(c.free_blocks(), 1);
+        // Releasing `a` then reallocating an identical sequence reuses
+        // exactly the same blocks in the same order.
+        let views_before: Vec<usize> =
+            c.blocks(&a).iter().map(|v| v.start).collect();
+        c.release(&mut a);
+        assert_eq!(c.free_blocks(), 3);
+        let mut a2 = SeqKv::new();
+        for t in 0..3 {
+            c.append(&mut a2, &row(t as f32, 3), &row(t as f32, 3))
+                .unwrap();
+        }
+        let views_after: Vec<usize> =
+            c.blocks(&a2).iter().map(|v| v.start).collect();
+        assert_eq!(views_before, views_after);
+        assert_eq!(c.free_blocks(), 1);
+    }
+
+    #[test]
+    fn append_round_trips_rows_through_views() {
+        let width = 4;
+        let mut c = KvCache::new(3, 2, 2, 2);
+        let mut s = SeqKv::new();
+        for t in 0..5 {
+            c.append(&mut s, &row(10.0 + t as f32, width),
+                     &row(20.0 + t as f32, width)).unwrap();
+        }
+        assert_eq!(s.len(), 5);
+        let views = c.blocks(&s);
+        assert_eq!(views.len(), 3);
+        assert_eq!(views[2].tokens, 1); // tail block partially filled
+        let mut pos = 0usize;
+        for v in &views {
+            assert_eq!(v.start, pos);
+            for t in 0..v.tokens {
+                let k = &v.k[t * width..(t + 1) * width];
+                let vv = &v.v[t * width..(t + 1) * width];
+                assert_eq!(k, &row(10.0 + pos as f32, width)[..]);
+                assert_eq!(vv, &row(20.0 + pos as f32, width)[..]);
+                pos += 1;
+            }
+        }
+        assert_eq!(pos, 5);
+    }
+
+    #[test]
+    fn full_pool_errs_without_mutation() {
+        let mut c = KvCache::new(1, 2, 1, 2);
+        let mut a = SeqKv::new();
+        c.append(&mut a, &[1.0, 2.0], &[3.0, 4.0]).unwrap();
+        let mut b = SeqKv::new();
+        assert_eq!(c.append(&mut b, &[9.0, 9.0], &[9.0, 9.0]),
+                   Err(CacheFull));
+        assert!(b.is_empty());
+        assert_eq!(b.block_count(), 0);
+        assert_eq!(c.free_blocks(), 0);
+        // Second token of `a` fits in its existing block.
+        c.append(&mut a, &[5.0, 6.0], &[7.0, 8.0]).unwrap();
+        // Third needs a new block: full again, `a` untouched.
+        assert_eq!(c.append(&mut a, &[0.0, 0.0], &[0.0, 0.0]),
+                   Err(CacheFull));
+        assert_eq!(a.len(), 2);
+        // Releasing restores the free list exactly — no leaks.
+        c.release(&mut a);
+        assert_eq!(c.free_blocks(), c.capacity_blocks());
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_release_panics() {
+        let mut c = KvCache::new(2, 1, 1, 1);
+        let mut s = SeqKv::new();
+        c.append(&mut s, &[1.0], &[2.0]).unwrap();
+        let stale = s.clone();
+        c.release(&mut s);
+        let mut stale = stale;
+        c.release(&mut stale);
+    }
+}

@@ -1,0 +1,179 @@
+//! Integration: the `spark serve` continuous-batching layer.
+//!
+//! Pins the three serving guarantees end to end, at soak scale:
+//!
+//! 1. **Batching-independent identity** — every request's decode
+//!    fingerprint equals the non-batched single-request oracle,
+//!    bitwise, under admission reordering and mid-step eviction.
+//! 2. **Resource hygiene** — the paged KV-cache free list is fully
+//!    restored after the drain (zero block leaks at 1000 requests).
+//! 3. **Transport transparency** — the TCP front-end returns the same
+//!    fingerprints over a real socket that the scheduler computes
+//!    in-process.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use sparkattention::coordinator::serve::{
+    single_request_fingerprint, Scheduler, ServeConfig,
+};
+use sparkattention::coordinator::{Request, TcpServer};
+use sparkattention::exec::ExecOptions;
+use sparkattention::jsonio;
+use sparkattention::tensor::Rng;
+
+/// A deliberately starved pool: `max_batch` full-length sequences need
+/// `4 · 4 = 16` blocks against a pool of 6, so the soak run must evict
+/// (while a lone sequence still fits: `16 / 4 = 4 ≤ 6`).
+fn pressure_cfg() -> ServeConfig {
+    ServeConfig {
+        heads: 2,
+        d: 8,
+        block_tokens: 4,
+        pool_blocks: 6,
+        max_batch: 4,
+        max_gen_len: 16,
+        exec: ExecOptions::scalar(),
+        ..ServeConfig::default()
+    }
+}
+
+/// Reconstruct the `(seed, gen_len)` that `run_synthetic` assigns to
+/// request `i` — seeds are drawn sequentially from `Rng::new(base)`.
+fn synthetic_requests(n: usize, base_seed: u64, max_gen: usize)
+                      -> Vec<Request> {
+    let mut seeder = Rng::new(base_seed);
+    (0..n as u64)
+        .map(|i| {
+            let seed = seeder.next_u64();
+            let gen_len = 1 + (seed % max_gen as u64) as usize;
+            Request { id: i, seed, gen_len }
+        })
+        .collect()
+}
+
+#[test]
+fn soak_1000_requests_under_pressure() {
+    let cfg = pressure_cfg();
+    let n = 1000;
+    let base_seed = 0xBEE5;
+    let mut sched = Scheduler::new(cfg.clone()).expect("scheduler");
+    let responses = sched.run_synthetic(n, base_seed).expect("drain");
+    assert_eq!(responses.len(), n);
+
+    // The starved pool forced real continuous-batching behaviour:
+    // evictions happened, and every admission is visible in metrics.
+    assert!(sched.metrics.counter("evicted") > 0,
+            "pressure config never evicted — the soak is not \
+             exercising the eviction path");
+    assert!(sched.metrics.counter("admitted") >= n as u64);
+    assert_eq!(sched.metrics.counter("completed"), n as u64);
+
+    // Zero cache-block leaks after the drain.
+    assert_eq!(sched.free_blocks(), sched.capacity_blocks());
+
+    // Finite tail latencies over the full population.
+    let lat = sched.metrics.series("request_latency").expect("series");
+    assert_eq!(lat.count(), n);
+    assert!(lat.p50().is_finite() && lat.p99().is_finite(),
+            "non-finite latency percentiles: p50 {} p99 {}",
+            lat.p50(), lat.p99());
+
+    // Every response — batched, reordered, possibly evicted and
+    // retried — carries the bitwise fingerprint of the same request
+    // run alone through the non-batched oracle.
+    let expected = synthetic_requests(n, base_seed, cfg.max_gen_len);
+    let by_id: BTreeMap<u64, _> =
+        responses.iter().map(|r| (r.id, r)).collect();
+    assert_eq!(by_id.len(), n, "duplicate response ids");
+    for req in &expected {
+        let r = by_id[&req.id];
+        assert_eq!(r.steps, req.gen_len,
+                   "request {} ran {} of {} steps", req.id, r.steps,
+                   req.gen_len);
+        let solo = single_request_fingerprint(&cfg, req)
+            .expect("oracle fingerprint");
+        assert_eq!(r.fingerprint, solo,
+                   "request {} fingerprint diverged from the \
+                    single-request path (evictions: {})",
+                   req.id, r.evictions);
+    }
+}
+
+#[test]
+fn soak_reruns_are_bitwise_identical() {
+    let cfg = pressure_cfg();
+    let run = |_: usize| {
+        let mut sched = Scheduler::new(cfg.clone()).expect("scheduler");
+        sched.run_synthetic(300, 7).expect("drain").iter()
+            .map(|r| (r.id, r.ticket, r.fingerprint, r.steps,
+                      r.evictions))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(run(0), run(1),
+               "scheduling is keyed on arrival order only — two \
+                identical runs must make identical decisions");
+}
+
+#[test]
+fn tcp_round_trip_matches_single_request_oracle() {
+    let cfg = ServeConfig {
+        heads: 2,
+        d: 4,
+        block_tokens: 4,
+        pool_blocks: 8,
+        max_batch: 4,
+        max_gen_len: 12,
+        exec: ExecOptions::scalar(),
+        ..ServeConfig::default()
+    };
+    let srv = TcpServer::spawn(cfg.clone(), 0).expect("spawn server");
+    let requests = [
+        Request { id: 1, seed: 42, gen_len: 6 },
+        Request { id: 2, seed: 7, gen_len: 12 },
+        Request { id: 3, seed: 42, gen_len: 6 },
+    ];
+
+    let stream = TcpStream::connect(("127.0.0.1", srv.port))
+        .expect("connect");
+    let mut writer = stream.try_clone().expect("clone stream");
+    let mut reader = BufReader::new(stream);
+    for r in &requests {
+        writeln!(writer,
+                 "{{\"id\": {}, \"seed\": {}, \"gen_len\": {}}}",
+                 r.id, r.seed, r.gen_len)
+            .expect("send request");
+    }
+    writer.flush().expect("flush");
+
+    let mut got: BTreeMap<u64, u64> = BTreeMap::new();
+    let mut line = String::new();
+    while got.len() < requests.len() {
+        line.clear();
+        assert!(reader.read_line(&mut line).expect("read response") > 0,
+                "server closed early with {} of {} responses",
+                got.len(), requests.len());
+        let v = jsonio::parse(line.trim()).expect("response json");
+        assert!(v.get("error").is_none(), "server error: {line}");
+        let id = v.get("id").and_then(|x| x.as_i64()).expect("id")
+            as u64;
+        let fp = v.get("fingerprint").and_then(|x| x.as_str())
+            .expect("fingerprint");
+        let fp = u64::from_str_radix(fp, 16).expect("hex fingerprint");
+        assert!(got.insert(id, fp).is_none(), "duplicate id {id}");
+    }
+    drop(writer);
+    drop(reader);
+
+    let metrics = srv.stop().expect("server metrics");
+    assert_eq!(metrics.counter("completed"), requests.len() as u64);
+
+    for r in &requests {
+        let solo = single_request_fingerprint(&cfg, r).expect("oracle");
+        assert_eq!(got[&r.id], solo,
+                   "request {} fingerprint diverged over TCP", r.id);
+    }
+    // Same (seed, gen_len) ⟹ same fingerprint, independent of id.
+    assert_eq!(got[&1], got[&3]);
+}
