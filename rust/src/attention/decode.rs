@@ -35,6 +35,85 @@ use crate::tensor::paged::KvBlockView;
 
 use super::AttnParams;
 
+/// Fold one cached K/V block into a single query row's online-softmax
+/// state `(m, l, acc)` — the per-(row, key-tile) update of
+/// `streaming_fwd_tile`, verbatim.  `qrow` is the head's `d`-length
+/// query slice, already bf16-quantized when `mixed`; `pos` is the
+/// row's absolute sequence position.  Shared by [`decode_step`]
+/// (`bq = 1`, one block per step) and
+/// [`super::prefill::prefill_chunk`] (many rows × many blocks), so
+/// the two entry points cannot drift apart bitwise.
+pub(crate) fn fold_kv_block(qrow: &[f32], blk: &KvBlockView<'_>,
+                            h: usize, d: usize, width: usize,
+                            pos: usize, p: &AttnParams, mixed: bool,
+                            m: &mut f32, l: &mut f32, acc: &mut [f32]) {
+    debug_assert!(blk.tokens >= 1);
+    if !p.mask.tile_live(pos, 1, blk.start, blk.tokens) {
+        return; // provably outside the mask, like streaming
+    }
+    // srow = q · K_blockᵀ · scale  (masked → -inf), key order
+    let mut srow = vec![0.0f32; blk.tokens];
+    for (c, sv) in srow.iter_mut().enumerate() {
+        let krow = &blk.k[c * width + h * d..c * width + (h + 1) * d];
+        let mut dot = 0.0;
+        for (x, &y) in qrow.iter().zip(krow) {
+            let y = if mixed { bf16::quantize(y) } else { y };
+            dot += x * y;
+        }
+        *sv = if p.mask.live(pos, blk.start + c) {
+            dot * p.scale
+        } else {
+            f32::NEG_INFINITY
+        };
+    }
+    // online softmax update — streaming_fwd_tile verbatim
+    let m_cur = srow.iter().cloned().fold(*m, f32::max);
+    if m_cur == f32::NEG_INFINITY {
+        return; // row fully masked so far
+    }
+    let alpha = if *m == f32::NEG_INFINITY {
+        0.0
+    } else {
+        (*m - m_cur).exp()
+    };
+    let mut psum = 0.0;
+    for x in acc.iter_mut() {
+        *x *= alpha;
+    }
+    for (c, &sv) in srow.iter().enumerate() {
+        let pv = (sv - m_cur).exp();
+        let pv = if mixed { bf16::quantize(pv) } else { pv };
+        psum += pv;
+        if pv != 0.0 {
+            let vrow =
+                &blk.v[c * width + h * d..c * width + (h + 1) * d];
+            for (a, &vv) in acc.iter_mut().zip(vrow) {
+                let vv = if mixed { bf16::quantize(vv) } else { vv };
+                *a += pv * vv;
+            }
+        }
+    }
+    *l = *l * alpha + psum;
+    *m = m_cur;
+}
+
+/// Turn a finished `(m, l, acc)` row state into output + LSE, with the
+/// fully-masked contract (`l == 0` ⟹ exact zeros, `-inf` sentinel).
+pub(crate) fn finalize_row(m: f32, l: f32, acc: &[f32],
+                           orow: &mut [f32], lse: &mut f32) {
+    if l == 0.0 {
+        for o in orow.iter_mut() {
+            *o = 0.0;
+        }
+        *lse = f32::NEG_INFINITY;
+    } else {
+        for (o, &a) in orow.iter_mut().zip(acc) {
+            *o = a / l;
+        }
+        *lse = m + l.ln();
+    }
+}
+
 /// One decode step for one sequence: the query row `q` (`heads · d`
 /// f32s, the token at absolute position `pos`) attends to the cached
 /// history in `blocks` (which must cover exactly positions
@@ -68,69 +147,11 @@ pub fn decode_step(q: &[f32], blocks: &[KvBlockView<'_>], heads: usize,
             .map(|&x| if mixed { bf16::quantize(x) } else { x })
             .collect();
         for blk in blocks {
-            debug_assert!(blk.tokens >= 1);
-            if !p.mask.tile_live(pos, 1, blk.start, blk.tokens) {
-                continue; // provably outside the mask, like streaming
-            }
-            // srow = q · K_blockᵀ · scale  (masked → -inf), key order
-            let mut srow = vec![0.0f32; blk.tokens];
-            for (c, sv) in srow.iter_mut().enumerate() {
-                let krow = &blk.k[c * width + h * d
-                                  ..c * width + (h + 1) * d];
-                let mut dot = 0.0;
-                for (x, &y) in qrow.iter().zip(krow) {
-                    let y = if mixed { bf16::quantize(y) } else { y };
-                    dot += x * y;
-                }
-                *sv = if p.mask.live(pos, blk.start + c) {
-                    dot * p.scale
-                } else {
-                    f32::NEG_INFINITY
-                };
-            }
-            // online softmax update — streaming_fwd_tile verbatim
-            let m_cur = srow.iter().cloned().fold(m, f32::max);
-            if m_cur == f32::NEG_INFINITY {
-                continue; // row fully masked so far
-            }
-            let alpha = if m == f32::NEG_INFINITY {
-                0.0
-            } else {
-                (m - m_cur).exp()
-            };
-            let mut psum = 0.0;
-            for x in acc.iter_mut() {
-                *x *= alpha;
-            }
-            for (c, &sv) in srow.iter().enumerate() {
-                let pv = (sv - m_cur).exp();
-                let pv = if mixed { bf16::quantize(pv) } else { pv };
-                psum += pv;
-                if pv != 0.0 {
-                    let vrow = &blk.v[c * width + h * d
-                                      ..c * width + (h + 1) * d];
-                    for (a, &vv) in acc.iter_mut().zip(vrow) {
-                        let vv =
-                            if mixed { bf16::quantize(vv) } else { vv };
-                        *a += pv * vv;
-                    }
-                }
-            }
-            l = l * alpha + psum;
-            m = m_cur;
+            fold_kv_block(&qrow, blk, h, d, width, pos, p, mixed,
+                          &mut m, &mut l, &mut acc);
         }
-        let orow = &mut out[h * d..(h + 1) * d];
-        if l == 0.0 {
-            for o in orow.iter_mut() {
-                *o = 0.0;
-            }
-            lse[h] = f32::NEG_INFINITY;
-        } else {
-            for (o, &a) in orow.iter_mut().zip(&acc) {
-                *o = a / l;
-            }
-            lse[h] = m + l.ln();
-        }
+        finalize_row(m, l, &acc, &mut out[h * d..(h + 1) * d],
+                     &mut lse[h]);
     }
 }
 

@@ -51,10 +51,12 @@
 
 pub mod decode;
 pub mod mask;
+pub mod prefill;
 pub mod streaming_bwd;
 
 pub use decode::decode_step;
 pub use mask::{BlockLayout, Mask, MaskSpec, TileCounts};
+pub use prefill::{prefill_chunk, PrefillState};
 pub use streaming_bwd::mha_backward_streaming;
 
 use crate::exec::{self, Backend, ExecOptions, Precision, Task};

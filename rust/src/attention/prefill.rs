@@ -1,0 +1,233 @@
+//! Chunked prefill: prompt ingestion through the streaming tiling.
+//!
+//! Serving a prompt means computing attention for *many* query rows
+//! whose keys arrive incrementally — the prompt is appended to the
+//! paged cache one block-sized chunk per scheduler step so long
+//! prompts cannot starve running decodes.  [`prefill_chunk`] is the
+//! kernel for one such step: it folds the chunk's freshly cached keys
+//! into every prompt row ingested so far, and catches the chunk's own
+//! rows up on the whole cached history, all through the exact
+//! per-(row, key-tile) update `streaming_fwd_tile` and
+//! [`super::decode_step`] share ([`super::decode::fold_kv_block`]).
+//!
+//! **The state machine.**  A [`PrefillState`] carries the per-row
+//! online-softmax statistics `(m, l, acc)` — *not* finished outputs —
+//! across chunks, exactly the FlashAttention-style accumulation the
+//! paper's kernel fusion builds on.  Per chunk:
+//!
+//! 1. every previously ingested row folds the chunk's new key blocks
+//!    (its next key tiles, in ascending order), and
+//! 2. every new row initialises `(m = -inf, l = 0, acc = 0)` and folds
+//!    *all* cached blocks from position 0.
+//!
+//! Each row therefore visits the ascending sequence of `block_tokens`-
+//! aligned key tiles over the full prompt — the same tile walk
+//! `mha_forward_streaming` performs with `block_k = block_tokens` —
+//! regardless of how the prompt was chunked.  [`PrefillState::finalize`]
+//! turns the states into outputs once the last chunk lands.  Two
+//! consequences, pinned by `rust/tests/prefill.rs`:
+//!
+//! * **Bitwise identity with streaming, every mask.**  When
+//!   `block_tokens` divides the prompt length, `finalize` equals
+//!   `mha_forward_streaming` over the whole prompt bitwise — for
+//!   *every* `Mask` variant (a `Dense` row attends to keys cached
+//!   *after* its own chunk: deferring finalisation is what makes that
+//!   possible), in f32 and simd-mixed.  At non-aligned lengths the
+//!   streaming path cannot tile the prompt at all; prefill still
+//!   matches the fused oracle to tolerance, and for causal-type masks
+//!   (`Causal`, `SlidingWindow`) stays bitwise-identical to streaming
+//!   over any block-aligned *continuation* — a partial tail tile is a
+//!   full tile whose extra keys are masked, which the online update
+//!   treats as an exact no-op (see [`super::decode_step`]'s module
+//!   docs).
+//! * **Chunk-schedule invariance.**  The finalized outputs are
+//!   bitwise-independent of the chunk partition (any multiples of
+//!   `block_tokens`, plus the tail), because the partition only moves
+//!   *when* a row starts its walk, never the walk itself.
+//!
+//! **Precision.**  `mixed` quantizes each query row once at ingest and
+//! each cached K/V element at its read — bf16 quantization is
+//! idempotent, so this matches the streaming path's
+//! quantize-at-entry bitwise.
+
+use crate::tensor::bf16;
+use crate::tensor::paged::KvBlockView;
+
+use super::decode::{finalize_row, fold_kv_block};
+use super::AttnParams;
+
+/// Per-row online-softmax statistics for a prompt mid-ingestion.
+///
+/// Owns, per ingested row and head, the running maximum `m`, the
+/// normaliser `l`, the unnormalised accumulator `acc` (`d` values),
+/// and the row's query (quantized at ingest under mixed precision) —
+/// everything needed to keep folding key tiles as later chunks land.
+/// Dropping the state mid-prompt (an eviction) loses nothing but
+/// work: re-ingesting the same prompt rebuilds it bitwise.
+#[derive(Debug, Default)]
+pub struct PrefillState {
+    heads: usize,
+    d: usize,
+    /// Prompt rows ingested so far == keys folded into each of them
+    /// (every `prefill_chunk` call restores this invariant).
+    rows: usize,
+    /// Query rows, `rows · heads · d`, quantized under mixed.
+    q: Vec<f32>,
+    /// Running row maxima, `rows · heads`.
+    m: Vec<f32>,
+    /// Running normalisers, `rows · heads`.
+    l: Vec<f32>,
+    /// Unnormalised accumulators, `rows · heads · d`.
+    acc: Vec<f32>,
+}
+
+impl PrefillState {
+    /// Empty state for a prompt of `heads × d` rows.  `prompt_len` is
+    /// a capacity hint: reserving up front keeps the vectors from
+    /// reallocating while a prefill task runs on the exec pool.
+    pub fn new(heads: usize, d: usize, prompt_len: usize) -> Self {
+        assert!(heads > 0 && d > 0,
+                "prefill needs heads ≥ 1 and d ≥ 1");
+        let width = heads * d;
+        PrefillState {
+            heads,
+            d,
+            rows: 0,
+            q: Vec::with_capacity(prompt_len * width),
+            m: Vec::with_capacity(prompt_len * heads),
+            l: Vec::with_capacity(prompt_len * heads),
+            acc: Vec::with_capacity(prompt_len * width),
+        }
+    }
+
+    /// Prompt rows ingested so far.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Byte spans a `prefill_chunk` task will write, for the exec
+    /// pool's race detector: the state's whole backing vectors
+    /// (capacity, not just the initialised prefix — the chunk appends
+    /// into the reserved tail).
+    pub fn write_spans(&self) -> Vec<(usize, usize)> {
+        let cap = |p: *const f32, c: usize| {
+            (p as usize, p as usize + c * std::mem::size_of::<f32>())
+        };
+        vec![
+            cap(self.q.as_ptr(), self.q.capacity()),
+            cap(self.m.as_ptr(), self.m.capacity()),
+            cap(self.l.as_ptr(), self.l.capacity()),
+            cap(self.acc.as_ptr(), self.acc.capacity()),
+        ]
+    }
+
+    /// Emit the finalized attention rows: `out` is `rows · heads · d`
+    /// (row-major: row, then head, then `d`), `lse` is `rows · heads`.
+    /// A fully-masked row gets exact zeros and the `-inf` sentinel,
+    /// matching the streaming contract.  Call once the whole prompt
+    /// has been ingested (callable mid-prompt too — rows then reflect
+    /// only the keys cached so far, which for causal-type masks is
+    /// already their final value).
+    pub fn finalize(&self, out: &mut [f32], lse: &mut [f32]) {
+        let (heads, d) = (self.heads, self.d);
+        let width = heads * d;
+        assert_eq!(out.len(), self.rows * width,
+                   "out must be rows · heads · d");
+        assert_eq!(lse.len(), self.rows * heads,
+                   "lse must be rows · heads");
+        for r in 0..self.rows {
+            for h in 0..heads {
+                let s = r * heads + h;
+                finalize_row(self.m[s], self.l[s],
+                             &self.acc[s * d..(s + 1) * d],
+                             &mut out[(r * heads + h) * d
+                                      ..(r * heads + h + 1) * d],
+                             &mut lse[s]);
+            }
+        }
+    }
+}
+
+/// Ingest one prompt chunk: the chunk's K/V must already be appended
+/// to the paged cache, so `blocks` covers positions
+/// `0 .. st.rows() + chunk_len` where `chunk_len =
+/// q_chunk.len() / (heads · d)` — the chunk's query rows at absolute
+/// positions `st.rows() ..`.  Every chunk except a prompt's last must
+/// end on a cache-block boundary (the scheduler chunks prompts in
+/// `block_tokens`-sized pieces, so this holds by construction); a
+/// chunk that would extend a partially filled block mid-prompt is a
+/// caller bug and panics, because its rows' key-tile walk would no
+/// longer match the streaming tiling.
+pub fn prefill_chunk(st: &mut PrefillState, q_chunk: &[f32],
+                     blocks: &[KvBlockView<'_>], p: &AttnParams,
+                     mixed: bool) {
+    let (heads, d) = (st.heads, st.d);
+    let width = heads * d;
+    assert!(width > 0, "prefill state must be built via new()");
+    assert!(!q_chunk.is_empty() && q_chunk.len() % width == 0,
+            "chunk must be a nonzero multiple of heads·d ({} given)",
+            q_chunk.len());
+    let chunk_len = q_chunk.len() / width;
+    let cached: usize = blocks.iter().map(|b| b.tokens).sum();
+    assert_eq!(cached, st.rows + chunk_len,
+               "cache holds {cached} tokens but the state has {} rows \
+                + {chunk_len} chunk rows: append the chunk's K/V first",
+               st.rows);
+    if let super::Mask::BlockSparse { layout } = &p.mask {
+        assert!(cached <= layout.n(),
+                "block-sparse layout covers n={} but the prompt \
+                 reaches {cached}", layout.n());
+    }
+    for blk in blocks {
+        assert!(blk.start >= st.rows
+                    || blk.start + blk.tokens <= st.rows,
+                "chunk boundary {} falls inside cache block \
+                 [{}, {}): prior chunks must be multiples of \
+                 block_tokens", st.rows, blk.start,
+                blk.start + blk.tokens);
+    }
+
+    // Phase A: previously ingested rows fold the chunk's new key
+    // tiles — the next steps of their ascending tile walk.
+    let prev_rows = st.rows;
+    for r in 0..prev_rows {
+        for h in 0..heads {
+            let s = r * heads + h;
+            let qrow = &st.q[s * d..(s + 1) * d];
+            let (mut m, mut l) = (st.m[s], st.l[s]);
+            let acc = &mut st.acc[s * d..(s + 1) * d];
+            for blk in blocks.iter().filter(|b| b.start >= prev_rows) {
+                fold_kv_block(qrow, blk, h, d, width, r, p, mixed,
+                              &mut m, &mut l, acc);
+            }
+            st.m[s] = m;
+            st.l[s] = l;
+        }
+    }
+
+    // Phase B: the chunk's own rows start their walk from tile 0 over
+    // everything cached (their own chunk included — the mask decides
+    // what is live; `Dense` rows keep folding in later chunks).
+    for j in 0..chunk_len {
+        let pos = prev_rows + j;
+        for h in 0..heads {
+            let qrow: Vec<f32> = q_chunk[(j * heads + h) * d
+                                         ..(j * heads + h + 1) * d]
+                .iter()
+                .map(|&x| if mixed { bf16::quantize(x) } else { x })
+                .collect();
+            let mut m = f32::NEG_INFINITY;
+            let mut l = 0.0f32;
+            let mut acc = vec![0.0f32; d];
+            for blk in blocks {
+                fold_kv_block(&qrow, blk, h, d, width, pos, p, mixed,
+                              &mut m, &mut l, &mut acc);
+            }
+            st.q.extend_from_slice(&qrow);
+            st.m.push(m);
+            st.l.push(l);
+            st.acc.extend_from_slice(&acc);
+        }
+    }
+    st.rows = cached;
+}

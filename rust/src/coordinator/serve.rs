@@ -33,17 +33,37 @@
 //! restart from step 0; their synthetic rows are a pure function of
 //! `(seed, step)`, so the recomputation is bitwise identical.
 //!
-//! **Workload.**  Requests are synthetic decode streams: step `s` of a
-//! request with seed `σ` derives its query and K/V rows from
-//! `Rng::new(σ).fork(s)`.  This models the memory/scheduling behaviour
-//! of real decoding (the paper's host attention path per token) while
-//! keeping every byte reproducible — the same property the trainer's
-//! synthetic corpus relies on.
+//! **Prefill.**  A request may carry a prompt (`prompt_len` tokens
+//! seeded by `prompt_seed`).  Prompts are ingested in
+//! `block_tokens`-sized chunks — one chunk per scheduler step, so a
+//! long prompt never starves running decodes — through
+//! [`crate::attention::prefill_chunk`], which carries the per-row
+//! streaming statistics ([`crate::attention::PrefillState`]) across
+//! chunks and finalizes bitwise-identically to the full streaming
+//! forward over the prompt.  A mid-prefill eviction releases the
+//! blocks and drops the state; the restart re-ingests the prompt
+//! deterministically (rows are `f(prompt_seed, pos)`), so fingerprints
+//! stay batching-independent.  The liveness bound widens accordingly:
+//! `ceil((max_prompt_len + max_gen_len) / block_tokens) ≤
+//! pool_blocks` guarantees a lone request — prompt *and* generation —
+//! always fits.
+//!
+//! **Workload.**  Requests are synthetic streams: prompt token `t`
+//! derives its rows from `Rng::new(prompt_seed).fork(t)` and decode
+//! step `s` (at absolute position `prompt_len + s`) from
+//! `Rng::new(seed).fork(s)`.  This models the memory/scheduling
+//! behaviour of real serving (the paper's host attention path per
+//! token) while keeping every byte reproducible — the same property
+//! the trainer's synthetic corpus relies on.
 //!
 //! The TCP front-end ([`TcpServer`]) speaks line-delimited JSON and
 //! exists so a load generator (`spark load`) can drive thousands of
 //! concurrent requests through a real socket; it assigns tickets in
-//! inbox drain order, after which everything is the deterministic core.
+//! inbox drain order, after which everything is the deterministic
+//! core.  The inbox is *bounded* (`inbox_cap`): a reader that finds it
+//! full sheds the request with a named `busy` response instead of
+//! growing the queue without bound — every line gets exactly one
+//! answer, never a silent drop.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
@@ -55,7 +75,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 use log::{info, warn};
 
-use crate::attention::{decode_step, AttnParams, MaskSpec};
+use crate::attention::{decode_step, prefill_chunk, AttnParams,
+                       MaskSpec, PrefillState};
 use crate::exec::{self, Backend, ExecOptions, Precision, Task};
 use crate::jsonio;
 use crate::metrics::Registry;
@@ -83,12 +104,23 @@ pub struct ServeConfig {
     pub pool_blocks: usize,
     /// Maximum sequences decoding concurrently.
     pub max_batch: usize,
-    /// Upper bound on a request's `gen_len` (also the sequence length
-    /// the mask is instantiated for).
+    /// Upper bound on a request's `gen_len`.
     pub max_gen_len: usize,
-    /// Attention mask applied to every request.
+    /// Upper bound on a request's `prompt_len` (0 = decode-only
+    /// serving; prompts are then rejected with a named error).
+    pub max_prompt_len: usize,
+    /// `gen_len` assigned to request lines that omit it.  Explicit
+    /// config, not an implicit alias of `max_gen_len` — must sit in
+    /// `1..=max_gen_len`.
+    pub default_gen_len: usize,
+    /// High-water mark of the TCP inbox: requests parsed while this
+    /// many are already queued are shed with a named `busy` response.
+    pub inbox_cap: usize,
+    /// Attention mask applied to every request (instantiated at
+    /// `max_prompt_len + max_gen_len`, the longest sequence a request
+    /// can reach).
     pub mask: MaskSpec,
-    /// Exec backend running the parallel decode tasks.
+    /// Exec backend running the parallel prefill/decode tasks.
     pub exec: ExecOptions,
 }
 
@@ -101,6 +133,9 @@ impl Default for ServeConfig {
             pool_blocks: 64,
             max_batch: 8,
             max_gen_len: 64,
+            max_prompt_len: 64,
+            default_gen_len: 64,
+            inbox_cap: 1024,
             mask: MaskSpec::Causal,
             exec: ExecOptions::default(),
         }
@@ -108,12 +143,21 @@ impl Default for ServeConfig {
 }
 
 impl ServeConfig {
+    /// Longest sequence a single request can occupy: full prompt plus
+    /// full generation.
+    pub fn max_seq_len(&self) -> usize {
+        self.max_prompt_len + self.max_gen_len
+    }
+
     /// Reject configurations that cannot serve: zero dimensions, an
     /// exec combination the backends refuse, a mask that cannot cover
-    /// `max_gen_len`, or — the liveness-critical one — a pool too
-    /// small for a *lone* maximum-length sequence.  Eviction frees
-    /// other sequences' blocks, so the sole-sequence bound is exactly
-    /// what guarantees the oldest request always finishes.
+    /// `max_prompt_len + max_gen_len`, a `default_gen_len` outside
+    /// `1..=max_gen_len`, a zero `inbox_cap` (a front-end that could
+    /// accept nothing), or — the liveness-critical one — a pool too
+    /// small for a *lone* maximum-length sequence (prompt + decode).
+    /// Eviction frees other sequences' blocks, so the sole-sequence
+    /// bound is exactly what guarantees the oldest request always
+    /// finishes.
     pub fn validate(&self) -> Result<()> {
         if self.heads == 0 || self.d == 0 || self.block_tokens == 0
             || self.pool_blocks == 0 || self.max_batch == 0
@@ -125,32 +169,51 @@ impl ServeConfig {
                   self.heads, self.d, self.block_tokens,
                   self.pool_blocks, self.max_batch, self.max_gen_len);
         }
-        let need = self.max_gen_len.div_ceil(self.block_tokens);
+        if self.default_gen_len == 0
+            || self.default_gen_len > self.max_gen_len
+        {
+            bail!("default_gen_len {} out of range 1..={}",
+                  self.default_gen_len, self.max_gen_len);
+        }
+        if self.inbox_cap == 0 {
+            bail!("inbox_cap must be ≥ 1 — a zero-capacity inbox \
+                   sheds every request");
+        }
+        let need = self.max_seq_len().div_ceil(self.block_tokens);
         if need > self.pool_blocks {
             bail!("cache pool too small: a lone max-length sequence \
-                   needs {need} blocks (max_gen_len={} / \
-                   block_tokens={}) but the pool has {} — no eviction \
-                   policy can make such a request finish",
-                  self.max_gen_len, self.block_tokens,
-                  self.pool_blocks);
+                   needs {need} blocks (max_prompt_len={} + \
+                   max_gen_len={} over block_tokens={}) but the pool \
+                   has {} — no eviction policy can make such a \
+                   request finish",
+                  self.max_prompt_len, self.max_gen_len,
+                  self.block_tokens, self.pool_blocks);
         }
         self.exec.validate()?;
-        self.mask.build(self.max_gen_len).context(
-            "serve mask must instantiate at max_gen_len")?;
+        self.mask.build(self.max_seq_len()).context(
+            "serve mask must instantiate at max_prompt_len + \
+             max_gen_len")?;
         Ok(())
     }
 }
 
-/// One inference request: `gen_len` synthetic decode steps whose rows
-/// derive from `seed` (see the module docs).
+/// One inference request: a `prompt_len`-token synthetic prompt
+/// (ingested in chunks, rows derived from `prompt_seed`) followed by
+/// `gen_len` synthetic decode steps whose rows derive from `seed`
+/// (see the module docs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Request {
     /// Caller-chosen id, echoed in the [`Response`].
     pub id: u64,
-    /// Seed of the synthetic token stream.
+    /// Seed of the synthetic decode token stream.
     pub seed: u64,
     /// Decode steps to run (must be `1..=max_gen_len`).
     pub gen_len: usize,
+    /// Prompt tokens to ingest before decoding (must be
+    /// `0..=max_prompt_len`; 0 = pure decode, PR-9 behaviour).
+    pub prompt_len: usize,
+    /// Seed of the synthetic prompt token stream.
+    pub prompt_seed: u64,
 }
 
 /// A completed request.
@@ -160,12 +223,15 @@ pub struct Response {
     pub id: u64,
     /// The arrival ticket the scheduler assigned at submission.
     pub ticket: u64,
-    /// FNV-1a fold of every decode output and LSE bit the request
-    /// produced, in step order — the batching-independent identity of
+    /// FNV-1a fold of every output and LSE bit the request produced —
+    /// the finalized prompt rows first (row-major, outputs then LSEs),
+    /// then each decode step — the batching-independent identity of
     /// the computation.
     pub fingerprint: u64,
     /// Decode steps executed (== `gen_len`).
     pub steps: usize,
+    /// Prompt tokens ingested (== `prompt_len`).
+    pub prompt_len: usize,
     /// Times this request was evicted and restarted.
     pub evictions: u64,
     /// Submission-to-completion wall time, seconds (reporting only —
@@ -191,9 +257,20 @@ struct Active {
     ticket: u64,
     seq: SeqKv,
     step: usize,
+    /// Streaming statistics of a prompt mid-ingestion.  `Some` from
+    /// submission until the last chunk's fingerprint fold (never for
+    /// `prompt_len == 0`); an eviction re-arms it fresh.
+    prefill: Option<PrefillState>,
     fingerprint: u64,
     evictions: u64,
     submitted: Instant,
+}
+
+impl Active {
+    /// Whether this request is still ingesting its prompt.
+    fn in_prefill(&self) -> bool {
+        self.prefill.is_some()
+    }
 }
 
 /// The continuous-batching scheduler (see the module docs).
@@ -220,11 +297,20 @@ impl Scheduler {
     /// Build a scheduler from a validated config.
     pub fn new(cfg: ServeConfig) -> Result<Self> {
         cfg.validate()?;
-        let mask = cfg.mask.build(cfg.max_gen_len)?;
+        let mask = cfg.mask.build(cfg.max_seq_len())?;
         let params = AttnParams::with_mask(cfg.d, mask)?;
         let backend = cfg.exec.build();
         let cache = KvCache::new(cfg.pool_blocks, cfg.block_tokens,
                                  cfg.heads, cfg.d);
+        let mut metrics = Registry::new();
+        // Pre-seed every serving counter at 0 so the metrics JSON
+        // always carries the full key set — the CI smoke job asserts
+        // on `prefill_chunks`/`shed` even in runs that never shed.
+        for c in ["requests", "admitted", "evicted", "evicted_prefill",
+                  "completed", "decode_tokens", "prefill_chunks",
+                  "shed"] {
+            metrics.inc(c, 0);
+        }
         Ok(Scheduler {
             cfg,
             params,
@@ -233,7 +319,7 @@ impl Scheduler {
             queue: VecDeque::new(),
             running: Vec::new(),
             next_ticket: 0,
-            metrics: Registry::new(),
+            metrics,
         })
     }
 
@@ -275,13 +361,22 @@ impl Scheduler {
             bail!("request {} gen_len {} out of range 1..={}",
                   req.id, req.gen_len, self.cfg.max_gen_len);
         }
+        if req.prompt_len > self.cfg.max_prompt_len {
+            bail!("request {} prompt_len {} out of range 0..={}",
+                  req.id, req.prompt_len, self.cfg.max_prompt_len);
+        }
         let ticket = self.next_ticket;
         self.next_ticket += 1;
+        let prefill = (req.prompt_len > 0).then(|| {
+            PrefillState::new(self.cfg.heads, self.cfg.d,
+                              req.prompt_len)
+        });
         self.queue.push_back(Active {
             req,
             ticket,
             seq: SeqKv::new(),
             step: 0,
+            prefill,
             fingerprint: FP_SEED,
             evictions: 0,
             submitted: Instant::now(),
@@ -291,28 +386,42 @@ impl Scheduler {
     }
 
     /// Evict the youngest running request: release its blocks, reset
-    /// its decode state (rows are f(seed, step), so the retry is
-    /// bitwise identical), and requeue it at the *front* — youngest
-    /// running is still older than everything queued, so ascending
-    /// ticket order is preserved.
+    /// its prefill/decode state (rows are pure functions of the seeds
+    /// and positions, so the retry is bitwise identical), and requeue
+    /// it at the *front* — youngest running is still older than
+    /// everything queued, so ascending ticket order is preserved.
+    /// A request caught mid-prompt drops its streaming statistics and
+    /// re-ingests the prompt from token 0 on readmission.
     fn evict_youngest(&mut self) {
         let mut r = self.running.pop()
             .expect("eviction from an empty batch");
+        if r.in_prefill() && !r.seq.is_empty() {
+            self.metrics.inc("evicted_prefill", 1);
+        }
         self.cache.release(&mut r.seq);
         r.step = 0;
         r.fingerprint = FP_SEED;
+        r.prefill = (r.req.prompt_len > 0).then(|| {
+            PrefillState::new(self.cfg.heads, self.cfg.d,
+                              r.req.prompt_len)
+        });
         r.evictions += 1;
         self.metrics.inc("evicted", 1);
         self.queue.push_front(r);
     }
 
     /// One scheduler step: admit → append (evicting under pressure) →
-    /// parallel decode → fold fingerprints → retire.  Returns the
-    /// requests that completed this step, in ascending ticket order.
+    /// parallel prefill/decode → fold fingerprints → retire.  Each
+    /// running request contributes one unit of work per step — a
+    /// `block_tokens`-sized prompt chunk while mid-prefill, one decode
+    /// row afterwards — so prompts and decodes interleave under the
+    /// same arrival-ticket order.  Returns the requests that completed
+    /// this step, in ascending ticket order.
     pub fn step(&mut self) -> Vec<Response> {
         let t_step = Instant::now();
         let (heads, d) = (self.cfg.heads, self.cfg.d);
         let width = heads * d;
+        let bt = self.cfg.block_tokens;
 
         // Admission: queue front → batch back, up to max_batch.  New
         // arrivals only ever join here, at a step boundary.
@@ -322,13 +431,62 @@ impl Scheduler {
             self.running.push(a);
         }
 
-        // Append phase: one K/V row per running sequence, oldest
-        // first.  Cache pressure evicts from the back (youngest), so
-        // index i is only ever removed when it *is* the back.
+        // Append phase, oldest first.  Cache pressure evicts from the
+        // back (youngest), so index i is only ever removed when it
+        // *is* the back.  Prompt chunks append atomically
+        // (`append_rows`), so an eviction retry never sees a
+        // half-landed chunk.
         let mut decoded: Vec<usize> = Vec::new();
         let mut qrows: Vec<Vec<f32>> = Vec::new();
+        // (idx, state, chunk query rows): prefill states leave their
+        // `Active` here so the parallel section gets disjoint &muts.
+        let mut chunks: Vec<(usize, PrefillState, Vec<f32>)> =
+            Vec::new();
         let mut i = 0;
         while i < self.running.len() {
+            if self.running[i].in_prefill() {
+                let req = self.running[i].req;
+                let done = self.running[i].prefill.as_ref()
+                    .expect("in_prefill").rows();
+                let chunk = (req.prompt_len - done).min(bt);
+                let mut qchunk = Vec::with_capacity(chunk * width);
+                let mut kchunk = Vec::with_capacity(chunk * width);
+                let mut vchunk = Vec::with_capacity(chunk * width);
+                for t in 0..chunk {
+                    let (q, k, v) =
+                        synth_rows(req.prompt_seed, done + t, width);
+                    qchunk.extend_from_slice(&q);
+                    kchunk.extend_from_slice(&k);
+                    vchunk.extend_from_slice(&v);
+                }
+                let appended = loop {
+                    match self.cache.append_rows(
+                        &mut self.running[i].seq, &kchunk, &vchunk) {
+                        Ok(()) => break true,
+                        Err(CacheFull) => {
+                            if self.running.len() - 1 > i {
+                                self.evict_youngest();
+                            } else if i > 0 {
+                                self.evict_youngest(); // i itself
+                                break false;
+                            } else {
+                                // A lone sequence always fits by
+                                // ServeConfig::validate's pool bound.
+                                panic!("kv pool exhausted by a lone \
+                                        sequence — validate() bound \
+                                        violated");
+                            }
+                        }
+                    }
+                };
+                if appended {
+                    let st = self.running[i].prefill.take()
+                        .expect("in_prefill");
+                    chunks.push((i, st, qchunk));
+                    i += 1;
+                }
+                continue;
+            }
             let (qrow, krow, vrow) = synth_rows(
                 self.running[i].req.seed, self.running[i].step, width);
             let appended = loop {
@@ -360,24 +518,35 @@ impl Scheduler {
             // now fails (i == len) and the step moves on.
         }
 
-        // Decode phase: every appended row attends to its own cached
-        // prefix, fanned out over the backend pool.  Tasks write
-        // disjoint carved slices (declared for the race detector);
-        // the cache is only read.
+        // Execution phase: prefill chunks fold into their per-request
+        // streaming statistics, decode rows attend to their cached
+        // prefixes — all fanned out over the same backend pool.
+        // Tasks write disjoint data (carved slices for decode, each
+        // request's own state vectors for prefill), declared for the
+        // race detector; the cache is only read.
         let mut outs = vec![0.0f32; decoded.len() * width];
         let mut lses = vec![0.0f32; decoded.len() * heads];
         {
             let mixed = self.backend.precision() == Precision::Mixed;
             let params = &self.params;
             let cache = &self.cache;
+            let running = &self.running;
             let mut orest: &mut [f32] = &mut outs;
             let mut lrest: &mut [f32] = &mut lses;
             let mut tasks: Vec<Task<'_>> = Vec::new();
+            for (idx, st, qchunk) in chunks.iter_mut() {
+                let blocks = cache.blocks(&running[*idx].seq);
+                let qchunk = std::mem::take(qchunk);
+                exec::pool::declare_task_writes(&st.write_spans());
+                tasks.push(Box::new(move || {
+                    prefill_chunk(st, &qchunk, &blocks, params, mixed);
+                }));
+            }
             for (slot, &idx) in decoded.iter().enumerate() {
                 let otile = exec::carve(&mut orest, width);
                 let ltile = exec::carve(&mut lrest, heads);
-                let blocks = cache.blocks(&self.running[idx].seq);
-                let pos = self.running[idx].seq.len() - 1;
+                let blocks = cache.blocks(&running[idx].seq);
+                let pos = running[idx].seq.len() - 1;
                 let qrow = std::mem::take(&mut qrows[slot]);
                 exec::pool::declare_task_writes(&[
                     exec::pool::span(&*otile),
@@ -391,8 +560,33 @@ impl Scheduler {
             self.backend.run_tasks(tasks);
         }
 
-        // Fold + retire.  Fingerprints accumulate every output and
-        // LSE bit in step order; a finished sequence retires
+        // Prefill fold: a completed prompt finalizes its rows into
+        // the fingerprint (outputs then LSEs, row-major) and drops
+        // its state — decoding starts next step.  An unfinished
+        // prompt just puts its statistics back.
+        self.metrics.inc("prefill_chunks", chunks.len() as u64);
+        for (idx, st, _) in chunks {
+            let r = &mut self.running[idx];
+            if st.rows() == r.req.prompt_len {
+                let rows = st.rows();
+                let mut pout = vec![0.0f32; rows * width];
+                let mut plse = vec![0.0f32; rows * heads];
+                st.finalize(&mut pout, &mut plse);
+                let mut fp = r.fingerprint;
+                for x in &pout {
+                    fp = fp_fold(fp, x.to_bits());
+                }
+                for x in &plse {
+                    fp = fp_fold(fp, x.to_bits());
+                }
+                r.fingerprint = fp;
+            } else {
+                r.prefill = Some(st);
+            }
+        }
+
+        // Decode fold + retire.  Fingerprints accumulate every output
+        // and LSE bit in step order; a finished sequence retires
         // immediately, freeing its blocks for next step's admissions.
         let mut completed: Vec<usize> = Vec::new();
         for (slot, &idx) in decoded.iter().enumerate() {
@@ -423,6 +617,7 @@ impl Scheduler {
                 ticket: r.ticket,
                 fingerprint: r.fingerprint,
                 steps: r.step,
+                prompt_len: r.req.prompt_len,
                 evictions: r.evictions,
                 latency_s,
             });
@@ -439,25 +634,24 @@ impl Scheduler {
 
     /// Drive `n` synthetic requests to completion through the batching
     /// scheduler and return their responses in completion order.
-    /// Request `i` gets `id = i`, a seed forked from `base_seed`, and
-    /// a deterministic `gen_len` in `1..=max_gen_len`.  Errors if the
-    /// run fails to drain or leaks cache blocks (free list not fully
-    /// restored) — the guarantees the CI smoke job pins.
+    /// The requests are exactly [`synthetic_requests`]`(config, n,
+    /// base_seed)` — a deterministic mixed prefill/decode workload.
+    /// Errors if the run fails to drain or leaks cache blocks (free
+    /// list not fully restored) — the guarantees the CI smoke job
+    /// pins.
     pub fn run_synthetic(&mut self, n: usize, base_seed: u64)
                          -> Result<Vec<Response>> {
-        let mut seeder = Rng::new(base_seed);
-        for i in 0..n as u64 {
-            let seed = seeder.next_u64();
-            let gen_len =
-                1 + (seed % self.cfg.max_gen_len as u64) as usize;
-            self.submit(Request { id: i, seed, gen_len })?;
+        for req in synthetic_requests(&self.cfg, n, base_seed) {
+            self.submit(req)?;
         }
         let mut responses = Vec::with_capacity(n);
         // Progress bound: the oldest running request advances every
-        // step, so total steps ≤ Σ gen_len + admissions slack; the cap
-        // below turns a scheduler livelock bug into an error instead
-        // of a hang.
-        let cap = 2 * n * self.cfg.max_gen_len + n + 64;
+        // step (a prompt chunk or a decode row), so total steps ≤
+        // Σ work units + admissions slack; the cap below turns a
+        // scheduler livelock bug into an error instead of a hang.
+        let unit = self.cfg.max_gen_len
+            + self.cfg.max_prompt_len.div_ceil(self.cfg.block_tokens);
+        let cap = 2 * n * unit + n + 64;
         let mut steps = 0usize;
         while self.has_work() {
             if steps > cap {
@@ -480,11 +674,42 @@ impl Scheduler {
     }
 }
 
+/// The deterministic synthetic workload: request `i` gets `id = i`, a
+/// seed drawn sequentially from `Rng::new(base_seed)`, a `gen_len` in
+/// `1..=max_gen_len`, and — when the config allows prompts — a
+/// `prompt_len` in `0..=max_prompt_len` with a seed-derived
+/// `prompt_seed`.  Shared by [`Scheduler::run_synthetic`] and the
+/// serve tests, so the oracle side can reconstruct exactly what the
+/// scheduler ran.
+pub fn synthetic_requests(cfg: &ServeConfig, n: usize, base_seed: u64)
+                          -> Vec<Request> {
+    let mut seeder = Rng::new(base_seed);
+    (0..n as u64).map(|i| {
+        let seed = seeder.next_u64();
+        let gen_len = 1 + (seed % cfg.max_gen_len as u64) as usize;
+        let prompt_len = if cfg.max_prompt_len == 0 {
+            0
+        } else {
+            ((seed >> 21) % (cfg.max_prompt_len as u64 + 1)) as usize
+        };
+        Request {
+            id: i,
+            seed,
+            gen_len,
+            prompt_len,
+            // distinct from the decode stream, still pure in `seed`
+            prompt_seed: seed ^ 0x9E37_79B9_7F4A_7C15,
+        }
+    }).collect()
+}
+
 /// The non-batched oracle: run one request alone, no scheduler, and
-/// return the fingerprint its decode outputs fold to.  The serving
-/// contract — pinned by the serve tests and the CI smoke job — is
-/// that [`Scheduler`] produces *bitwise* this fingerprint for the
-/// same request regardless of batching, admission order, or eviction.
+/// return the fingerprint its outputs fold to — the prompt phase
+/// (chunked prefill, finalized rows folded outputs-then-LSEs) followed
+/// by the decode steps.  The serving contract — pinned by the serve
+/// tests and the CI smoke job — is that [`Scheduler`] produces
+/// *bitwise* this fingerprint for the same request regardless of
+/// batching, admission order, or eviction.
 pub fn single_request_fingerprint(cfg: &ServeConfig, req: &Request)
                                   -> Result<u64> {
     cfg.validate()?;
@@ -492,7 +717,11 @@ pub fn single_request_fingerprint(cfg: &ServeConfig, req: &Request)
         bail!("request gen_len {} out of range 1..={}", req.gen_len,
               cfg.max_gen_len);
     }
-    let mask = cfg.mask.build(cfg.max_gen_len)?;
+    if req.prompt_len > cfg.max_prompt_len {
+        bail!("request prompt_len {} out of range 0..={}",
+              req.prompt_len, cfg.max_prompt_len);
+    }
+    let mask = cfg.mask.build(cfg.max_seq_len())?;
     let params = AttnParams::with_mask(cfg.d, mask)?;
     let backend = cfg.exec.build();
     let mixed = backend.precision() == Precision::Mixed;
@@ -501,6 +730,46 @@ pub fn single_request_fingerprint(cfg: &ServeConfig, req: &Request)
                                  cfg.heads, cfg.d);
     let mut seq = SeqKv::new();
     let mut fp = FP_SEED;
+
+    // Prompt phase: the same block-sized chunk schedule the scheduler
+    // uses (one streaming-statistics state across chunks).
+    if req.prompt_len > 0 {
+        let mut st = PrefillState::new(cfg.heads, cfg.d,
+                                       req.prompt_len);
+        while st.rows() < req.prompt_len {
+            let done = st.rows();
+            let chunk =
+                (req.prompt_len - done).min(cfg.block_tokens);
+            let mut qchunk = Vec::with_capacity(chunk * width);
+            let mut kchunk = Vec::with_capacity(chunk * width);
+            let mut vchunk = Vec::with_capacity(chunk * width);
+            for t in 0..chunk {
+                let (q, k, v) =
+                    synth_rows(req.prompt_seed, done + t, width);
+                qchunk.extend_from_slice(&q);
+                kchunk.extend_from_slice(&k);
+                vchunk.extend_from_slice(&v);
+            }
+            cache.append_rows(&mut seq, &kchunk, &vchunk)
+                .map_err(|e| anyhow!(
+                    "single-request cache full at prompt token \
+                     {done}: {e}"))?;
+            prefill_chunk(&mut st, &qchunk, &cache.blocks(&seq),
+                          &params, mixed);
+        }
+        let mut pout = vec![0.0f32; req.prompt_len * width];
+        let mut plse = vec![0.0f32; req.prompt_len * cfg.heads];
+        st.finalize(&mut pout, &mut plse);
+        for x in &pout {
+            fp = fp_fold(fp, x.to_bits());
+        }
+        for x in &plse {
+            fp = fp_fold(fp, x.to_bits());
+        }
+    }
+
+    // Decode phase: one row per step at absolute position
+    // `prompt_len + step`.
     let mut out = vec![0.0f32; width];
     let mut lse = vec![0.0f32; cfg.heads];
     for step in 0..req.gen_len {
@@ -508,8 +777,9 @@ pub fn single_request_fingerprint(cfg: &ServeConfig, req: &Request)
         cache.append(&mut seq, &krow, &vrow).map_err(|e| {
             anyhow!("single-request cache full at step {step}: {e}")
         })?;
-        decode_step(&qrow, &cache.blocks(&seq), cfg.heads, cfg.d, step,
-                    &params, mixed, &mut out, &mut lse);
+        decode_step(&qrow, &cache.blocks(&seq), cfg.heads, cfg.d,
+                    req.prompt_len + step, &params, mixed, &mut out,
+                    &mut lse);
         for x in &out {
             fp = fp_fold(fp, x.to_bits());
         }
@@ -529,15 +799,30 @@ pub fn response_json(r: &Response) -> String {
         ("id", jsonio::num(r.id as f64)),
         ("fingerprint", jsonio::s(format!("{:016x}", r.fingerprint))),
         ("steps", jsonio::num(r.steps as f64)),
+        ("prompt_len", jsonio::num(r.prompt_len as f64)),
         ("evictions", jsonio::num(r.evictions as f64)),
         ("latency_s", jsonio::num(r.latency_s)),
     ]))
 }
 
-/// Parse one request line: `{"id": N, "seed": N, "gen_len": N}`.
-/// `seed` defaults to `id`; `gen_len` defaults to `default_gen`.
-pub fn parse_request_line(line: &str, default_gen: usize)
+/// Longest request line the parser accepts.  A well-formed request is
+/// under 200 bytes; anything longer is garbage (or an attack on the
+/// line buffer) and gets a named rejection, never a partial parse.
+pub const MAX_REQUEST_LINE_BYTES: usize = 4096;
+
+/// Parse one request line: `{"id": N, "seed": N, "gen_len": N,
+/// "prompt_len": N, "prompt_seed": N}`.  `seed` defaults to `id`,
+/// `gen_len` to `cfg.default_gen_len`, `prompt_len` to 0, and
+/// `prompt_seed` to `seed`.  Out-of-range values are named errors,
+/// never clamps: `gen_len` must be ≥ 1 (its upper bound is enforced
+/// at submit), `prompt_len` must sit in `0..=max_prompt_len`, and
+/// oversized lines are rejected outright.
+pub fn parse_request_line(line: &str, cfg: &ServeConfig)
                           -> Result<Request> {
+    if line.len() > MAX_REQUEST_LINE_BYTES {
+        bail!("request line exceeds {MAX_REQUEST_LINE_BYTES} bytes \
+               ({} given)", line.len());
+    }
     let v = jsonio::parse(line.trim())
         .map_err(|e| anyhow!("bad request line: {e}"))?;
     let id = v.get("id").and_then(|x| x.as_i64())
@@ -548,9 +833,24 @@ pub fn parse_request_line(line: &str, default_gen: usize)
     let gen_len = match v.get("gen_len").map(|x| x.as_i64()) {
         Some(Some(g)) if g >= 1 => g as usize,
         Some(_) => bail!("\"gen_len\" must be a positive integer"),
-        None => default_gen,
+        None => cfg.default_gen_len,
     };
-    Ok(Request { id, seed, gen_len })
+    let prompt_len = match v.get("prompt_len").map(|x| x.as_i64()) {
+        Some(Some(p)) if p >= 0 => {
+            let p = p as usize;
+            if p > cfg.max_prompt_len {
+                bail!("\"prompt_len\" {p} out of range 0..={}",
+                      cfg.max_prompt_len);
+            }
+            p
+        }
+        Some(_) => bail!("\"prompt_len\" must be a non-negative \
+                          integer"),
+        None => 0,
+    };
+    let prompt_seed = v.get("prompt_seed").and_then(|x| x.as_i64())
+        .map(|s| s as u64).unwrap_or(seed);
+    Ok(Request { id, seed, gen_len, prompt_len, prompt_seed })
 }
 
 /// A line-JSON TCP front-end running a [`Scheduler`] on its own
@@ -566,22 +866,66 @@ pub struct TcpServer {
     thread: std::thread::JoinHandle<Result<Registry>>,
 }
 
-type Inbox = Arc<Mutex<VecDeque<(Request, Arc<Mutex<TcpStream>>)>>>;
+/// The bounded inbox readers fill and the serve loop drains, plus the
+/// running count of requests shed at the high-water mark (synced into
+/// the scheduler's metrics as the `shed` counter).
+struct InboxState {
+    q: VecDeque<(Request, Arc<Mutex<TcpStream>>)>,
+    shed: u64,
+}
+
+type Inbox = Arc<Mutex<InboxState>>;
+
+/// Shed-or-enqueue for one item against the high-water mark `cap`:
+/// enqueues and returns `true` when below the cap, otherwise bumps
+/// `shed` and returns `false` — the queue *never* grows past `cap`.
+/// Generic so the policy is unit-testable without sockets.
+fn inbox_offer<T>(q: &mut VecDeque<T>, shed: &mut u64, cap: usize,
+                  item: T) -> bool {
+    if q.len() >= cap {
+        *shed += 1;
+        return false;
+    }
+    q.push_back(item);
+    debug_assert!(q.len() <= cap);
+    true
+}
 
 /// Reader thread: one per connection.  Parses request lines into the
-/// inbox until EOF, error, or server stop; malformed lines get an
-/// error response immediately (they never reach the scheduler).
+/// bounded inbox until EOF, error, or server stop; malformed lines
+/// get an error response immediately, and lines that arrive while the
+/// inbox is at `inbox_cap` get a named `busy` response — every line
+/// is answered exactly once, nothing is silently dropped and nothing
+/// reaches the scheduler unaccounted.
 fn reader_loop(stream: TcpStream, writer: Arc<Mutex<TcpStream>>,
-               inbox: Inbox, stop: Arc<AtomicBool>, default_gen: usize) {
+               inbox: Inbox, stop: Arc<AtomicBool>,
+               cfg: Arc<ServeConfig>) {
     let mut br = BufReader::new(stream);
     let mut line = String::new();
     loop {
         line.clear();
         match br.read_line(&mut line) {
             Ok(0) => break, // client closed
-            Ok(_) => match parse_request_line(&line, default_gen) {
-                Ok(req) => inbox.lock().expect("inbox lock")
-                    .push_back((req, Arc::clone(&writer))),
+            Ok(_) => match parse_request_line(&line, &cfg) {
+                Ok(req) => {
+                    let accepted = {
+                        let mut st = inbox.lock().expect("inbox lock");
+                        let st = &mut *st;
+                        inbox_offer(&mut st.q, &mut st.shed,
+                                    cfg.inbox_cap,
+                                    (req, Arc::clone(&writer)))
+                    };
+                    if !accepted {
+                        let msg = jsonio::to_string(&jsonio::obj(vec![
+                            ("id", jsonio::num(req.id as f64)),
+                            ("busy", jsonio::s(format!(
+                                "inbox full (cap {})",
+                                cfg.inbox_cap))),
+                        ]));
+                        let mut w = writer.lock().expect("writer lock");
+                        let _ = writeln!(w, "{msg}");
+                    }
+                }
                 Err(e) => {
                     let msg = jsonio::to_string(&jsonio::obj(vec![
                         ("error", jsonio::s(format!("{e}"))),
@@ -640,9 +984,13 @@ impl TcpServer {
 /// the scheduler, step while work exists, route responses back.
 fn serve_loop(cfg: ServeConfig, listener: TcpListener,
               stop: Arc<AtomicBool>) -> Result<Registry> {
-    let default_gen = cfg.max_gen_len;
+    let shared_cfg = Arc::new(cfg.clone());
     let mut sched = Scheduler::new(cfg)?;
-    let inbox: Inbox = Arc::new(Mutex::new(VecDeque::new()));
+    let inbox: Inbox = Arc::new(Mutex::new(InboxState {
+        q: VecDeque::new(),
+        shed: 0,
+    }));
+    let mut shed_seen = 0u64;
     let mut responders: BTreeMap<u64, Arc<Mutex<TcpStream>>> =
         BTreeMap::new();
     loop {
@@ -655,10 +1003,10 @@ fn serve_loop(cfg: ServeConfig, listener: TcpListener,
                     let writer = Arc::new(Mutex::new(conn.try_clone()?));
                     let inbox = Arc::clone(&inbox);
                     let stop = Arc::clone(&stop);
+                    let cfg = Arc::clone(&shared_cfg);
                     info!("serve: connection from {peer}");
                     std::thread::spawn(move || {
-                        reader_loop(conn, writer, inbox, stop,
-                                    default_gen);
+                        reader_loop(conn, writer, inbox, stop, cfg);
                     });
                 }
                 Err(e) if e.kind()
@@ -667,11 +1015,18 @@ fn serve_loop(cfg: ServeConfig, listener: TcpListener,
             }
         }
         // drain the inbox: tickets are assigned in drain order, and
-        // from here on scheduling is the deterministic core
-        let drained: Vec<(Request, Arc<Mutex<TcpStream>>)> = {
-            let mut q = inbox.lock().expect("inbox lock");
-            q.drain(..).collect()
+        // from here on scheduling is the deterministic core; sync the
+        // readers' shed count into the metrics while holding the lock
+        let (drained, shed_total): (Vec<(Request,
+                                         Arc<Mutex<TcpStream>>)>, u64) =
+        {
+            let mut st = inbox.lock().expect("inbox lock");
+            (st.q.drain(..).collect(), st.shed)
         };
+        if shed_total > shed_seen {
+            sched.metrics.inc("shed", shed_total - shed_seen);
+            shed_seen = shed_total;
+        }
         for (req, writer) in drained {
             match sched.submit(req) {
                 Ok(ticket) => {
@@ -721,20 +1076,43 @@ mod tests {
             pool_blocks: 8,
             max_batch: 4,
             max_gen_len: 12,
+            max_prompt_len: 8,
+            default_gen_len: 12,
+            inbox_cap: 64,
             mask: MaskSpec::Causal,
             exec: ExecOptions::scalar(),
         }
     }
 
+    /// A request with no prompt (the PR-9 shape).
+    fn decode_req(id: u64, seed: u64, gen_len: usize) -> Request {
+        Request { id, seed, gen_len, prompt_len: 0, prompt_seed: 0 }
+    }
+
     #[test]
     fn config_validation_rejects_unfinishable_pools() {
         let mut cfg = tiny_cfg();
-        cfg.pool_blocks = 2; // max_gen_len 12 needs ceil(12/4) = 3
+        // prompt 8 + gen 12 over 4-token blocks needs ceil(20/4) = 5
+        cfg.pool_blocks = 4;
         assert!(cfg.validate().is_err());
-        cfg.pool_blocks = 3;
+        cfg.pool_blocks = 5;
         assert!(cfg.validate().is_ok());
         cfg.max_batch = 0;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn config_validation_names_default_gen_and_inbox_errors() {
+        let mut cfg = tiny_cfg();
+        cfg.default_gen_len = 0;
+        let e = cfg.validate().unwrap_err().to_string();
+        assert!(e.contains("default_gen_len"), "{e}");
+        cfg.default_gen_len = cfg.max_gen_len + 1;
+        assert!(cfg.validate().is_err());
+        cfg.default_gen_len = cfg.max_gen_len;
+        cfg.inbox_cap = 0;
+        let e = cfg.validate().unwrap_err().to_string();
+        assert!(e.contains("inbox_cap"), "{e}");
     }
 
     #[test]
@@ -743,16 +1121,15 @@ mod tests {
         let mut sched = Scheduler::new(cfg.clone()).unwrap();
         let responses = sched.run_synthetic(8, 0xA11CE).unwrap();
         assert_eq!(responses.len(), 8);
+        let reqs = synthetic_requests(&cfg, 8, 0xA11CE);
+        assert!(reqs.iter().any(|r| r.prompt_len > 0),
+                "workload must include prompts");
         for r in &responses {
-            // reconstruct the request run_synthetic generated
-            let mut seeder = Rng::new(0xA11CE);
-            let seed = (0..=r.id).map(|_| seeder.next_u64()).last()
-                .unwrap();
-            let gen_len =
-                1 + (seed % cfg.max_gen_len as u64) as usize;
-            assert_eq!(r.steps, gen_len, "request {}", r.id);
-            let want = single_request_fingerprint(
-                &cfg, &Request { id: r.id, seed, gen_len }).unwrap();
+            let req = &reqs[r.id as usize];
+            assert_eq!(r.steps, req.gen_len, "request {}", r.id);
+            assert_eq!(r.prompt_len, req.prompt_len);
+            let want =
+                single_request_fingerprint(&cfg, req).unwrap();
             assert_eq!(r.fingerprint, want,
                        "request {} batched ≠ single", r.id);
         }
@@ -760,25 +1137,21 @@ mod tests {
 
     #[test]
     fn eviction_under_pressure_is_bitwise_equal_to_retry() {
-        // Pool of 3 blocks, max_gen_len 12 (needs 3): any batch > 1
-        // fights for blocks, forcing mid-step evictions.
+        // Pool of 5 blocks (the lone-sequence minimum for prompt 8 +
+        // gen 12 over 4-token blocks): any batch > 1 fights for
+        // blocks, forcing mid-step — and mid-prefill — evictions.
         let cfg = ServeConfig {
-            pool_blocks: 3,
+            pool_blocks: 5,
             ..tiny_cfg()
         };
         let mut sched = Scheduler::new(cfg.clone()).unwrap();
         let responses = sched.run_synthetic(6, 0xBEEF).unwrap();
         assert!(sched.metrics.counter("evicted") > 0,
                 "pressure config must actually evict");
-        let mut seeder = Rng::new(0xBEEF);
-        let seeds: Vec<u64> = (0..6).map(|_| seeder.next_u64())
-            .collect();
+        let reqs = synthetic_requests(&cfg, 6, 0xBEEF);
         for r in &responses {
-            let seed = seeds[r.id as usize];
-            let gen_len =
-                1 + (seed % cfg.max_gen_len as u64) as usize;
             let want = single_request_fingerprint(
-                &cfg, &Request { id: r.id, seed, gen_len }).unwrap();
+                &cfg, &reqs[r.id as usize]).unwrap();
             assert_eq!(r.fingerprint, want,
                        "request {} (evicted {}×) diverged", r.id,
                        r.evictions);
@@ -787,10 +1160,61 @@ mod tests {
     }
 
     #[test]
+    fn mid_prefill_evict_restarts_prompt_deterministically() {
+        // All-prompt workload against the tightest legal pool: chunked
+        // prompts collide mid-ingestion, so some evictions must land
+        // while a prompt is partially cached — and every fingerprint
+        // still matches the unbatched prompt-aware oracle.
+        let cfg = ServeConfig {
+            pool_blocks: 5,
+            max_gen_len: 12,
+            ..tiny_cfg()
+        };
+        let mut sched = Scheduler::new(cfg.clone()).unwrap();
+        let reqs: Vec<Request> = (0..6).map(|i| Request {
+            id: i,
+            seed: 0xC0FFEE + i,
+            gen_len: 6,
+            prompt_len: 8, // two chunks at block_tokens = 4
+            prompt_seed: 0x5EED + i,
+        }).collect();
+        for r in &reqs {
+            sched.submit(*r).unwrap();
+        }
+        let mut responses = Vec::new();
+        while sched.has_work() {
+            responses.extend(sched.step());
+        }
+        assert_eq!(responses.len(), reqs.len());
+        assert!(sched.metrics.counter("evicted_prefill") > 0,
+                "no eviction landed mid-prefill — the test is not \
+                 exercising prompt restarts");
+        for r in &responses {
+            let want = single_request_fingerprint(
+                &cfg, &reqs[r.id as usize]).unwrap();
+            assert_eq!(r.fingerprint, want,
+                       "request {} (evicted {}×) diverged after \
+                        prompt restart", r.id, r.evictions);
+        }
+        assert_eq!(sched.free_blocks(), sched.capacity_blocks());
+    }
+
+    #[test]
+    fn prompt_phase_changes_the_fingerprint() {
+        let cfg = tiny_cfg();
+        let with = Request { id: 0, seed: 3, gen_len: 4,
+                             prompt_len: 5, prompt_seed: 9 };
+        let without = decode_req(0, 3, 4);
+        let a = single_request_fingerprint(&cfg, &with).unwrap();
+        let b = single_request_fingerprint(&cfg, &without).unwrap();
+        assert_ne!(a, b, "prompt rows must be part of the identity");
+    }
+
+    #[test]
     fn identical_runs_are_identical() {
         let run = || {
             let mut s = Scheduler::new(ServeConfig {
-                pool_blocks: 4,
+                pool_blocks: 5,
                 ..tiny_cfg()
             }).unwrap();
             let rs = s.run_synthetic(10, 7).unwrap();
@@ -801,25 +1225,30 @@ mod tests {
     }
 
     #[test]
-    fn submit_rejects_out_of_range_gen_len() {
+    fn submit_rejects_out_of_range_gen_and_prompt_len() {
         let mut s = Scheduler::new(tiny_cfg()).unwrap();
-        assert!(s.submit(Request { id: 0, seed: 1, gen_len: 0 })
-            .is_err());
-        assert!(s.submit(Request { id: 0, seed: 1, gen_len: 13 })
-            .is_err());
-        assert!(s.submit(Request { id: 0, seed: 1, gen_len: 12 })
+        assert!(s.submit(decode_req(0, 1, 0)).is_err());
+        assert!(s.submit(decode_req(0, 1, 13)).is_err());
+        assert!(s.submit(decode_req(0, 1, 12)).is_ok());
+        // prompt_len above the configured bound is a named error
+        let e = s.submit(Request { id: 1, seed: 1, gen_len: 4,
+                                   prompt_len: 9, prompt_seed: 0 })
+            .unwrap_err().to_string();
+        assert!(e.contains("prompt_len"), "{e}");
+        assert!(s.submit(Request { id: 1, seed: 1, gen_len: 4,
+                                   prompt_len: 8, prompt_seed: 0 })
             .is_ok());
     }
 
     #[test]
     fn continuous_batching_admits_mid_run() {
         let mut s = Scheduler::new(tiny_cfg()).unwrap();
-        s.submit(Request { id: 0, seed: 10, gen_len: 8 }).unwrap();
+        s.submit(decode_req(0, 10, 8)).unwrap();
         // first step admits and decodes request 0 alone
         assert!(s.step().is_empty());
         assert_eq!(s.running(), 1);
         // a late arrival joins the running batch at the next boundary
-        s.submit(Request { id: 1, seed: 11, gen_len: 2 }).unwrap();
+        s.submit(decode_req(1, 11, 2)).unwrap();
         assert!(s.step().is_empty());
         assert_eq!(s.running(), 2);
         // request 1 (2 steps) retires while request 0 keeps going
@@ -834,15 +1263,76 @@ mod tests {
     }
 
     #[test]
+    fn prefill_interleaves_with_decode_chunk_by_chunk() {
+        let mut s = Scheduler::new(tiny_cfg()).unwrap();
+        // 8-token prompt over 4-token blocks: two prefill steps
+        // before the first decode token is produced.
+        s.submit(Request { id: 0, seed: 2, gen_len: 3,
+                           prompt_len: 8, prompt_seed: 7 }).unwrap();
+        s.submit(decode_req(1, 5, 1)).unwrap();
+        // step 1: request 0 ingests chunk 1, request 1 decodes & retires
+        let done = s.step();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 1);
+        assert_eq!(s.metrics.counter("prefill_chunks"), 1);
+        // step 2: chunk 2 completes the prompt (still no decode token)
+        assert!(s.step().is_empty());
+        assert_eq!(s.metrics.counter("prefill_chunks"), 2);
+        // three decode steps retire request 0
+        assert!(s.step().is_empty());
+        assert!(s.step().is_empty());
+        let done = s.step();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 0);
+        assert_eq!(done[0].prompt_len, 8);
+        assert_eq!(s.free_blocks(), s.capacity_blocks());
+    }
+
+    #[test]
     fn request_line_parsing() {
+        let cfg = tiny_cfg();
         let r = parse_request_line(
-            "{\"id\": 3, \"seed\": 9, \"gen_len\": 5}", 64).unwrap();
-        assert_eq!(r, Request { id: 3, seed: 9, gen_len: 5 });
-        let r = parse_request_line("{\"id\": 4}", 64).unwrap();
-        assert_eq!(r, Request { id: 4, seed: 4, gen_len: 64 });
-        assert!(parse_request_line("not json", 64).is_err());
-        assert!(parse_request_line("{\"seed\": 1}", 64).is_err());
-        assert!(parse_request_line("{\"id\":1,\"gen_len\":0}", 64)
+            "{\"id\": 3, \"seed\": 9, \"gen_len\": 5}", &cfg).unwrap();
+        assert_eq!(r, Request { id: 3, seed: 9, gen_len: 5,
+                                prompt_len: 0, prompt_seed: 9 });
+        // omitted fields: seed ← id, gen_len ← default_gen_len,
+        // prompt_seed ← seed
+        let r = parse_request_line("{\"id\": 4}", &cfg).unwrap();
+        assert_eq!(r, Request { id: 4, seed: 4, gen_len: 12,
+                                prompt_len: 0, prompt_seed: 4 });
+        let r = parse_request_line(
+            "{\"id\":1,\"prompt_len\":6,\"prompt_seed\":42}", &cfg)
+            .unwrap();
+        assert_eq!(r.prompt_len, 6);
+        assert_eq!(r.prompt_seed, 42);
+        assert!(parse_request_line("not json", &cfg).is_err());
+        assert!(parse_request_line("{\"seed\": 1}", &cfg).is_err());
+        assert!(parse_request_line("{\"id\":1,\"gen_len\":0}", &cfg)
             .is_err());
+        // prompt_len beyond the configured bound is a named error
+        let e = parse_request_line("{\"id\":1,\"prompt_len\":9}", &cfg)
+            .unwrap_err().to_string();
+        assert!(e.contains("prompt_len"), "{e}");
+        // oversized lines are shed before any field parsing
+        let garbage = format!("{{\"id\": 1, \"pad\": \"{}\"}}",
+                              "x".repeat(MAX_REQUEST_LINE_BYTES));
+        let e = parse_request_line(&garbage, &cfg)
+            .unwrap_err().to_string();
+        assert!(e.contains("line"), "{e}");
+    }
+
+    #[test]
+    fn inbox_offer_enforces_the_cap() {
+        let mut q = std::collections::VecDeque::new();
+        let mut shed = 0u64;
+        assert!(inbox_offer(&mut q, &mut shed, 2, 'a'));
+        assert!(inbox_offer(&mut q, &mut shed, 2, 'b'));
+        assert!(!inbox_offer(&mut q, &mut shed, 2, 'c'));
+        assert_eq!(q.len(), 2);
+        assert_eq!(shed, 1);
+        // draining frees a slot for the next offer
+        q.pop_front();
+        assert!(inbox_offer(&mut q, &mut shed, 2, 'd'));
+        assert_eq!(shed, 1);
     }
 }

@@ -236,8 +236,14 @@ fn serve_cfg_from_flags(p: &Parsed)
         pool_blocks: p.get_usize("blocks")?.unwrap_or(64),
         max_batch: p.get_usize("max-batch")?.unwrap_or(8),
         max_gen_len: p.get_usize("gen-len")?.unwrap_or(64),
+        max_prompt_len: p.get_usize("max-prompt-len")?.unwrap_or(64),
+        inbox_cap: p.get_usize("inbox-cap")?.unwrap_or(1024),
         ..coordinator::serve::ServeConfig::default()
     };
+    // --default-gen-len falls back to the --gen-len ceiling so a plain
+    // `spark serve --gen-len N` keeps its PR-9 meaning.
+    cfg.default_gen_len = p.get_usize("default-gen-len")?
+        .unwrap_or(cfg.max_gen_len);
     if let Some(spec) = mask_from_flags(p)? {
         cfg.mask = spec;
     }
@@ -259,6 +265,11 @@ fn serve_latency_summary(metrics: &sparkattention::metrics::Registry)
     println!("requests: {} completed, {} admitted, {} evicted",
              metrics.counter("completed"), metrics.counter("admitted"),
              metrics.counter("evicted"));
+    println!("prefill: {} chunks ingested ({} mid-prefill evictions); \
+              inbox shed {}",
+             metrics.counter("prefill_chunks"),
+             metrics.counter("evicted_prefill"),
+             metrics.counter("shed"));
     println!("latency: p50 {:.3} ms, p99 {:.3} ms, max {:.3} ms",
              p50 * 1e3, p99 * 1e3, lat.max() * 1e3);
     if !p50.is_finite() || !p99.is_finite() {
@@ -287,6 +298,13 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .flag("max-batch", "max sequences decoding concurrently",
               Some("8"))
         .flag("gen-len", "max decode steps per request", Some("64"))
+        .flag("max-prompt-len", "max prompt tokens per request (0 = \
+                                 decode-only)", Some("64"))
+        .flag("default-gen-len", "gen_len for requests that omit it \
+                                  (defaults to --gen-len)", None)
+        .flag("inbox-cap", "bounded-inbox high-water mark: queued \
+                            requests beyond this are shed with a \
+                            `busy` response", Some("1024"))
         .flag("mask", "attention mask: dense | causal | window[:W] | \
                        block:B[:DENSITY_PCT[:SEED]]", None)
         .flag("window", "sliding-window width (pairs with --mask \
@@ -326,7 +344,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let srv = coordinator::serve::TcpServer::spawn(cfg, port)?;
     println!("spark serve listening on 127.0.0.1:{}", srv.port);
     println!("send line-JSON requests, e.g. \
-              {{\"id\": 1, \"seed\": 7, \"gen_len\": 32}} — or run \
+              {{\"id\": 1, \"seed\": 7, \"gen_len\": 32, \
+              \"prompt_len\": 16}} — or run \
               `spark load --port {}`", srv.port);
     let metrics = srv.join()?;
     if let Some(path) = p.get("metrics-out") {
@@ -347,6 +366,8 @@ fn cmd_load(args: &[String]) -> Result<()> {
         .flag("requests", "total requests to send", Some("1000"))
         .flag("connections", "concurrent connections", Some("8"))
         .flag("gen-len", "decode steps per request", Some("32"))
+        .flag("prompt-len", "prompt tokens per request (0 = pure \
+                             decode)", Some("0"))
         .flag("seed", "workload seed base", Some("1"));
     let p = cmd.parse(args)?;
     let host = p.get("host").unwrap_or("127.0.0.1").to_string();
@@ -354,6 +375,7 @@ fn cmd_load(args: &[String]) -> Result<()> {
     let total = p.get_usize("requests")?.unwrap_or(1000);
     let conns = p.get_usize("connections")?.unwrap_or(8).max(1);
     let gen_len = p.get_usize("gen-len")?.unwrap_or(32);
+    let prompt_len = p.get_usize("prompt-len")?.unwrap_or(0);
     let seed = p.get_usize("seed")?.unwrap_or(1) as u64;
     if total == 0 {
         bail!("--requests must be ≥ 1");
@@ -365,10 +387,11 @@ fn cmd_load(args: &[String]) -> Result<()> {
         // connection c owns request ids c, c+conns, c+2·conns, …
         let ids: Vec<u64> = (0..total).skip(c).step_by(conns)
             .map(|i| i as u64).collect();
-        handles.push(std::thread::spawn(move || -> Result<Vec<f64>> {
+        handles.push(std::thread::spawn(
+            move || -> Result<(Vec<f64>, u64)> {
             use std::io::{BufRead, BufReader, Write};
             if ids.is_empty() {
-                return Ok(Vec::new());
+                return Ok((Vec::new(), 0));
             }
             let stream =
                 std::net::TcpStream::connect((host.as_str(), port))?;
@@ -378,18 +401,22 @@ fn cmd_load(args: &[String]) -> Result<()> {
             for &id in &ids {
                 writeln!(writer,
                          "{{\"id\": {id}, \"seed\": {}, \
-                          \"gen_len\": {gen_len}}}",
-                         seed.wrapping_add(id))?;
+                          \"gen_len\": {gen_len}, \
+                          \"prompt_len\": {prompt_len}, \
+                          \"prompt_seed\": {}}}",
+                         seed.wrapping_add(id),
+                         seed.wrapping_add(id).rotate_left(17))?;
                 sent.insert(id, std::time::Instant::now());
             }
             writer.flush()?;
             let mut latencies = Vec::with_capacity(ids.len());
+            let mut busy = 0u64;
             let mut line = String::new();
-            while latencies.len() < ids.len() {
+            while !sent.is_empty() {
                 line.clear();
                 if reader.read_line(&mut line)? == 0 {
                     bail!("server closed with {} of {} responses",
-                          latencies.len(), ids.len());
+                          ids.len() - sent.len(), ids.len());
                 }
                 let v = jsonio::parse(line.trim()).map_err(
                     |e| anyhow::anyhow!("bad response line: {e}"))?;
@@ -399,25 +426,41 @@ fn cmd_load(args: &[String]) -> Result<()> {
                 let id = v.get("id").and_then(|x| x.as_i64())
                     .ok_or_else(|| anyhow::anyhow!(
                         "response missing id: {line}"))? as u64;
-                let t0 = sent.remove(&id).ok_or_else(
-                    || anyhow::anyhow!("unexpected response id {id}"))?;
-                latencies.push(t0.elapsed().as_secs_f64());
+                sent.remove(&id).map_or_else(
+                    || Err(anyhow::anyhow!("unexpected response id \
+                                            {id}")),
+                    |t0| {
+                        // a shed request is answered, not completed —
+                        // count it, keep it out of the latency series
+                        if v.get("busy").is_some() {
+                            busy += 1;
+                        } else {
+                            latencies.push(t0.elapsed().as_secs_f64());
+                        }
+                        Ok(())
+                    })?;
             }
-            Ok(latencies)
+            Ok((latencies, busy))
         }));
     }
     let mut series = sparkattention::metrics::Series::default();
+    let mut shed = 0u64;
     for h in handles {
-        let lats = h.join()
+        let (lats, busy) = h.join()
             .map_err(|_| anyhow::anyhow!("load connection panicked"))??;
         for l in lats {
             series.record(l);
         }
+        shed += busy;
     }
     let wall = t_run.elapsed().as_secs_f64();
     println!("{} requests over {conns} connections in {:.2} s \
-              ({:.1} req/s)",
+              ({:.1} req/s); {shed} shed by the server's inbox",
              series.count(), wall, series.count() as f64 / wall);
+    if series.count() == 0 {
+        bail!("every request was shed — raise --inbox-cap on the \
+               server or send fewer requests");
+    }
     println!("latency: p50 {:.3} ms, p95 {:.3} ms, p99 {:.3} ms, \
               max {:.3} ms",
              series.p50() * 1e3, series.p95() * 1e3,

@@ -160,6 +160,33 @@ impl KvCache {
         Ok(())
     }
 
+    /// Append a whole chunk of tokens — `rows · width` K values and
+    /// the matching V values, token-major — atomically: either every
+    /// row lands or `Err(CacheFull)` with *nothing* mutated.  The
+    /// block demand is checked up front (unlike repeated [`Self::append`],
+    /// which could run out halfway and leave a partial chunk the
+    /// caller would have to unwind), so a prefill chunk under cache
+    /// pressure is a clean evict-and-retry like any single append.
+    pub fn append_rows(&mut self, seq: &mut SeqKv, k_rows: &[f32],
+                       v_rows: &[f32]) -> Result<(), CacheFull> {
+        assert_eq!(k_rows.len(), v_rows.len(), "k/v chunk mismatch");
+        assert!(!k_rows.is_empty() && k_rows.len() % self.width == 0,
+                "chunk must be a nonzero multiple of width");
+        let rows = k_rows.len() / self.width;
+        let need = (seq.len + rows).div_ceil(self.block_tokens)
+            - seq.blocks.len();
+        if need > self.free.len() {
+            return Err(CacheFull);
+        }
+        for r in 0..rows {
+            let w = self.width;
+            self.append(seq, &k_rows[r * w..(r + 1) * w],
+                        &v_rows[r * w..(r + 1) * w])
+                .expect("block demand prechecked");
+        }
+        Ok(())
+    }
+
     /// Return all of `seq`'s blocks to the free list (reverse table
     /// order, so re-allocating the same sequence reuses the same
     /// blocks in the same order) and reset the handle to empty.
@@ -282,6 +309,43 @@ mod tests {
         // Releasing restores the free list exactly — no leaks.
         c.release(&mut a);
         assert_eq!(c.free_blocks(), c.capacity_blocks());
+    }
+
+    #[test]
+    fn append_rows_is_all_or_nothing() {
+        let width = 2;
+        let mut c = KvCache::new(3, 2, 1, 2);
+        let mut s = SeqKv::new();
+        // 3 tokens in one chunk: spans two blocks, same layout as
+        // three single appends.
+        let chunk: Vec<f32> = (0..3 * width).map(|i| i as f32).collect();
+        c.append_rows(&mut s, &chunk, &chunk).unwrap();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.block_count(), 2);
+        let mut c2 = KvCache::new(3, 2, 1, 2);
+        let mut s2 = SeqKv::new();
+        for t in 0..3 {
+            c2.append(&mut s2, &chunk[t * width..(t + 1) * width],
+                      &chunk[t * width..(t + 1) * width]).unwrap();
+        }
+        let a: Vec<Vec<f32>> =
+            c.blocks(&s).iter().map(|v| v.k.to_vec()).collect();
+        let b: Vec<Vec<f32>> =
+            c2.blocks(&s2).iter().map(|v| v.k.to_vec()).collect();
+        assert_eq!(a, b);
+        // 4 more tokens need 2 fresh blocks but only 1 is left (s has
+        // a 1-slot tail): CacheFull, and *nothing* moved — even though
+        // 3 of the 4 tokens would have fit.
+        let big: Vec<f32> = vec![9.0; 4 * width];
+        assert_eq!(c.append_rows(&mut s, &big, &big), Err(CacheFull));
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.block_count(), 2);
+        assert_eq!(c.free_blocks(), 1);
+        // A chunk that does fit (1 tail slot + 1 fresh block) lands.
+        let ok: Vec<f32> = vec![7.0; 3 * width];
+        c.append_rows(&mut s, &ok, &ok).unwrap();
+        assert_eq!(s.len(), 6);
+        assert_eq!(c.free_blocks(), 0);
     }
 
     #[test]

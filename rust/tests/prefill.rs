@@ -1,0 +1,352 @@
+//! Prefill/decode equivalence suite: chunked prompt ingestion
+//! ([`prefill_chunk`]) must be *bitwise* interchangeable with the
+//! streaming forward it re-tiles, and prefill + decode chains must be
+//! bitwise-identical to one streaming pass over the concatenated
+//! sequence:
+//!
+//! * block-aligned prompts equal `mha_forward_streaming` with
+//!   `block_k = block_tokens` for **every** mask variant, f32 and
+//!   simd-mixed,
+//! * the finalized outputs are invariant to the chunk schedule,
+//! * prefill followed by per-token `decode_step`s equals streaming
+//!   over the whole (prompt + generated) sequence for causal-type
+//!   masks, including prompts that end mid-block,
+//! * ragged prompt lengths the streaming tiling cannot represent
+//!   still match the fused oracle to tolerance.
+
+use sparkattention::attention::{decode_step, mha_forward,
+                                mha_forward_streaming, prefill_chunk,
+                                AttnParams, BlockLayout, Mask,
+                                PrefillState};
+use sparkattention::exec::{Blocked, ExecOptions, Precision, Scalar};
+use sparkattention::tensor::paged::{KvCache, SeqKv};
+use sparkattention::tensor::{Rng, Tensor};
+
+/// Masks exercised by the equivalence tests at sequence length `n`
+/// (`BlockSparse` only when a 4-wide block grid tiles `n` exactly —
+/// its layout is pinned to one sequence length).
+fn mask_roster(n: usize) -> Vec<Mask> {
+    let mut roster = vec![
+        Mask::Dense,
+        Mask::Causal,
+        Mask::SlidingWindow { w: 1 },
+        Mask::SlidingWindow { w: 3 },
+        Mask::SlidingWindow { w: n },
+    ];
+    if n % 4 == 0 {
+        roster.push(Mask::BlockSparse {
+            layout: BlockLayout::random(n / 4, 4, 30, 7).unwrap(),
+        });
+    }
+    roster
+}
+
+/// Masks whose live set for row `i` never reaches past key `i` — the
+/// ones for which a prompt's rows are final the moment the prompt is
+/// cached, so prefill + decode can chain bitwise into streaming.
+fn causal_roster(n: usize) -> Vec<Mask> {
+    vec![
+        Mask::Causal,
+        Mask::SlidingWindow { w: 1 },
+        Mask::SlidingWindow { w: 3 },
+        Mask::SlidingWindow { w: n },
+    ]
+}
+
+/// Flattened `(heads·d)` row `t` of a `(heads, n, d)` tensor.
+fn flat_row(x: &Tensor, t: usize, heads: usize, d: usize, n: usize)
+            -> Vec<f32> {
+    let mut row = vec![0.0f32; heads * d];
+    for h in 0..heads {
+        let base = (h * n + t) * d;
+        row[h * d..(h + 1) * d]
+            .copy_from_slice(&x.data()[base..base + d]);
+    }
+    row
+}
+
+/// Random `(heads, n, d)` Q/K/V triple.
+fn qkv(heads: usize, n: usize, d: usize, seed: u64)
+       -> (Tensor, Tensor, Tensor) {
+    let mut rng = Rng::new(seed);
+    (Tensor::randn(vec![heads, n, d], &mut rng),
+     Tensor::randn(vec![heads, n, d], &mut rng),
+     Tensor::randn(vec![heads, n, d], &mut rng))
+}
+
+/// Ingest the first `sum(chunks)` prompt rows through a fresh paged
+/// cache with the given chunk schedule and return the finalized
+/// row-major `(out, lse)` plus the cache/sequence for chained decoding.
+#[allow(clippy::too_many_arguments)]
+fn run_prefill(q: &Tensor, k: &Tensor, v: &Tensor, p: &AttnParams,
+               heads: usize, d: usize, n: usize, bt: usize,
+               chunks: &[usize], mixed: bool)
+               -> (Vec<f32>, Vec<f32>, KvCache, SeqKv) {
+    let width = heads * d;
+    let prompt: usize = chunks.iter().sum();
+    let mut cache =
+        KvCache::new(n.div_ceil(bt) + 1, bt, heads, d);
+    let mut seq = SeqKv::new();
+    let mut st = PrefillState::new(heads, d, prompt);
+    let mut done = 0usize;
+    for &c in chunks {
+        for t in done..done + c {
+            cache.append(&mut seq, &flat_row(k, t, heads, d, n),
+                         &flat_row(v, t, heads, d, n)).unwrap();
+        }
+        let mut qc = Vec::with_capacity(c * width);
+        for t in done..done + c {
+            qc.extend(flat_row(q, t, heads, d, n));
+        }
+        prefill_chunk(&mut st, &qc, &cache.blocks(&seq), p, mixed);
+        done += c;
+        assert_eq!(st.rows(), done);
+    }
+    let mut out = vec![0.0f32; prompt * width];
+    let mut lse = vec![0.0f32; prompt * heads];
+    st.finalize(&mut out, &mut lse);
+    (out, lse, cache, seq)
+}
+
+/// Assert prefill's row-major output equals rows `0..rows` of a
+/// head-major `(heads, n, d)` streaming result, bitwise.
+fn assert_rows_bitwise(out: &[f32], lse: &[f32],
+                       want: &sparkattention::attention::ForwardResult,
+                       rows: usize, heads: usize, d: usize, n: usize,
+                       ctx: &str) {
+    for r in 0..rows {
+        for h in 0..heads {
+            let grow = &out[(r * heads + h) * d
+                            ..(r * heads + h + 1) * d];
+            let wrow = &want.output.data()
+                [(h * n + r) * d..(h * n + r + 1) * d];
+            for (i, (a, b)) in grow.iter().zip(wrow).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(),
+                           "{ctx}: row {r} head {h} elem {i}: \
+                            {a} vs {b}");
+            }
+            let wl = want.lse.data()[h * n + r];
+            assert_eq!(lse[r * heads + h].to_bits(), wl.to_bits(),
+                       "{ctx}: lse row {r} head {h}");
+        }
+    }
+}
+
+// Block-aligned prompts: chunked prefill is bitwise-identical to one
+// streaming pass over the whole prompt, for every mask variant and
+// every block-multiple chunk schedule — and the f32 streaming result
+// is backend-invariant, so one prefill output pins them all.
+#[test]
+fn aligned_prefill_is_bitwise_streaming_every_mask() {
+    let (heads, d, n, bt) = (2usize, 4usize, 8usize, 4usize);
+    let (q, k, v) = qkv(heads, n, d, 0x9E117);
+    for mask in mask_roster(n) {
+        let p = AttnParams::with_mask(d, mask).unwrap();
+        let want = mha_forward_streaming(&q, &k, &v, &p, bt, bt,
+                                         &Scalar);
+        for chunks in [vec![4, 4], vec![8]] {
+            let (out, lse, _, _) =
+                run_prefill(&q, &k, &v, &p, heads, d, n, bt, &chunks,
+                            false);
+            assert_rows_bitwise(
+                &out, &lse, &want, n, heads, d, n,
+                &format!("mask {} chunks {chunks:?}",
+                         p.mask.label()));
+        }
+        // cross-backend: the multithreaded f32 backends share the
+        // scalar bit pattern, so prefill matches them too
+        for threads in [1usize, 3] {
+            let be = Blocked::new(threads);
+            let wb = mha_forward_streaming(&q, &k, &v, &p, bt, bt,
+                                           &be);
+            let (out, lse, _, _) =
+                run_prefill(&q, &k, &v, &p, heads, d, n, bt,
+                            &[bt, bt], false);
+            assert_rows_bitwise(
+                &out, &lse, &wb, n, heads, d, n,
+                &format!("mask {} blocked×{threads}",
+                         p.mask.label()));
+        }
+    }
+}
+
+// A second, odd shape (3 heads, d = 5, 2-token blocks) walks the same
+// contract so nothing silently specialises to the power-of-two case.
+#[test]
+fn aligned_prefill_is_bitwise_streaming_odd_shape() {
+    let (heads, d, n, bt) = (3usize, 5usize, 6usize, 2usize);
+    let (q, k, v) = qkv(heads, n, d, 0x0DD5);
+    for mask in mask_roster(n) {
+        let p = AttnParams::with_mask(d, mask).unwrap();
+        let want = mha_forward_streaming(&q, &k, &v, &p, bt, bt,
+                                         &Scalar);
+        for chunks in [vec![2, 2, 2], vec![4, 2], vec![6]] {
+            let (out, lse, _, _) =
+                run_prefill(&q, &k, &v, &p, heads, d, n, bt, &chunks,
+                            false);
+            assert_rows_bitwise(
+                &out, &lse, &want, n, heads, d, n,
+                &format!("mask {} chunks {chunks:?}",
+                         p.mask.label()));
+        }
+    }
+}
+
+// Mixed precision: prefill's quantize-at-ingest (queries) +
+// quantize-at-read (cached K/V) equals streaming's quantize-at-entry
+// bitwise, because bf16 quantization is idempotent.
+#[test]
+fn mixed_prefill_is_bitwise_mixed_streaming() {
+    let (heads, d, n, bt) = (2usize, 4usize, 8usize, 4usize);
+    let (q, k, v) = qkv(heads, n, d, 0xB16);
+    for mask in [Mask::Dense, Mask::Causal,
+                 Mask::SlidingWindow { w: 3 }] {
+        let p = AttnParams::with_mask(d, mask).unwrap();
+        let be = ExecOptions::simd(2, Precision::Mixed).build();
+        let want = mha_forward_streaming(&q, &k, &v, &p, bt, bt,
+                                         be.as_ref());
+        let (out, lse, _, _) =
+            run_prefill(&q, &k, &v, &p, heads, d, n, bt, &[4, 4],
+                        true);
+        assert_rows_bitwise(&out, &lse, &want, n, heads, d, n,
+                            &format!("mixed mask {}", p.mask.label()));
+    }
+}
+
+// The chunk partition moves *when* a row starts its tile walk, never
+// the walk itself: every legal schedule (block-multiple chunks plus a
+// ragged tail) finalizes to the same bits, for every mask — including
+// the non-causal ones whose rows keep folding later chunks.
+#[test]
+fn prefill_is_chunk_schedule_invariant() {
+    let (heads, d, bt) = (2usize, 4usize, 4usize);
+    for n in [12usize, 10] {
+        let (q, k, v) = qkv(heads, n, d, 0x5C4ED);
+        let schedules: Vec<Vec<usize>> = if n == 12 {
+            vec![vec![4, 4, 4], vec![8, 4], vec![4, 8], vec![12]]
+        } else {
+            vec![vec![4, 4, 2], vec![8, 2], vec![4, 6], vec![10]]
+        };
+        for mask in mask_roster(n) {
+            let p = AttnParams::with_mask(d, mask).unwrap();
+            let (base_out, base_lse, _, _) =
+                run_prefill(&q, &k, &v, &p, heads, d, n, bt,
+                            &schedules[0], false);
+            for sched in &schedules[1..] {
+                let (out, lse, _, _) =
+                    run_prefill(&q, &k, &v, &p, heads, d, n, bt,
+                                sched, false);
+                assert!(out.iter().zip(&base_out)
+                            .all(|(a, b)| a.to_bits() == b.to_bits())
+                        && lse.iter().zip(&base_lse)
+                            .all(|(a, b)| a.to_bits() == b.to_bits()),
+                        "mask {} n {n}: schedule {sched:?} diverged \
+                         from {:?}", p.mask.label(), schedules[0]);
+            }
+        }
+    }
+}
+
+// Ragged prompt lengths (a partial tail block) are outside the
+// streaming tiling entirely; prefill still matches the fused oracle
+// to tolerance for dense and sparse masks alike.
+#[test]
+fn ragged_prefill_matches_fused_oracle() {
+    let (heads, d, bt) = (2usize, 4usize, 4usize);
+    for n in [5usize, 7, 10] {
+        let (q, k, v) = qkv(heads, n, d, 0x4A66ED);
+        for mask in [Mask::Dense, Mask::Causal,
+                     Mask::SlidingWindow { w: 3 }] {
+            let p = AttnParams::with_mask(d, mask).unwrap();
+            let want = mha_forward(&q, &k, &v, &p, &Scalar);
+            let mut sched = vec![bt; n / bt];
+            if n % bt != 0 {
+                sched.push(n % bt);
+            }
+            let (out, _, _, _) =
+                run_prefill(&q, &k, &v, &p, heads, d, n, bt, &sched,
+                            false);
+            for r in 0..n {
+                for h in 0..heads {
+                    let grow = &out[(r * heads + h) * d
+                                    ..(r * heads + h + 1) * d];
+                    let wrow = &want.output.data()
+                        [(h * n + r) * d..(h * n + r + 1) * d];
+                    for (a, b) in grow.iter().zip(wrow) {
+                        assert!((a - b).abs() < 1e-5,
+                                "mask {} n {n} row {r} head {h}: \
+                                 {a} vs {b}", p.mask.label());
+                    }
+                }
+            }
+        }
+    }
+}
+
+// The serving contract end to end: chunked prefill of the prompt, then
+// one `decode_step` per generated token, is bitwise-identical to a
+// single streaming pass over the concatenated sequence — for every
+// causal-type mask, prompts both block-aligned and mid-block, and
+// every chunk schedule.  (A prompt row only sees keys `≤` its own
+// position, so its finalized value cannot change once cached; masked
+// tail keys are exact no-ops in the online update.)
+#[test]
+fn prefill_then_decode_chain_is_bitwise_streaming() {
+    let (heads, d, n, bt) = (2usize, 4usize, 12usize, 4usize);
+    let width = heads * d;
+    let (q, k, v) = qkv(heads, n, d, 0xC4A1);
+    for mask in causal_roster(n) {
+        let p = AttnParams::with_mask(d, mask).unwrap();
+        let want = mha_forward_streaming(&q, &k, &v, &p, bt, bt,
+                                         &Scalar);
+        // prompt 8 is block-aligned; 6 ends mid-block
+        for (prompt, chunks) in
+            [(8usize, vec![4usize, 4]), (6, vec![4, 2])]
+        {
+            let (out, lse, mut cache, mut seq) =
+                run_prefill(&q, &k, &v, &p, heads, d, n, bt, &chunks,
+                            false);
+            let ctx = format!("mask {} prompt {prompt}",
+                              p.mask.label());
+            assert_rows_bitwise(&out, &lse, &want, prompt, heads, d,
+                                n, &ctx);
+            // decode the remaining tokens one cache append at a time
+            for pos in prompt..n {
+                cache.append(&mut seq, &flat_row(&k, pos, heads, d, n),
+                             &flat_row(&v, pos, heads, d, n)).unwrap();
+                let mut dout = vec![0.0f32; width];
+                let mut dlse = vec![0.0f32; heads];
+                decode_step(&flat_row(&q, pos, heads, d, n),
+                            &cache.blocks(&seq), heads, d, pos, &p,
+                            false, &mut dout, &mut dlse);
+                for h in 0..heads {
+                    let wrow = &want.output.data()
+                        [(h * n + pos) * d..(h * n + pos + 1) * d];
+                    for (a, b) in dout[h * d..(h + 1) * d].iter()
+                        .zip(wrow)
+                    {
+                        assert_eq!(a.to_bits(), b.to_bits(),
+                                   "{ctx}: decode pos {pos} head {h}");
+                    }
+                    assert_eq!(dlse[h].to_bits(),
+                               want.lse.data()[h * n + pos].to_bits(),
+                               "{ctx}: decode lse pos {pos} head {h}");
+                }
+            }
+        }
+    }
+}
+
+// Fully-masked prompt rows (window 0) finalize to exact zeros with
+// the -inf LSE sentinel, matching the streaming contract.
+#[test]
+fn fully_masked_prefill_rows_are_zero_with_sentinel() {
+    let (heads, d, n, bt) = (2usize, 3usize, 4usize, 2usize);
+    let (q, k, v) = qkv(heads, n, d, 0x0);
+    let p = AttnParams::with_mask(
+        d, Mask::SlidingWindow { w: 0 }).unwrap();
+    let (out, lse, _, _) =
+        run_prefill(&q, &k, &v, &p, heads, d, n, bt, &[2, 2], false);
+    assert!(out.iter().all(|x| x.to_bits() == 0));
+    assert!(lse.iter().all(|x| *x == f32::NEG_INFINITY));
+}

@@ -1,31 +1,36 @@
 //! Integration: the `spark serve` continuous-batching layer.
 //!
-//! Pins the three serving guarantees end to end, at soak scale:
+//! Pins the serving guarantees end to end, at soak scale:
 //!
-//! 1. **Batching-independent identity** — every request's decode
-//!    fingerprint equals the non-batched single-request oracle,
-//!    bitwise, under admission reordering and mid-step eviction.
+//! 1. **Batching-independent identity** — every request's fingerprint
+//!    (prompt phase + decode steps) equals the non-batched
+//!    single-request oracle, bitwise, under admission reordering,
+//!    mid-step eviction, and mid-*prefill* eviction.
 //! 2. **Resource hygiene** — the paged KV-cache free list is fully
 //!    restored after the drain (zero block leaks at 1000 requests).
 //! 3. **Transport transparency** — the TCP front-end returns the same
 //!    fingerprints over a real socket that the scheduler computes
 //!    in-process.
+//! 4. **Backpressure** — the bounded inbox never grows past its cap;
+//!    overflow requests get a named `busy` response, nothing is
+//!    silently dropped, and the server's `shed` counter equals the
+//!    busy responses the client saw.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 
 use sparkattention::coordinator::serve::{
-    single_request_fingerprint, Scheduler, ServeConfig,
+    single_request_fingerprint, synthetic_requests, Scheduler,
+    ServeConfig,
 };
 use sparkattention::coordinator::{Request, TcpServer};
 use sparkattention::exec::ExecOptions;
 use sparkattention::jsonio;
-use sparkattention::tensor::Rng;
 
 /// A deliberately starved pool: `max_batch` full-length sequences need
-/// `4 · 4 = 16` blocks against a pool of 6, so the soak run must evict
-/// (while a lone sequence still fits: `16 / 4 = 4 ≤ 6`).
+/// `4 · ceil((8 + 16)/4) = 24` blocks against a pool of 6, so the soak
+/// run must evict (while a lone sequence still fits: `24 / 4 = 6 ≤ 6`).
 fn pressure_cfg() -> ServeConfig {
     ServeConfig {
         heads: 2,
@@ -34,23 +39,11 @@ fn pressure_cfg() -> ServeConfig {
         pool_blocks: 6,
         max_batch: 4,
         max_gen_len: 16,
+        max_prompt_len: 8,
+        default_gen_len: 16,
         exec: ExecOptions::scalar(),
         ..ServeConfig::default()
     }
-}
-
-/// Reconstruct the `(seed, gen_len)` that `run_synthetic` assigns to
-/// request `i` — seeds are drawn sequentially from `Rng::new(base)`.
-fn synthetic_requests(n: usize, base_seed: u64, max_gen: usize)
-                      -> Vec<Request> {
-    let mut seeder = Rng::new(base_seed);
-    (0..n as u64)
-        .map(|i| {
-            let seed = seeder.next_u64();
-            let gen_len = 1 + (seed % max_gen as u64) as usize;
-            Request { id: i, seed, gen_len }
-        })
-        .collect()
 }
 
 #[test]
@@ -63,10 +56,16 @@ fn soak_1000_requests_under_pressure() {
     assert_eq!(responses.len(), n);
 
     // The starved pool forced real continuous-batching behaviour:
-    // evictions happened, and every admission is visible in metrics.
+    // evictions happened — some of them mid-prefill — prompts were
+    // actually ingested in chunks, and every admission is visible.
     assert!(sched.metrics.counter("evicted") > 0,
             "pressure config never evicted — the soak is not \
              exercising the eviction path");
+    assert!(sched.metrics.counter("evicted_prefill") > 0,
+            "no eviction landed mid-prefill — the soak is not \
+             exercising prompt restarts");
+    assert!(sched.metrics.counter("prefill_chunks") > 0,
+            "the mixed workload ingested no prompt chunks");
     assert!(sched.metrics.counter("admitted") >= n as u64);
     assert_eq!(sched.metrics.counter("completed"), n as u64);
 
@@ -81,9 +80,12 @@ fn soak_1000_requests_under_pressure() {
             lat.p50(), lat.p99());
 
     // Every response — batched, reordered, possibly evicted and
-    // retried — carries the bitwise fingerprint of the same request
-    // run alone through the non-batched oracle.
-    let expected = synthetic_requests(n, base_seed, cfg.max_gen_len);
+    // retried mid-prompt — carries the bitwise fingerprint of the
+    // same request run alone through the prompt-aware oracle.
+    let expected = synthetic_requests(&cfg, n, base_seed);
+    assert!(expected.iter().any(|r| r.prompt_len > 0)
+                && expected.iter().any(|r| r.prompt_len == 0),
+            "soak workload must mix prefill and pure-decode requests");
     let by_id: BTreeMap<u64, _> =
         responses.iter().map(|r| (r.id, r)).collect();
     assert_eq!(by_id.len(), n, "duplicate response ids");
@@ -92,6 +94,8 @@ fn soak_1000_requests_under_pressure() {
         assert_eq!(r.steps, req.gen_len,
                    "request {} ran {} of {} steps", req.id, r.steps,
                    req.gen_len);
+        assert_eq!(r.prompt_len, req.prompt_len,
+                   "request {} prompt length mismatch", req.id);
         let solo = single_request_fingerprint(&cfg, req)
             .expect("oracle fingerprint");
         assert_eq!(r.fingerprint, solo,
@@ -125,14 +129,23 @@ fn tcp_round_trip_matches_single_request_oracle() {
         pool_blocks: 8,
         max_batch: 4,
         max_gen_len: 12,
+        max_prompt_len: 8,
+        default_gen_len: 12,
         exec: ExecOptions::scalar(),
         ..ServeConfig::default()
     };
     let srv = TcpServer::spawn(cfg.clone(), 0).expect("spawn server");
     let requests = [
-        Request { id: 1, seed: 42, gen_len: 6 },
-        Request { id: 2, seed: 7, gen_len: 12 },
-        Request { id: 3, seed: 42, gen_len: 6 },
+        Request { id: 1, seed: 42, gen_len: 6, prompt_len: 0,
+                  prompt_seed: 0 },
+        Request { id: 2, seed: 7, gen_len: 12, prompt_len: 0,
+                  prompt_seed: 0 },
+        Request { id: 3, seed: 42, gen_len: 6, prompt_len: 0,
+                  prompt_seed: 0 },
+        // a prompted request rides the same socket: 6 tokens is two
+        // chunks at block_tokens = 4, the second mid-block
+        Request { id: 4, seed: 11, gen_len: 5, prompt_len: 6,
+                  prompt_seed: 99 },
     ];
 
     let stream = TcpStream::connect(("127.0.0.1", srv.port))
@@ -141,13 +154,14 @@ fn tcp_round_trip_matches_single_request_oracle() {
     let mut reader = BufReader::new(stream);
     for r in &requests {
         writeln!(writer,
-                 "{{\"id\": {}, \"seed\": {}, \"gen_len\": {}}}",
-                 r.id, r.seed, r.gen_len)
+                 "{{\"id\": {}, \"seed\": {}, \"gen_len\": {}, \
+                  \"prompt_len\": {}, \"prompt_seed\": {}}}",
+                 r.id, r.seed, r.gen_len, r.prompt_len, r.prompt_seed)
             .expect("send request");
     }
     writer.flush().expect("flush");
 
-    let mut got: BTreeMap<u64, u64> = BTreeMap::new();
+    let mut got: BTreeMap<u64, (u64, usize)> = BTreeMap::new();
     let mut line = String::new();
     while got.len() < requests.len() {
         line.clear();
@@ -156,24 +170,118 @@ fn tcp_round_trip_matches_single_request_oracle() {
                 got.len(), requests.len());
         let v = jsonio::parse(line.trim()).expect("response json");
         assert!(v.get("error").is_none(), "server error: {line}");
+        assert!(v.get("busy").is_none(),
+                "unexpected shed under the default inbox cap: {line}");
         let id = v.get("id").and_then(|x| x.as_i64()).expect("id")
             as u64;
         let fp = v.get("fingerprint").and_then(|x| x.as_str())
             .expect("fingerprint");
         let fp = u64::from_str_radix(fp, 16).expect("hex fingerprint");
-        assert!(got.insert(id, fp).is_none(), "duplicate id {id}");
+        let plen = v.get("prompt_len").and_then(|x| x.as_i64())
+            .expect("prompt_len") as usize;
+        assert!(got.insert(id, (fp, plen)).is_none(),
+                "duplicate id {id}");
     }
     drop(writer);
     drop(reader);
 
     let metrics = srv.stop().expect("server metrics");
     assert_eq!(metrics.counter("completed"), requests.len() as u64);
+    assert!(metrics.counter("prefill_chunks") >= 2,
+            "the 6-token prompt must have been ingested in chunks");
+    assert_eq!(metrics.counter("shed"), 0);
 
     for r in &requests {
         let solo = single_request_fingerprint(&cfg, r).expect("oracle");
-        assert_eq!(got[&r.id], solo,
+        let (fp, plen) = got[&r.id];
+        assert_eq!(fp, solo,
                    "request {} fingerprint diverged over TCP", r.id);
+        assert_eq!(plen, r.prompt_len,
+                   "request {} prompt_len not echoed", r.id);
     }
-    // Same (seed, gen_len) ⟹ same fingerprint, independent of id.
+    // Same (seed, gen_len, prompt) ⟹ same fingerprint, id-independent.
     assert_eq!(got[&1], got[&3]);
+}
+
+#[test]
+fn bounded_inbox_sheds_with_busy_and_drops_nothing() {
+    // cap 1 against a pipelined burst: the client writes every
+    // request before reading a byte, so the burst lands while the
+    // serve loop is parked (or mid-step) and the inbox must shed.
+    let cfg = ServeConfig {
+        heads: 4,
+        d: 16,
+        block_tokens: 4,
+        pool_blocks: 16,
+        max_batch: 2,
+        max_gen_len: 16,
+        max_prompt_len: 8,
+        default_gen_len: 16,
+        inbox_cap: 1,
+        exec: ExecOptions::scalar(),
+        ..ServeConfig::default()
+    };
+    let total: u64 = 200;
+    let srv = TcpServer::spawn(cfg.clone(), 0).expect("spawn server");
+    let stream = TcpStream::connect(("127.0.0.1", srv.port))
+        .expect("connect");
+    let mut writer = stream.try_clone().expect("clone stream");
+    let mut reader = BufReader::new(stream);
+    for id in 0..total {
+        writeln!(writer,
+                 "{{\"id\": {id}, \"seed\": {id}, \"gen_len\": 16, \
+                  \"prompt_len\": 4}}")
+            .expect("send request");
+    }
+    writer.flush().expect("flush");
+
+    // every request is answered exactly once: a fingerprint or a
+    // named busy line — never silence, never an error
+    let mut completed: BTreeMap<u64, u64> = BTreeMap::new();
+    let mut busy: Vec<u64> = Vec::new();
+    let mut line = String::new();
+    while (completed.len() + busy.len()) < total as usize {
+        line.clear();
+        assert!(reader.read_line(&mut line).expect("read response") > 0,
+                "server closed with {} fingerprints + {} busy of {}",
+                completed.len(), busy.len(), total);
+        let v = jsonio::parse(line.trim()).expect("response json");
+        assert!(v.get("error").is_none(), "server error: {line}");
+        let id = v.get("id").and_then(|x| x.as_i64()).expect("id")
+            as u64;
+        if let Some(b) = v.get("busy") {
+            let b = b.as_str().expect("busy is a string");
+            assert!(b.contains("inbox full (cap 1)"),
+                    "busy response must name the cap: {line}");
+            busy.push(id);
+        } else {
+            let fp = v.get("fingerprint").and_then(|x| x.as_str())
+                .expect("fingerprint");
+            let fp = u64::from_str_radix(fp, 16).expect("hex");
+            assert!(completed.insert(id, fp).is_none(),
+                    "duplicate completion for id {id}");
+        }
+    }
+    drop(writer);
+    drop(reader);
+    let metrics = srv.stop().expect("server metrics");
+
+    assert_eq!(completed.len() + busy.len(), total as usize);
+    assert!(!busy.is_empty(),
+            "a 200-request pipelined burst against cap 1 must shed");
+    assert!(!completed.is_empty(),
+            "the first offer against an empty inbox must be accepted");
+    assert_eq!(metrics.counter("shed"), busy.len() as u64,
+               "server shed counter must equal the busy lines sent");
+    assert_eq!(metrics.counter("completed"), completed.len() as u64);
+
+    // completions are still bitwise the single-request oracle
+    for (&id, &fp) in &completed {
+        let req = Request { id, seed: id, gen_len: 16, prompt_len: 4,
+                            prompt_seed: id };
+        let solo = single_request_fingerprint(&cfg, &req)
+            .expect("oracle");
+        assert_eq!(fp, solo,
+                   "request {id} fingerprint diverged under shedding");
+    }
 }
